@@ -1,0 +1,81 @@
+//! Feature-server scenario: McKernel as the paper's "drop-in generator
+//! of features … generated on-the-fly" (§1) behind a dynamic-batching
+//! coordinator — concurrent clients, coalesced batches, latency and
+//! throughput reporting.
+//!
+//!     cargo run --release --example feature_server -- \
+//!         [--clients 8] [--requests 2000] [--max-batch 32] [--max-wait-us 200]
+
+use mckernel::cli::Args;
+use mckernel::coordinator::FeatureServer;
+use mckernel::mckernel::McKernelFactory;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let clients: usize = args.parse_or("clients", 8usize)?;
+    let requests: usize = args.parse_or("requests", 2000usize)?;
+    let max_batch: usize = args.parse_or("max-batch", 32usize)?;
+    let wait_us: u64 = args.parse_or("max-wait-us", 200u64)?;
+    let expansions: usize = args.parse_or("expansions", 2usize)?;
+
+    let map = Arc::new(
+        McKernelFactory::new(784)
+            .expansions(expansions)
+            .sigma(1.0)
+            .rbf_matern(40)
+            .seed(mckernel::PAPER_SEED)
+            .build(),
+    );
+    println!(
+        "feature server: 784 → {} features (E={expansions}), max batch {max_batch}, window {wait_us}µs, {clients} clients × {} requests",
+        map.feature_dim(),
+        requests / clients
+    );
+    let server = FeatureServer::start(Arc::clone(&map), max_batch, Duration::from_micros(wait_us));
+
+    let per_client = requests / clients;
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let client = server.client();
+            std::thread::spawn(move || {
+                let mut latencies = Vec::with_capacity(per_client);
+                let mut rng = mckernel::hash::HashRng::new(c as u64, 0x5e);
+                for _ in 0..per_client {
+                    let x: Vec<f32> = (0..784).map(|_| rng.next_f32()).collect();
+                    let t = Instant::now();
+                    client.transform(x).expect("server alive");
+                    latencies.push(t.elapsed().as_secs_f64());
+                }
+                latencies
+            })
+        })
+        .collect();
+    let mut all: Vec<f64> = Vec::new();
+    for h in handles {
+        all.extend(h.join().unwrap());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    all.sort_by(f64::total_cmp);
+    let pct = |p: f64| all[((all.len() - 1) as f64 * p) as usize] * 1e3;
+    println!(
+        "\nserved {} requests in {wall:.2}s  →  {:.0} req/s",
+        all.len(),
+        all.len() as f64 / wall
+    );
+    println!(
+        "latency p50 {:.3} ms   p95 {:.3} ms   p99 {:.3} ms",
+        pct(0.50),
+        pct(0.95),
+        pct(0.99)
+    );
+    println!(
+        "batching: {} batches, mean occupancy {:.1} rows/batch",
+        server.stats().batches.load(std::sync::atomic::Ordering::Relaxed),
+        server.stats().mean_batch_size()
+    );
+    server.shutdown();
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Table 1 / Figure 2 driver: McKernel FWHT vs the Spiral-like
+//! recursive baseline across n = 2^10 … 2^20, printed in the paper's
+//! row format plus the paper's reference numbers for comparison.
+//!
+//!     cargo run --release --example fwht_comparison [-- --quick]
+
+use mckernel::benchkit::{bench, BenchConfig};
+use mckernel::fwht::{optimized, recursive};
+use mckernel::hash::HashRng;
+
+/// Paper Table 1 (intel i5-4200 @ 1.6GHz): (n, mckernel ms, spiral ms).
+const PAPER: [(usize, f64, f64); 11] = [
+    (1024, 0.0, 0.0333),
+    (2048, 0.0333, 0.0667),
+    (4096, 0.1, 0.167),
+    (8192, 0.0667, 0.2),
+    (16384, 0.2, 0.467),
+    (32768, 0.2, 0.9),
+    (65536, 0.7, 1.667),
+    (131072, 1.3, 3.5),
+    (262144, 3.6, 7.667),
+    (524288, 7.86, 15.9667),
+    (1048576, 15.9667, 35.7),
+];
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cfg = if quick { BenchConfig::quick() } else { BenchConfig::default() };
+    println!("Table 1 — Numeric Comparison of Fast Walsh Hadamard");
+    println!("(paper numbers from an i5-4200 @1.6GHz; ours from this machine — compare the RATIO)\n");
+    println!(
+        "{:>9}  {:>12} {:>12} {:>8}   {:>12} {:>12} {:>8}",
+        "|H_n|", "ours mck(ms)", "ours spi(ms)", "ratio", "paper mck", "paper spi", "ratio"
+    );
+    let mut geo_ours = 1.0f64;
+    let mut geo_paper = 1.0f64;
+    let mut count = 0;
+    for (n, p_mck, p_spi) in PAPER {
+        let mut r = HashRng::new(n as u64, 0xF0);
+        let mut data: Vec<f32> = (0..n).map(|_| r.next_f32() - 0.5).collect();
+        let mck = bench("mck", &cfg, |_| optimized::fwht(&mut data));
+        let plan = recursive::Plan::build(n);
+        let mut data2: Vec<f32> = (0..n).map(|_| r.next_f32() - 0.5).collect();
+        let spi = bench("spi", &cfg, |_| plan.execute(&mut data2));
+        let ratio = spi.stats.median / mck.stats.median;
+        let paper_ratio = if p_mck > 0.0 { p_spi / p_mck } else { f64::NAN };
+        println!(
+            "{:>9}  {:>12.4} {:>12.4} {:>7.2}x   {:>12.4} {:>12.4} {:>7}",
+            n,
+            mck.median_ms(),
+            spi.median_ms(),
+            ratio,
+            p_mck,
+            p_spi,
+            if paper_ratio.is_nan() { "—".to_string() } else { format!("{paper_ratio:.2}x") },
+        );
+        geo_ours *= ratio;
+        if !paper_ratio.is_nan() {
+            geo_paper *= paper_ratio;
+            count += 1;
+        }
+    }
+    println!(
+        "\ngeometric-mean speedup over the range: ours {:.2}x, paper {:.2}x",
+        geo_ours.powf(1.0 / PAPER.len() as f64),
+        geo_paper.powf(1.0 / count as f64)
+    );
+    println!("(Figure 2 is these two series; CSV via `cargo bench --bench bench_fwht`)");
+}

@@ -1,0 +1,63 @@
+//! Quickstart: build a feature map, verify the kernel approximation,
+//! train a small classifier — the 60-second tour of the public API.
+//!
+//!     cargo run --release --example quickstart
+
+use mckernel::data::{Dataset, SyntheticSpec};
+use mckernel::mckernel::{Kernel, McKernelFactory};
+use mckernel::optim::SgdConfig;
+use mckernel::train::{Featurizer, TrainConfig, Trainer};
+use std::sync::Arc;
+
+fn main() {
+    // 1. A feature map: 64-dim inputs, 8 expansions, RBF σ=2.
+    //    Everything is derived from the seed — nothing random is stored.
+    let map = McKernelFactory::new(64)
+        .expansions(8)
+        .sigma(2.0)
+        .rbf()
+        .seed(1398239763)
+        .build();
+    println!(
+        "feature map: {} → {} features ({} expansions of n={})",
+        map.input_dim(),
+        map.feature_dim(),
+        map.expansions(),
+        map.padded_dim()
+    );
+
+    // 2. The kernel approximation (paper Eq. 6-9): inner products of
+    //    normalized features converge to the exact RBF kernel.
+    let mut rng = mckernel::hash::HashRng::new(7, 7);
+    let x: Vec<f32> = (0..64).map(|_| rng.next_f32() - 0.5).collect();
+    let y: Vec<f32> = (0..64).map(|_| rng.next_f32() - 0.5).collect();
+    let fx = map.transform_normalized(&x);
+    let fy = map.transform_normalized(&y);
+    let approx: f64 = fx.iter().zip(&fy).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+    let exact = Kernel::Rbf.exact(&x, &y, 2.0);
+    println!("k(x,y) exact {exact:.4}  ≈ ⟨φ(x),φ(y)⟩ {approx:.4}  (err {:.4})", (approx - exact).abs());
+
+    // 3. Train a classifier on synthetic MNIST-like data.
+    let spec = SyntheticSpec::mnist();
+    let train = Dataset::synthetic(1, &spec, "train", 1000);
+    let test = Dataset::synthetic(1, &spec, "test", 300);
+    let fm = Arc::new(
+        McKernelFactory::new(784).expansions(2).sigma(1.0).rbf_matern(40).seed(1).build(),
+    );
+    let config = TrainConfig {
+        epochs: 5,
+        batch_size: 10,
+        sgd: SgdConfig { lr: 0.001, momentum: 0.0, clip: None },
+        seed: 1,
+        eval_every_epoch: true,
+        verbose: true,
+    };
+    let trainer = Trainer::new(config, Featurizer::McKernel(fm));
+    let (model, report) = trainer.fit(&train, &test);
+    println!(
+        "\ntest accuracy {:.3} with {} learned parameters (Eq. 22: 10·(2·1024·2+1) = {})",
+        report.final_test_accuracy,
+        model.param_count(),
+        10 * (2 * 1024 * 2 + 1)
+    );
+}

@@ -1,0 +1,159 @@
+"""AOT export: lower the Layer-2 JAX functions (wrapping the Layer-1
+Pallas kernels) to HLO *text* artifacts + a JSON manifest the Rust
+runtime consumes.
+
+HLO text - not `.serialize()` - is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Run from python/:  python -m compile.aot --out-dir ../artifacts
+Re-running is cheap and deterministic; `make artifacts` skips it when
+inputs are unchanged.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .model import FeatureParams
+
+# Static shape configuration (matches the paper's MNIST experiments:
+# 28x28=784 pixels padded to [784]_2 = 1024, 10 classes).
+PIXELS = 784
+N = 1024
+CLASSES = 10
+TRAIN_BATCH = 10        # paper figures: batch size 10
+EVAL_BATCH = 256
+FEATURE_BATCH = 32      # feature-server granularity
+EXPANSIONS = (1, 2, 4)  # artifact per E
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def feature_param_specs(e: int):
+    return FeatureParams(
+        b_diag=f32(e, N), g_diag=f32(e, N), scale=f32(e, N), perm=i32(e, N)
+    )
+
+
+def spec_meta(args):
+    """Manifest description of a flat argument list."""
+    flat, _ = jax.tree_util.tree_flatten(args)
+    return [
+        {"shape": list(s.shape), "dtype": str(s.dtype)}
+        for s in flat
+    ]
+
+
+def build_artifacts():
+    """(name, callable, example-arg pytree, metadata) for every export."""
+    arts = []
+    for e in EXPANSIONS:
+        fd = 2 * N * e
+        arts.append((
+            f"train_mck_b{TRAIN_BATCH}_e{e}",
+            lambda w, b, x, y, lr, bd, gd, sc, pm: model.train_step_mckernel(
+                w, b, x, y, lr, FeatureParams(bd, gd, sc, pm)
+            ),
+            (
+                f32(CLASSES, fd), f32(CLASSES), f32(TRAIN_BATCH, N),
+                i32(TRAIN_BATCH), f32(), *feature_param_specs(e),
+            ),
+            {"kind": "train", "featurizer": "mckernel", "batch": TRAIN_BATCH,
+             "n": N, "expansions": e, "classes": CLASSES, "feature_dim": fd,
+             "outputs": ["w", "bias", "loss"]},
+        ))
+        arts.append((
+            f"predict_mck_b{EVAL_BATCH}_e{e}",
+            lambda w, b, x, bd, gd, sc, pm: model.predict_mckernel(
+                w, b, x, FeatureParams(bd, gd, sc, pm)
+            ),
+            (
+                f32(CLASSES, fd), f32(CLASSES), f32(EVAL_BATCH, N),
+                *feature_param_specs(e),
+            ),
+            {"kind": "predict", "featurizer": "mckernel", "batch": EVAL_BATCH,
+             "n": N, "expansions": e, "classes": CLASSES, "feature_dim": fd,
+             "outputs": ["preds"]},
+        ))
+        arts.append((
+            f"features_b{FEATURE_BATCH}_e{e}",
+            lambda x, bd, gd, sc, pm: model.features_only(
+                x, FeatureParams(bd, gd, sc, pm)
+            ),
+            (f32(FEATURE_BATCH, N), *feature_param_specs(e)),
+            {"kind": "features", "featurizer": "mckernel", "batch": FEATURE_BATCH,
+             "n": N, "expansions": e, "classes": 0, "feature_dim": fd,
+             "outputs": ["features"]},
+        ))
+    arts.append((
+        f"train_lr_b{TRAIN_BATCH}",
+        model.train_step_lr,
+        (f32(CLASSES, PIXELS), f32(CLASSES), f32(TRAIN_BATCH, PIXELS),
+         i32(TRAIN_BATCH), f32()),
+        {"kind": "train", "featurizer": "identity", "batch": TRAIN_BATCH,
+         "n": PIXELS, "expansions": 0, "classes": CLASSES, "feature_dim": PIXELS,
+         "outputs": ["w", "bias", "loss"]},
+    ))
+    arts.append((
+        f"predict_lr_b{EVAL_BATCH}",
+        model.predict_lr,
+        (f32(CLASSES, PIXELS), f32(CLASSES), f32(EVAL_BATCH, PIXELS)),
+        {"kind": "predict", "featurizer": "identity", "batch": EVAL_BATCH,
+         "n": PIXELS, "expansions": 0, "classes": CLASSES, "feature_dim": PIXELS,
+         "outputs": ["preds"]},
+    ))
+    return arts
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="artifact-name substring filter")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"n": N, "pixels": PIXELS, "classes": CLASSES, "entries": []}
+    for name, fn, specs, meta in build_artifacts():
+        if args.only and args.only not in name:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        entry = dict(meta)
+        entry["name"] = name
+        entry["file"] = fname
+        entry["inputs"] = spec_meta(specs)
+        manifest["entries"].append(entry)
+        print(f"wrote {fname}  ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote manifest.json ({len(manifest['entries'])} entries)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Layer 1: Pallas Fast Walsh-Hadamard Transform kernel.
+
+TPU adaptation of the paper's cache-blocked SSE2 FWHT (DESIGN.md
+SS Hardware-Adaptation): one grid step owns one batch row, the row
+lives in VMEM for all log2(n) butterfly stages (the analogue of the
+paper's "small routine Hadamard that fits in cache"), and each stage
+is a reshape + elementwise add/sub pair, i.e. pure VPU work with no
+HBM round-trips between stages.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same artifact
+runs under the Rust runtime (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fwht_stages(v: jnp.ndarray, n: int) -> jnp.ndarray:
+    """All log2(n) butterfly stages over a (1, n) VMEM-resident row."""
+    h = 1
+    while h < n:
+        x = v.reshape(n // (2 * h), 2, h)
+        a = x[:, 0, :]
+        b = x[:, 1, :]
+        v = jnp.stack([a + b, a - b], axis=1).reshape(1, n)
+        h *= 2
+    return v
+
+
+def _fwht_kernel(x_ref, o_ref, *, n: int):
+    """Pallas body: one batch row per grid step, resident in VMEM."""
+    o_ref[...] = _fwht_stages(x_ref[...], n)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fwht(x: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+    """Batched FWHT: x (batch, n) -> H x per row, n a power of two."""
+    batch, n = x.shape
+    assert n & (n - 1) == 0, "FWHT length must be a power of two"
+    return pl.pallas_call(
+        functools.partial(_fwht_kernel, n=n),
+        out_shape=jax.ShapeDtypeStruct((batch, n), x.dtype),
+        grid=(batch,),
+        in_specs=[pl.BlockSpec((1, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,92 @@
+"""Layer 1: fused McKernel feature-map Pallas kernel.
+
+One expansion of paper Eq. 8 + Eq. 9 in a single kernel:
+
+    z   = scale * H (g * gather(H (b * x), perm))
+    out = [cos(z) | sin(z)]
+
+Fusion rationale (DESIGN.md SS Hardware-Adaptation): the diagonals and
+the trig map are elementwise VPU ops and the permutation is a VMEM
+gather, so the entire expansion for one row costs exactly two in-VMEM
+butterfly pyramids with zero intermediate HBM traffic - the TPU
+restatement of the paper's "compute Zhat on-the-fly" SIMD pipeline.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fwht import _fwht_stages
+
+
+def _feature_kernel(x_ref, b_ref, g_ref, s_ref, p_ref, o_ref, *, n: int):
+    """One batch row: fused B -> H -> Pi -> G -> H -> C -> cos/sin."""
+    v = x_ref[...] * b_ref[...]
+    v = _fwht_stages(v, n)
+    v = jnp.take(v, p_ref[...][0], axis=-1)
+    v = v * g_ref[...]
+    v = _fwht_stages(v, n)
+    z = v * s_ref[...]
+    o_ref[...] = jnp.concatenate([jnp.cos(z), jnp.sin(z)], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def feature_expansion(
+    x: jnp.ndarray,
+    b_diag: jnp.ndarray,
+    g_diag: jnp.ndarray,
+    scale: jnp.ndarray,
+    perm: jnp.ndarray,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """One expansion's features: (batch, n) -> (batch, 2n).
+
+    b_diag/g_diag/scale: (n,) f32;  perm: (n,) int32.
+    """
+    batch, n = x.shape
+    assert n & (n - 1) == 0
+    row = lambda i: (i, 0)
+    broadcast = lambda i: (0, 0)
+    return pl.pallas_call(
+        functools.partial(_feature_kernel, n=n),
+        out_shape=jax.ShapeDtypeStruct((batch, 2 * n), x.dtype),
+        grid=(batch,),
+        in_specs=[
+            pl.BlockSpec((1, n), row),          # x row
+            pl.BlockSpec((1, n), broadcast),    # B
+            pl.BlockSpec((1, n), broadcast),    # G
+            pl.BlockSpec((1, n), broadcast),    # scale (C merged)
+            pl.BlockSpec((1, n), broadcast),    # perm indices
+        ],
+        out_specs=pl.BlockSpec((1, 2 * n), row),
+        interpret=interpret,
+    )(
+        x,
+        b_diag.reshape(1, n),
+        g_diag.reshape(1, n),
+        scale.reshape(1, n),
+        perm.reshape(1, n),
+    )
+
+
+def features(
+    x: jnp.ndarray,
+    b_diag: jnp.ndarray,
+    g_diag: jnp.ndarray,
+    scale: jnp.ndarray,
+    perm: jnp.ndarray,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """E stacked expansions: (batch, n) + (E, n) params -> (batch, 2nE).
+
+    Layout matches the Rust `McKernel::transform`:
+    [cos_0 | sin_0 | cos_1 | sin_1 | ...].
+    """
+    e_count = b_diag.shape[0]
+    outs = [
+        feature_expansion(x, b_diag[e], g_diag[e], scale[e], perm[e], interpret=interpret)
+        for e in range(e_count)
+    ]
+    return jnp.concatenate(outs, axis=-1)

@@ -1,0 +1,94 @@
+"""Pure-jnp oracle for the Pallas kernels.
+
+This module is the correctness ground truth for Layer 1: every Pallas
+kernel in this package must agree with these reference implementations
+(pytest enforces it, including hypothesis sweeps over shapes).
+
+The math follows the paper:
+  Eq. 10-12: Walsh-Hadamard butterflies (Sylvester ordering).
+  Eq. 8:     Zhat = (1/(sigma*sqrt(n))) * C H G Pi H B   (the diagonal
+             `scale` input here is C premultiplied with 1/(sigma*sqrt(n)*|g|),
+             exactly as the Rust layer materializes it).
+  Eq. 9:     phi(x) = [cos(Zhat x), sin(Zhat x)].
+"""
+
+import numpy as np
+
+import jax.numpy as jnp
+
+
+def fwht_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Unnormalized Walsh-Hadamard transform along the last axis.
+
+    Works for any leading batch shape; the last dimension must be a
+    power of two. Unrolled butterfly stages (log2 n of them), each a
+    reshape + stack: stage h combines elements at stride h.
+    """
+    n = x.shape[-1]
+    assert n & (n - 1) == 0, "FWHT length must be a power of two"
+    lead = x.shape[:-1]
+    h = 1
+    while h < n:
+        # group pairs of h-blocks: (..., n/(2h), 2, h)
+        x = x.reshape(*lead, n // (2 * h), 2, h)
+        a = x[..., 0, :]
+        b = x[..., 1, :]
+        x = jnp.stack([a + b, a - b], axis=-2)
+        x = x.reshape(*lead, n)
+        h *= 2
+    return x
+
+
+def hadamard_matrix(n: int) -> np.ndarray:
+    """Explicit Sylvester Hadamard matrix (test-only O(n^2) oracle)."""
+    assert n & (n - 1) == 0
+    h = np.array([[1.0]], dtype=np.float32)
+    while h.shape[0] < n:
+        h = np.block([[h, h], [h, -h]])
+    return h.astype(np.float32)
+
+
+def fastfood_ref(
+    x: jnp.ndarray,
+    b_diag: jnp.ndarray,
+    g_diag: jnp.ndarray,
+    scale: jnp.ndarray,
+    perm: jnp.ndarray,
+) -> jnp.ndarray:
+    """One expansion's linear stage `Zhat x` (paper Eq. 8).
+
+    x:      (..., n) padded input
+    b_diag: (n,) +-1 signs            (B)
+    g_diag: (n,) gaussian diagonal    (G)
+    scale:  (n,) calibration merged with 1/(sigma*sqrt(n)*|g|)  (C)
+    perm:   (n,) int32 gather indices (Pi: y[i] = v[perm[i]])
+    """
+    v = x * b_diag
+    v = fwht_ref(v)
+    v = jnp.take(v, perm, axis=-1)
+    v = v * g_diag
+    v = fwht_ref(v)
+    return v * scale
+
+
+def features_ref(
+    x: jnp.ndarray,
+    b_diag: jnp.ndarray,
+    g_diag: jnp.ndarray,
+    scale: jnp.ndarray,
+    perm: jnp.ndarray,
+) -> jnp.ndarray:
+    """Full feature map for E stacked expansions (paper Eq. 9).
+
+    x:     (batch, n)
+    diags: (E, n) each; perm (E, n) int32
+    returns (batch, 2*n*E), expansion-major layout
+    [cos_0 | sin_0 | cos_1 | sin_1 | ...], matching the Rust
+    `McKernel::transform` layout.
+    """
+    outs = []
+    e_count = b_diag.shape[0]
+    for e in range(e_count):
+        z = fastfood_ref(x, b_diag[e], g_diag[e], scale[e], perm[e])
+        outs.append(jnp.concatenate([jnp.cos(z), jnp.sin(z)], axis=-1))
+    return jnp.concatenate(outs, axis=-1)

@@ -1,0 +1,87 @@
+"""Layer 2: the JAX model - softmax classifier over McKernel features.
+
+The paper's learning rule (Eq. 23): SGD finds W, b in
+softmax(W [phi(Zhat x)] + b), minimizing the multiclass logistic loss
+(Eq. 20). This module expresses the forward/backward pass and the SGD
+update as pure JAX functions calling the Layer-1 Pallas kernels, so a
+single `jax.jit(...).lower()` captures the whole train step for AOT
+export (aot.py); the Rust coordinator then drives the compiled
+artifact with no Python on the request path.
+
+The feature-map coefficients (B, G, C-merged scale, Pi) enter as
+*runtime inputs*: they are hash-derived on the Rust side (the paper's
+no-stored-coefficients trick), so one artifact serves every seed.
+"""
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import mckernel as kern
+
+
+class FeatureParams(NamedTuple):
+    """Per-expansion Fastfood coefficients, each (E, n); perm int32."""
+
+    b_diag: jnp.ndarray
+    g_diag: jnp.ndarray
+    scale: jnp.ndarray
+    perm: jnp.ndarray
+
+
+def mckernel_features(x: jnp.ndarray, params: FeatureParams, interpret: bool = True):
+    """phi(x): (batch, n) -> (batch, 2nE) via the fused Pallas kernel."""
+    return kern.features(
+        x, params.b_diag, params.g_diag, params.scale, params.perm, interpret=interpret
+    )
+
+
+def logits(w: jnp.ndarray, bias: jnp.ndarray, feats: jnp.ndarray) -> jnp.ndarray:
+    """W feats + b: (classes, d) x (batch, d) -> (batch, classes)."""
+    return feats @ w.T + bias
+
+
+def softmax_xent(lg: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Mean multiclass logistic loss (paper Eq. 20 generalized)."""
+    lse = jax.scipy.special.logsumexp(lg, axis=-1)
+    true = jnp.take_along_axis(lg, y[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return jnp.mean(lse - true)
+
+
+def loss_fn(w, bias, feats, y):
+    """Loss as a function of the learned parameters only."""
+    return softmax_xent(logits(w, bias, feats), y)
+
+
+def train_step_mckernel(w, bias, x, y, lr, params: FeatureParams, interpret: bool = True):
+    """One SGD step (paper Eq. 21) on McKernel features.
+
+    Returns (w', bias', loss). Featurization runs inside the graph
+    (Pallas kernel), so the exported artifact is the full hot path.
+    """
+    feats = mckernel_features(x, params, interpret=interpret)
+    loss, grads = jax.value_and_grad(loss_fn, argnums=(0, 1))(w, bias, feats, y)
+    return (w - lr * grads[0], bias - lr * grads[1], loss)
+
+
+def train_step_lr(w, bias, x, y, lr):
+    """One SGD step of the raw-pixel logistic-regression baseline."""
+    loss, grads = jax.value_and_grad(loss_fn, argnums=(0, 1))(w, bias, x, y)
+    return (w - lr * grads[0], bias - lr * grads[1], loss)
+
+
+def predict_mckernel(w, bias, x, params: FeatureParams, interpret: bool = True):
+    """Hard predictions on McKernel features -> (batch,) int32."""
+    feats = mckernel_features(x, params, interpret=interpret)
+    return jnp.argmax(logits(w, bias, feats), axis=-1).astype(jnp.int32)
+
+
+def predict_lr(w, bias, x):
+    """Hard predictions of the LR baseline -> (batch,) int32."""
+    return jnp.argmax(logits(w, bias, x), axis=-1).astype(jnp.int32)
+
+
+def features_only(x, params: FeatureParams, interpret: bool = True):
+    """Feature generation alone (the paper's drop-in feature server)."""
+    return mckernel_features(x, params, interpret=interpret)

@@ -1,0 +1,75 @@
+"""Layer-1 correctness: Pallas FWHT vs the pure-jnp oracle and the
+explicit Hadamard matrix, including hypothesis sweeps over shapes."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.fwht import fwht
+from compile.kernels.ref import fwht_ref, hadamard_matrix
+
+
+def rand(batch, n, seed=0):
+    rng = np.random.RandomState(seed)
+    return rng.randn(batch, n).astype(np.float32)
+
+
+class TestOracle:
+    """fwht_ref itself is validated against the explicit matrix."""
+
+    @pytest.mark.parametrize("n", [1, 2, 4, 8, 32, 128])
+    def test_ref_matches_matrix(self, n):
+        x = rand(3, n, seed=n)
+        want = x @ hadamard_matrix(n).T
+        got = np.asarray(fwht_ref(jnp.asarray(x)))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_ref_involution(self):
+        x = rand(2, 64, seed=1)
+        twice = np.asarray(fwht_ref(fwht_ref(jnp.asarray(x))))
+        np.testing.assert_allclose(twice / 64.0, x, rtol=1e-4, atol=1e-4)
+
+    def test_ref_parseval(self):
+        x = rand(1, 256, seed=2)
+        y = np.asarray(fwht_ref(jnp.asarray(x)))
+        assert np.isclose((y ** 2).sum(), 256 * (x ** 2).sum(), rtol=1e-4)
+
+
+class TestPallasKernel:
+    @pytest.mark.parametrize("batch", [1, 3, 10])
+    @pytest.mark.parametrize("n", [2, 16, 256, 1024])
+    def test_matches_ref(self, batch, n):
+        x = jnp.asarray(rand(batch, n, seed=batch * 1000 + n))
+        got = np.asarray(fwht(x))
+        want = np.asarray(fwht_ref(x))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_impulse(self):
+        x = jnp.zeros((1, 128)).at[0, 0].set(1.0)
+        np.testing.assert_allclose(np.asarray(fwht(x)), np.ones((1, 128)), atol=1e-6)
+
+    def test_linearity(self):
+        a = jnp.asarray(rand(2, 64, seed=5))
+        b = jnp.asarray(rand(2, 64, seed=6))
+        lhs = np.asarray(fwht(2.0 * a + 3.0 * b))
+        rhs = 2.0 * np.asarray(fwht(a)) + 3.0 * np.asarray(fwht(b))
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=1e-3)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        batch=st.integers(min_value=1, max_value=8),
+        log_n=st.integers(min_value=0, max_value=11),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, batch, log_n, seed):
+        n = 1 << log_n
+        x = jnp.asarray(rand(batch, n, seed=seed))
+        got = np.asarray(fwht(x))
+        want = np.asarray(fwht_ref(x))
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+    def test_rejects_non_pow2(self):
+        with pytest.raises(AssertionError):
+            fwht(jnp.zeros((1, 12)))

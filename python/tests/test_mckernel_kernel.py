@@ -1,0 +1,92 @@
+"""Layer-1 correctness: the fused feature-map Pallas kernel vs the
+pure-jnp oracle (paper Eq. 8 + Eq. 9)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.mckernel import feature_expansion, features
+from compile.kernels.ref import fastfood_ref, features_ref
+
+
+def make_params(e, n, seed=0):
+    rng = np.random.RandomState(seed)
+    b = rng.choice([-1.0, 1.0], size=(e, n)).astype(np.float32)
+    g = rng.randn(e, n).astype(np.float32)
+    s = (rng.rand(e, n).astype(np.float32) + 0.1) / np.sqrt(n)
+    perm = np.stack([rng.permutation(n) for _ in range(e)]).astype(np.int32)
+    return map(jnp.asarray, (b, g, s, perm))
+
+
+def rand_x(batch, n, seed=1):
+    return jnp.asarray(np.random.RandomState(seed).randn(batch, n).astype(np.float32))
+
+
+class TestFeatureExpansion:
+    @pytest.mark.parametrize("n", [8, 64, 1024])
+    def test_matches_ref(self, n):
+        b, g, s, perm = make_params(1, n, seed=n)
+        x = rand_x(4, n, seed=n + 1)
+        got = np.asarray(feature_expansion(x, b[0], g[0], s[0], perm[0]))
+        z = fastfood_ref(x, b[0], g[0], s[0], perm[0])
+        want = np.asarray(jnp.concatenate([jnp.cos(z), jnp.sin(z)], axis=-1))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_output_shape(self):
+        b, g, s, perm = make_params(1, 32)
+        out = feature_expansion(rand_x(5, 32), b[0], g[0], s[0], perm[0])
+        assert out.shape == (5, 64)
+
+    def test_cos_sin_identity(self):
+        b, g, s, perm = make_params(1, 64, seed=3)
+        out = np.asarray(feature_expansion(rand_x(2, 64), b[0], g[0], s[0], perm[0]))
+        c, sn = out[:, :64], out[:, 64:]
+        np.testing.assert_allclose(c ** 2 + sn ** 2, 1.0, atol=1e-5)
+
+    def test_deterministic(self):
+        b, g, s, perm = make_params(1, 16, seed=4)
+        x = rand_x(3, 16, seed=5)
+        a1 = np.asarray(feature_expansion(x, b[0], g[0], s[0], perm[0]))
+        a2 = np.asarray(feature_expansion(x, b[0], g[0], s[0], perm[0]))
+        np.testing.assert_array_equal(a1, a2)
+
+
+class TestStackedFeatures:
+    @pytest.mark.parametrize("e", [1, 2, 4])
+    def test_matches_ref(self, e):
+        n = 64
+        b, g, s, perm = make_params(e, n, seed=e)
+        x = rand_x(3, n, seed=e + 10)
+        got = np.asarray(features(x, b, g, s, perm))
+        want = np.asarray(features_ref(x, b, g, s, perm))
+        assert got.shape == (3, 2 * n * e)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_expansion_blocks_independent(self):
+        # Expansion e's slice equals running that expansion alone.
+        n, e = 32, 3
+        b, g, s, perm = make_params(e, n, seed=9)
+        x = rand_x(2, n, seed=11)
+        full = np.asarray(features(x, b, g, s, perm))
+        for k in range(e):
+            alone = np.asarray(feature_expansion(x, b[k], g[k], s[k], perm[k]))
+            np.testing.assert_allclose(
+                full[:, k * 2 * n:(k + 1) * 2 * n], alone, rtol=1e-5, atol=1e-5
+            )
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        batch=st.integers(min_value=1, max_value=5),
+        log_n=st.integers(min_value=1, max_value=8),
+        e=st.integers(min_value=1, max_value=3),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, batch, log_n, e, seed):
+        n = 1 << log_n
+        b, g, s, perm = make_params(e, n, seed=seed % 10000)
+        x = rand_x(batch, n, seed=(seed + 1) % 10000)
+        got = np.asarray(features(x, b, g, s, perm))
+        want = np.asarray(features_ref(x, b, g, s, perm))
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,97 @@
+"""Layer-2 correctness: loss/gradients/train step of the JAX model."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.model import FeatureParams
+
+
+def toy(batch=6, d=5, classes=3, seed=0):
+    rng = np.random.RandomState(seed)
+    w = jnp.asarray(rng.randn(classes, d).astype(np.float32) * 0.1)
+    b = jnp.zeros(classes, dtype=jnp.float32)
+    x = jnp.asarray(rng.randn(batch, d).astype(np.float32))
+    y = jnp.asarray(rng.randint(0, classes, size=batch).astype(np.int32))
+    return w, b, x, y
+
+
+def make_params(e, n, seed=0):
+    rng = np.random.RandomState(seed)
+    return FeatureParams(
+        b_diag=jnp.asarray(rng.choice([-1.0, 1.0], size=(e, n)).astype(np.float32)),
+        g_diag=jnp.asarray(rng.randn(e, n).astype(np.float32)),
+        scale=jnp.asarray(((rng.rand(e, n) + 0.1) / np.sqrt(n)).astype(np.float32)),
+        perm=jnp.asarray(np.stack([rng.permutation(n) for _ in range(e)]).astype(np.int32)),
+    )
+
+
+class TestLoss:
+    def test_uniform_loss_is_ln_c(self):
+        w, b, x, y = toy()
+        zero_w = jnp.zeros_like(w)
+        loss = model.loss_fn(zero_w, b, x, y)
+        assert np.isclose(float(loss), np.log(3.0), atol=1e-5)
+
+    def test_loss_decreases_along_gradient(self):
+        w, b, x, y = toy(seed=1)
+        g = jax.grad(model.loss_fn, argnums=0)(w, b, x, y)
+        l0 = float(model.loss_fn(w, b, x, y))
+        l1 = float(model.loss_fn(w - 0.1 * g, b, x, y))
+        assert l1 < l0
+
+    def test_grad_matches_numeric(self):
+        w, b, x, y = toy(seed=2)
+        g = jax.grad(model.loss_fn, argnums=0)(w, b, x, y)
+        eps = 1e-3
+        for idx in [(0, 0), (1, 3), (2, 4)]:
+            wp = w.at[idx].add(eps)
+            wm = w.at[idx].add(-eps)
+            num = (float(model.loss_fn(wp, b, x, y)) -
+                   float(model.loss_fn(wm, b, x, y))) / (2 * eps)
+            assert np.isclose(num, float(g[idx]), atol=1e-3)
+
+
+class TestTrainSteps:
+    def test_lr_step_shapes_and_descent(self):
+        w, b, x, y = toy(seed=3)
+        w2, b2, loss = model.train_step_lr(w, b, x, y, jnp.float32(0.5))
+        assert w2.shape == w.shape and b2.shape == b.shape
+        l_after = float(model.loss_fn(w2, b2, x, y))
+        assert l_after < float(loss)
+
+    def test_mckernel_step_runs_and_descends(self):
+        n, e, classes, batch = 16, 2, 3, 4
+        params = make_params(e, n, seed=4)
+        rng = np.random.RandomState(5)
+        w = jnp.zeros((classes, 2 * n * e), dtype=jnp.float32)
+        b = jnp.zeros(classes, dtype=jnp.float32)
+        x = jnp.asarray(rng.randn(batch, n).astype(np.float32))
+        y = jnp.asarray(rng.randint(0, classes, size=batch).astype(np.int32))
+        losses = []
+        for _ in range(10):
+            w, b, loss = model.train_step_mckernel(w, b, x, y, jnp.float32(0.05), params)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0]
+
+    def test_predict_matches_argmax(self):
+        w, b, x, _ = toy(seed=6)
+        preds = model.predict_lr(w, b, x)
+        want = jnp.argmax(x @ w.T + b, axis=-1)
+        np.testing.assert_array_equal(np.asarray(preds), np.asarray(want))
+        assert preds.dtype == jnp.int32
+
+    def test_mckernel_predict_consistent_with_features(self):
+        n, e, classes, batch = 8, 1, 3, 5
+        params = make_params(e, n, seed=7)
+        rng = np.random.RandomState(8)
+        w = jnp.asarray(rng.randn(classes, 2 * n * e).astype(np.float32))
+        b = jnp.asarray(rng.randn(classes).astype(np.float32))
+        x = jnp.asarray(rng.randn(batch, n).astype(np.float32))
+        preds = model.predict_mckernel(w, b, x, params)
+        feats = model.mckernel_features(x, params)
+        want = jnp.argmax(feats @ w.T + b, axis=-1)
+        np.testing.assert_array_equal(np.asarray(preds), np.asarray(want))

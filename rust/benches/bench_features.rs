@@ -1,0 +1,59 @@
+//! Feature-map throughput: native Rust pipeline vs its FWHT-only
+//! lower bound, across expansions — quantifies the paper's claim that
+//! the transform is the bottleneck and everything else is O(n).
+//!
+//! Usage: cargo bench --bench bench_features [-- --quick]
+
+use mckernel::benchkit::{bench, BenchConfig, Report};
+use mckernel::fwht::optimized;
+use mckernel::hash::HashRng;
+use mckernel::mckernel::McKernelFactory;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cfg = if quick { BenchConfig::quick() } else { BenchConfig::default() };
+    let input_dim = 784; // MNIST geometry, pads to 1024
+    let n = 1024;
+
+    let mut r = HashRng::new(3, 3);
+    let x: Vec<f32> = (0..input_dim).map(|_| r.next_f32()).collect();
+
+    let mut report = Report::new(
+        "Feature map cost per sample (ms) — 784→1024, by expansions E",
+        &["mckernel(E)", "2E×FWHT bound", "overhead ×"],
+    );
+    for e in [1usize, 2, 4, 8, 16] {
+        let map = McKernelFactory::new(input_dim)
+            .expansions(e)
+            .sigma(1.0)
+            .rbf_matern(40)
+            .seed(1)
+            .build();
+        let mut out = vec![0.0f32; map.feature_dim()];
+        let mut scratch = map.make_scratch();
+        let full = bench("feature_map", &cfg, |_| {
+            map.transform_into(&x, &mut out, &mut scratch)
+        });
+        // lower bound: the 2E FWHTs alone
+        let mut buf: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let fwht_one = bench("fwht", &cfg, |_| optimized::fwht(&mut buf));
+        let bound = fwht_one.stats.median * (2 * e) as f64;
+        report.add_row(
+            &format!("E={e}"),
+            &[full.median_ms(), bound * 1e3, full.stats.median / bound],
+        );
+    }
+    println!("{}", report.to_table());
+    report.write_csv("bench_results/feature_map.csv").ok();
+
+    // throughput summary for the paper's "lightning expansions" claim
+    let map = McKernelFactory::new(input_dim).expansions(4).rbf_matern(40).seed(1).build();
+    let mut out = vec![0.0f32; map.feature_dim()];
+    let mut scratch = map.make_scratch();
+    let rfull = bench("E=4", &cfg, |_| map.transform_into(&x, &mut out, &mut scratch));
+    println!(
+        "E=4 throughput: {:.0} samples/s  ({:.1} MB/s of features)",
+        rfull.throughput(1.0),
+        rfull.throughput(1.0) * (map.feature_dim() * 4) as f64 / 1e6
+    );
+}

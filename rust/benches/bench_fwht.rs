@@ -1,0 +1,98 @@
+//! Table 1 / Figure 2 regeneration: FWHT timing, McKernel engine vs
+//! the Spiral-like recursive baseline, n = 2^10 … 2^20.
+//!
+//! Also: `--ablation` sweeps the engine set (naive excluded above
+//! 2^13) and reports the iterative-vs-optimized and cached-plan
+//! variants — the design-choice ablations DESIGN.md §7 calls out.
+//!
+//! Usage: cargo bench --bench bench_fwht [-- --ablation] [-- --quick]
+
+use mckernel::benchkit::{bench, BenchConfig, Report};
+use mckernel::fwht::{iterative, optimized, recursive};
+use mckernel::hash::HashRng;
+
+fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = HashRng::new(seed, 0xBE);
+    (0..n).map(|_| r.next_f32() - 0.5).collect()
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let ablation = args.iter().any(|a| a == "--ablation");
+    let quick = args.iter().any(|a| a == "--quick");
+    let cfg = if quick { BenchConfig::quick() } else { BenchConfig::default() };
+
+    // ---- Table 1: mckernel vs spiral-like baseline -------------------
+    let mut table1 = Report::new(
+        "Table 1 — Fast Walsh Hadamard, time per transform (ms)",
+        &["mckernel", "spiral(recursive)", "speedup"],
+    );
+    println!("running Table 1 sizes 2^10..2^20 …");
+    for log_n in 10..=20 {
+        let n = 1usize << log_n;
+        let mut data = rand_vec(n, log_n as u64);
+        let mck = bench("mckernel", &cfg, |_| optimized::fwht(&mut data));
+        // Spiral executes a precomputed plan; timing plan-build each
+        // call would be unfair — build once, execute per iteration
+        // (matches Spiral's published methodology).
+        let plan = recursive::Plan::build(n);
+        let mut data2 = rand_vec(n, log_n as u64 + 100);
+        let spiral = bench("spiral", &cfg, |_| plan.execute(&mut data2));
+        table1.add_row(
+            &format!("{n}"),
+            &[mck.median_ms(), spiral.median_ms(), spiral.stats.median / mck.stats.median],
+        );
+    }
+    println!("{}", table1.to_table());
+    table1.write_csv("bench_results/table1_fwht.csv").ok();
+    println!("(CSV for Figure 2 written to bench_results/table1_fwht.csv)\n");
+
+    if !ablation {
+        return;
+    }
+
+    // ---- Ablation: engine × size -------------------------------------
+    let mut ab = Report::new(
+        "Ablation — FWHT engines, time per transform (ms)",
+        &["naive", "recursive", "iterative", "optimized"],
+    );
+    for log_n in [8usize, 10, 12, 14, 16] {
+        let n = 1usize << log_n;
+        let naive_ms = if log_n <= 12 {
+            let mut d = rand_vec(n, 7);
+            bench("naive", &cfg, |_| mckernel::fwht::naive::fwht(&mut d)).median_ms()
+        } else {
+            f64::NAN
+        };
+        let mut d1 = rand_vec(n, 8);
+        let rec = bench("recursive", &cfg, |_| recursive::fwht(&mut d1)).median_ms();
+        let mut d2 = rand_vec(n, 9);
+        let it = bench("iterative", &cfg, |_| iterative::fwht(&mut d2)).median_ms();
+        let mut d3 = rand_vec(n, 10);
+        let opt = bench("optimized", &cfg, |_| optimized::fwht(&mut d3)).median_ms();
+        ab.add_row(&format!("2^{log_n}"), &[naive_ms, rec, it, opt]);
+    }
+    println!("{}", ab.to_table());
+    ab.write_csv("bench_results/ablation_fwht_engines.csv").ok();
+
+    // ---- Ablation: plan reuse (Spiral's tree-precompute cost) --------
+    let mut plan_ab = Report::new(
+        "Ablation — recursive baseline: plan build cost (ms)",
+        &["execute-only", "build+execute", "build overhead %"],
+    );
+    for log_n in [12usize, 16, 20] {
+        let n = 1usize << log_n;
+        let plan = recursive::Plan::build(n);
+        let mut d = rand_vec(n, 11);
+        let exec = bench("exec", &cfg, |_| plan.execute(&mut d));
+        let mut d2 = rand_vec(n, 12);
+        let full = bench("build+exec", &cfg, |_| recursive::fwht(&mut d2));
+        let overhead = (full.stats.median / exec.stats.median - 1.0) * 100.0;
+        plan_ab.add_row(
+            &format!("2^{log_n}"),
+            &[exec.median_ms(), full.median_ms(), overhead],
+        );
+    }
+    println!("{}", plan_ab.to_table());
+    plan_ab.write_csv("bench_results/ablation_plan_reuse.csv").ok();
+}

@@ -1,0 +1,67 @@
+//! Feature-server coordination bench: throughput and batching
+//! occupancy vs client concurrency and batching window — the L3
+//! coordinator's own performance characteristics (backpressure,
+//! dynamic batching), independent of the math.
+//!
+//! Usage: cargo bench --bench bench_server [-- --quick]
+
+use mckernel::benchkit::Report;
+use mckernel::coordinator::FeatureServer;
+use mckernel::mckernel::McKernelFactory;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn run_load(clients: usize, per_client: usize, max_batch: usize, wait: Duration) -> (f64, f64) {
+    let map = Arc::new(
+        McKernelFactory::new(784).expansions(1).sigma(1.0).rbf_matern(40).seed(1).build(),
+    );
+    let server = FeatureServer::start(map, max_batch, wait);
+    let x: Vec<f32> = (0..784).map(|i| (i % 11) as f32 / 11.0).collect();
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|_| {
+            let c = server.client();
+            let x = x.clone();
+            std::thread::spawn(move || {
+                for _ in 0..per_client {
+                    c.transform(x.clone()).unwrap();
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let rps = (clients * per_client) as f64 / secs;
+    let occupancy = server.stats().mean_batch_size();
+    server.shutdown();
+    (rps, occupancy)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let per_client = if quick { 50 } else { 300 };
+
+    let mut by_clients = Report::new(
+        "Feature server — throughput vs concurrency (batch 32, 200µs window)",
+        &["req/s", "mean batch"],
+    );
+    for clients in [1usize, 2, 4, 8, 16] {
+        let (rps, occ) = run_load(clients, per_client, 32, Duration::from_micros(200));
+        by_clients.add_row(&format!("{clients} clients"), &[rps, occ]);
+    }
+    println!("{}", by_clients.to_table());
+    by_clients.write_csv("bench_results/server_concurrency.csv").ok();
+
+    let mut by_window = Report::new(
+        "Feature server — batching window ablation (8 clients)",
+        &["req/s", "mean batch"],
+    );
+    for wait_us in [0u64, 50, 200, 1000] {
+        let (rps, occ) = run_load(8, per_client, 32, Duration::from_micros(wait_us));
+        by_window.add_row(&format!("{wait_us}µs"), &[rps, occ]);
+    }
+    println!("{}", by_window.to_table());
+    by_window.write_csv("bench_results/server_window.csv").ok();
+}

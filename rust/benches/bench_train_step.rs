@@ -1,0 +1,78 @@
+//! Train-step latency: native Rust loop vs the compiled PJRT artifact
+//! (the DESIGN.md §7 backend ablation). Requires `make artifacts` for
+//! the PJRT rows (skipped otherwise).
+//!
+//! Usage: cargo bench --bench bench_train_step [-- --quick]
+
+use mckernel::benchkit::{bench, BenchConfig, Report};
+use mckernel::data::{Dataset, SyntheticSpec};
+use mckernel::mckernel::McKernelFactory;
+use mckernel::model::SoftmaxRegression;
+use mckernel::optim::{Sgd, SgdConfig};
+use mckernel::runtime::{Runtime, TrainStep};
+use std::sync::Arc;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cfg = if quick { BenchConfig::quick() } else { BenchConfig::default() };
+    let batch = 10;
+    let data = Dataset::synthetic(1, &SyntheticSpec::mnist(), "train", batch);
+    let x = data.images().clone();
+    let y = data.labels().to_vec();
+
+    let mut report = Report::new(
+        "SGD train-step latency per batch of 10 (ms)",
+        &["native", "pjrt", "pjrt/native ×"],
+    );
+
+    let rt = Runtime::new("artifacts").ok();
+    if rt.is_none() {
+        eprintln!("NOTE: artifacts/ missing — PJRT columns will be NaN (run `make artifacts`)");
+    }
+
+    for e in [0usize, 1, 2, 4] {
+        let (native_ms, pjrt_ms) = if e == 0 {
+            // LR baseline
+            let mut model = SoftmaxRegression::zeros(10, 784);
+            let mut opt = Sgd::new(SgdConfig { lr: 0.01, momentum: 0.0, clip: None });
+            let native = bench("native-lr", &cfg, |_| {
+                let (_, g) = model.loss_and_grad(&x, &y);
+                opt.step(&mut model, &g);
+            });
+            let pjrt = rt.as_ref().map(|rt| {
+                let mut step = TrainStep::new(rt, "identity", None).unwrap();
+                bench("pjrt-lr", &cfg, |_| {
+                    step.step(&x, &y, 0.01).unwrap();
+                })
+            });
+            (native.median_ms(), pjrt.map(|p| p.median_ms()).unwrap_or(f64::NAN))
+        } else {
+            let map = Arc::new(
+                McKernelFactory::new(784).expansions(e).sigma(1.0).rbf_matern(40).seed(1).build(),
+            );
+            let mut model = SoftmaxRegression::zeros(10, map.feature_dim());
+            let mut opt = Sgd::new(SgdConfig { lr: 0.001, momentum: 0.0, clip: None });
+            let m2 = Arc::clone(&map);
+            let xx = x.clone();
+            let yy = y.clone();
+            let native = bench("native-mck", &cfg, move |_| {
+                let feats = m2.transform_batch(&xx);
+                let (_, g) = model.loss_and_grad(&feats, &yy);
+                opt.step(&mut model, &g);
+            });
+            let pjrt = rt.as_ref().map(|rt| {
+                let mut step = TrainStep::new(rt, "mckernel", Some(&map)).unwrap();
+                bench("pjrt-mck", &cfg, |_| {
+                    step.step(&x, &y, 0.001).unwrap();
+                })
+            });
+            (native.median_ms(), pjrt.map(|p| p.median_ms()).unwrap_or(f64::NAN))
+        };
+        report.add_row(
+            &(if e == 0 { "LR".to_string() } else { format!("mck E={e}") }),
+            &[native_ms, pjrt_ms, pjrt_ms / native_ms],
+        );
+    }
+    println!("{}", report.to_table());
+    report.write_csv("bench_results/train_step.csv").ok();
+}

@@ -1,0 +1,13 @@
+//! In-tree micro-benchmark harness (criterion is unreachable offline).
+//!
+//! Provides warmed-up, repetition-based timing with robust statistics
+//! (min / median / mean / p95), table and CSV reporting — enough to
+//! regenerate the paper's Table 1 / Figure 2 and the ablation benches.
+
+pub mod report;
+pub mod runner;
+pub mod stats;
+
+pub use report::Report;
+pub use runner::{bench, BenchConfig, BenchResult};
+pub use stats::Stats;

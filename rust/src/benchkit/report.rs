@@ -1,0 +1,136 @@
+//! Table / CSV reporting for benchmark results — prints the same row
+//! layout as the paper's Table 1 and emits CSV series for the figures.
+
+use super::runner::BenchResult;
+
+/// A named collection of benchmark rows: one row = one x-axis point
+/// (e.g. transform size), columns = competing implementations.
+pub struct Report {
+    title: String,
+    columns: Vec<String>,
+    rows: Vec<(String, Vec<f64>)>,
+}
+
+impl Report {
+    /// New report with the given column headers.
+    pub fn new(title: &str, columns: &[&str]) -> Report {
+        Report {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row of values (same order as the headers).
+    pub fn add_row(&mut self, label: &str, values: &[f64]) {
+        assert_eq!(values.len(), self.columns.len(), "column count mismatch");
+        self.rows.push((label.to_string(), values.to_vec()));
+    }
+
+    /// Append a row from bench results (median ms).
+    pub fn add_results(&mut self, label: &str, results: &[&BenchResult]) {
+        let vals: Vec<f64> = results.iter().map(|r| r.median_ms()).collect();
+        self.add_row(label, &vals);
+    }
+
+    /// Markdown-ish aligned table.
+    pub fn to_table(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len().max(10)).collect();
+        let label_w = self
+            .rows
+            .iter()
+            .map(|(l, _)| l.len())
+            .chain([8])
+            .max()
+            .unwrap();
+        let fmt_val = |v: f64| {
+            if v == 0.0 {
+                "0".to_string()
+            } else if v.abs() < 0.01 {
+                format!("{v:.5}")
+            } else if v.abs() < 10.0 {
+                format!("{v:.4}")
+            } else {
+                format!("{v:.2}")
+            }
+        };
+        for (_, vals) in &self.rows {
+            for (w, v) in widths.iter_mut().zip(vals) {
+                *w = (*w).max(fmt_val(*v).len());
+            }
+        }
+        let mut out = format!("# {}\n", self.title);
+        out += &format!("{:>label_w$}", "");
+        for (c, w) in self.columns.iter().zip(&widths) {
+            out += &format!("  {c:>w$}");
+        }
+        out += "\n";
+        for (label, vals) in &self.rows {
+            out += &format!("{label:>label_w$}");
+            for (v, w) in vals.iter().zip(&widths) {
+                out += &format!("  {:>w$}", fmt_val(*v));
+            }
+            out += "\n";
+        }
+        out
+    }
+
+    /// CSV (for plotting the figures).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("label");
+        for c in &self.columns {
+            out += &format!(",{c}");
+        }
+        out += "\n";
+        for (label, vals) in &self.rows {
+            out += label;
+            for v in vals {
+                out += &format!(",{v}");
+            }
+            out += "\n";
+        }
+        out
+    }
+
+    /// Write the CSV next to stdout reporting (best effort).
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_contains_everything() {
+        let mut r = Report::new("Table 1", &["mckernel", "spiral"]);
+        r.add_row("1024", &[0.0333, 0.0667]);
+        r.add_row("1048576", &[15.97, 35.7]);
+        let t = r.to_table();
+        assert!(t.contains("Table 1"));
+        assert!(t.contains("mckernel"));
+        assert!(t.contains("1048576"));
+        assert!(t.contains("35.70"));
+    }
+
+    #[test]
+    fn csv_shape() {
+        let mut r = Report::new("x", &["a", "b"]);
+        r.add_row("r1", &[1.0, 2.0]);
+        let csv = r.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "label,a,b");
+        assert_eq!(lines[1], "r1,1,2");
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_arity_rejected() {
+        let mut r = Report::new("x", &["a"]);
+        r.add_row("r", &[1.0, 2.0]);
+    }
+}

@@ -1,0 +1,151 @@
+//! Benchmark execution: warmup, auto-calibrated batching, repeated
+//! measurement.
+
+use super::stats::Stats;
+use std::time::{Duration, Instant};
+
+/// Configuration for one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Warmup wall-clock budget.
+    pub warmup: Duration,
+    /// Measurement wall-clock budget.
+    pub measure: Duration,
+    /// Number of timed samples to split the budget into.
+    pub samples: usize,
+    /// Lower bound on iterations per sample (after calibration).
+    pub min_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(150),
+            measure: Duration::from_millis(600),
+            samples: 20,
+            min_iters: 1,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// A faster profile for CI / tests.
+    pub fn quick() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(20),
+            measure: Duration::from_millis(80),
+            samples: 8,
+            min_iters: 1,
+        }
+    }
+}
+
+/// Result of one benchmark: per-iteration statistics in seconds.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub stats: Stats,
+    pub iters_per_sample: usize,
+}
+
+impl BenchResult {
+    /// Median time in milliseconds (the Table 1 unit).
+    pub fn median_ms(&self) -> f64 {
+        self.stats.median * 1e3
+    }
+
+    /// Median time in nanoseconds.
+    pub fn median_ns(&self) -> f64 {
+        self.stats.median * 1e9
+    }
+
+    /// Throughput in items/second given items processed per iteration.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.stats.median
+    }
+}
+
+/// Run `f` under `cfg`, timing per-iteration cost. `f` receives the
+/// iteration index (so it can rotate inputs and defeat value caching).
+pub fn bench<F: FnMut(usize)>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchResult {
+    // Warmup + calibration: count how many iterations fit the budget.
+    let start = Instant::now();
+    let mut warm_iters = 0usize;
+    while start.elapsed() < cfg.warmup || warm_iters == 0 {
+        f(warm_iters);
+        warm_iters += 1;
+    }
+    let per_iter = start.elapsed().as_secs_f64() / warm_iters as f64;
+
+    // Choose iterations per sample so samples fill the measure budget.
+    let budget = cfg.measure.as_secs_f64() / cfg.samples as f64;
+    let iters = ((budget / per_iter).ceil() as usize).max(cfg.min_iters);
+
+    let mut samples = Vec::with_capacity(cfg.samples);
+    let mut k = 0usize;
+    for _ in 0..cfg.samples {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f(k);
+            k += 1;
+        }
+        samples.push(t0.elapsed().as_secs_f64() / iters as f64);
+    }
+    BenchResult { name: name.to_string(), stats: Stats::of(&samples), iters_per_sample: iters }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let cfg = BenchConfig::quick();
+        let mut acc = 0u64;
+        let r = bench("spin", &cfg, |i| {
+            // ~constant work
+            for j in 0..100 {
+                acc = acc.wrapping_add((i * j) as u64);
+            }
+        });
+        assert!(r.stats.median > 0.0);
+        assert!(r.stats.min <= r.stats.median);
+        assert!(r.stats.median <= r.stats.max);
+        assert_eq!(r.stats.n, cfg.samples);
+        assert!(acc != 42); // keep acc live
+    }
+
+    #[test]
+    fn ranks_workloads_by_cost() {
+        let cfg = BenchConfig::quick();
+        let mut sink = 0.0f64;
+        let small = bench("small", &cfg, |_| {
+            for i in 0..50 {
+                sink += (i as f64).sqrt();
+            }
+        });
+        let large = bench("large", &cfg, |_| {
+            for i in 0..5000 {
+                sink += (i as f64).sqrt();
+            }
+        });
+        assert!(
+            large.stats.median > small.stats.median * 5.0,
+            "large {} vs small {} (sink {sink})",
+            large.stats.median,
+            small.stats.median
+        );
+    }
+
+    #[test]
+    fn unit_conversions() {
+        let r = BenchResult {
+            name: "x".into(),
+            stats: Stats::of(&[0.002]),
+            iters_per_sample: 1,
+        };
+        assert!((r.median_ms() - 2.0).abs() < 1e-9);
+        assert!((r.median_ns() - 2e6).abs() < 1e-3);
+        assert!((r.throughput(10.0) - 5000.0).abs() < 1e-6);
+    }
+}

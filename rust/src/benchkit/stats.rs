@@ -1,0 +1,94 @@
+//! Robust summary statistics over timing samples.
+
+/// Summary statistics of a sample of per-iteration times (seconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Stats {
+    pub n: usize,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub median: f64,
+    pub p95: f64,
+    pub stddev: f64,
+}
+
+impl Stats {
+    /// Compute statistics of `samples` (need not be sorted; empty
+    /// samples are rejected).
+    pub fn of(samples: &[f64]) -> Stats {
+        assert!(!samples.is_empty(), "no samples");
+        let mut s = samples.to_vec();
+        s.sort_by(f64::total_cmp);
+        let n = s.len();
+        let mean = s.iter().sum::<f64>() / n as f64;
+        let var = s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Stats {
+            n,
+            min: s[0],
+            max: s[n - 1],
+            mean,
+            median: percentile_sorted(&s, 50.0),
+            p95: percentile_sorted(&s, 95.0),
+            stddev: var.sqrt(),
+        }
+    }
+}
+
+/// Linear-interpolated percentile of an already sorted slice.
+pub fn percentile_sorted(sorted: &[f64], pct: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=100.0).contains(&pct));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = pct / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let s = Stats::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.median, 3.0);
+        assert!((s.stddev - 2.0f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unsorted_input_ok() {
+        let s = Stats::of(&[5.0, 1.0, 3.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.median, 3.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let s = [0.0, 10.0];
+        assert_eq!(percentile_sorted(&s, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&s, 50.0), 5.0);
+        assert_eq!(percentile_sorted(&s, 100.0), 10.0);
+    }
+
+    #[test]
+    fn single_sample() {
+        let s = Stats::of(&[7.5]);
+        assert_eq!(s.median, 7.5);
+        assert_eq!(s.p95, 7.5);
+        assert_eq!(s.stddev, 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_rejected() {
+        Stats::of(&[]);
+    }
+}

@@ -1,0 +1,391 @@
+//! CLI subcommand implementations. `main.rs` dispatches here; all
+//! logic lives in the library so integration tests can drive it.
+
+use crate::cli::Args;
+use crate::data::{Dataset, SyntheticSpec};
+use crate::mckernel::{Kernel, McKernelFactory};
+use crate::model::checkpoint::Checkpoint;
+use crate::optim::SgdConfig;
+use crate::train::{Featurizer, TrainConfig, Trainer};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Usage text.
+pub const USAGE: &str = "mckernel — approximate kernel expansions in log-linear time
+
+USAGE: mckernel <command> [options]
+
+COMMANDS:
+  train      train a classifier (LR baseline or McKernel features)
+  predict    evaluate a saved checkpoint on a dataset split
+  features   featurize one synthetic sample and print stats
+  fwht       run one FWHT and report timing
+  gen-data   write a synthetic dataset as IDX files
+  info       list AOT artifacts (requires `make artifacts`)
+  serve      run the dynamic-batching feature server demo
+
+COMMON OPTIONS:
+  --dataset mnist|fashion   synthetic dataset family     [mnist]
+  --data-dir DIR            load real IDX files from DIR instead
+  --seed N                  root seed          [1398239763]
+  --train-size N / --test-size N
+  --kernel rbf|matern       calibration kernel [matern]
+  --expansions E            kernel expansions  [4]
+  --sigma S                 bandwidth          [1.0]
+  --epochs N --batch-size B --lr G
+  --backend native|pjrt     execution backend  [native]
+  --artifacts DIR           artifact directory [artifacts]
+  --checkpoint PATH         model file to write/read
+  --csv PATH                write per-epoch history CSV
+
+Run `mckernel <command> --help` for details.";
+
+/// Load the train/test datasets per common flags.
+pub fn load_datasets(args: &Args) -> Result<(Dataset, Dataset)> {
+    let seed: u64 = args.parse_or("seed", crate::PAPER_SEED)?;
+    let train_n: usize = args.parse_or("train-size", 60_000)?;
+    let test_n: usize = args.parse_or("test-size", 10_000)?;
+    if let Some(dir) = args.get("data-dir") {
+        let d = std::path::Path::new(dir);
+        let train = Dataset::from_idx_files(
+            d.join("train-images-idx3-ubyte"),
+            d.join("train-labels-idx1-ubyte"),
+        )
+        .context("real train split")?;
+        let test = Dataset::from_idx_files(
+            d.join("t10k-images-idx3-ubyte"),
+            d.join("t10k-labels-idx1-ubyte"),
+        )
+        .context("real test split")?;
+        return Ok((train.take(train_n.min(train.len())), test.take(test_n.min(test.len()))));
+    }
+    let name = args.get_or("dataset", "mnist");
+    let spec = SyntheticSpec::by_name(&name)
+        .with_context(|| format!("unknown dataset '{name}'"))?;
+    Ok((
+        Dataset::synthetic(seed, &spec, "train", train_n),
+        Dataset::synthetic(seed, &spec, "test", test_n),
+    ))
+}
+
+/// Build the feature map per common flags (None = identity/LR).
+pub fn build_map(args: &Args, input_dim: usize) -> Result<Option<Arc<crate::mckernel::McKernel>>> {
+    if args.get_or("featurizer", "mckernel") == "identity" {
+        return Ok(None);
+    }
+    let kernel = Kernel::parse(&args.get_or("kernel", "matern"))
+        .context("unknown --kernel (rbf|matern)")?;
+    let kernel = match (kernel, args.get("matern-t")) {
+        (Kernel::RbfMatern { .. }, Some(t)) => Kernel::RbfMatern { t: t.parse()? },
+        (k, _) => k,
+    };
+    let mut factory = McKernelFactory::new(input_dim)
+        .expansions(args.parse_or("expansions", 4usize)?)
+        .sigma(args.parse_or("sigma", 1.0f64)?)
+        .seed(args.parse_or("seed", crate::PAPER_SEED)?);
+    factory = match kernel {
+        Kernel::Rbf => factory.rbf(),
+        Kernel::RbfMatern { t } => factory.rbf_matern(t),
+    };
+    Ok(Some(Arc::new(factory.build())))
+}
+
+/// Shared TrainConfig from flags.
+pub fn train_config(args: &Args, default_lr: f32) -> Result<TrainConfig> {
+    Ok(TrainConfig {
+        epochs: args.parse_or("epochs", 20usize)?,
+        batch_size: args.parse_or("batch-size", 10usize)?,
+        sgd: SgdConfig {
+            lr: args.parse_or("lr", default_lr)?,
+            momentum: args.parse_or("momentum", 0.0f32)?,
+            clip: args.get("clip").map(|c| c.parse()).transpose()?,
+        },
+        seed: args.parse_or("seed", crate::PAPER_SEED)?,
+        eval_every_epoch: !args.flag("final-eval-only"),
+        verbose: !args.flag("quiet"),
+    })
+}
+
+/// `mckernel train`.
+pub fn cmd_train(args: &Args) -> Result<()> {
+    let (train, test) = load_datasets(args)?;
+    let map = build_map(args, train.dim())?;
+    let default_lr = if map.is_some() { 0.001 } else { 0.01 };
+    let config = train_config(args, default_lr)?;
+    let backend = args.get_or("backend", "native");
+
+    let report = match backend.as_str() {
+        "native" => {
+            let featurizer = match &map {
+                Some(m) => Featurizer::McKernelParallel(
+                    Arc::clone(m),
+                    Arc::new(crate::util::ThreadPool::with_default_size()),
+                ),
+                None => Featurizer::Identity,
+            };
+            let trainer = Trainer::new(config, featurizer);
+            let (model, report) = trainer.fit(&train, &test);
+            maybe_save(args, &map, &model, &report)?;
+            report
+        }
+        "pjrt" => {
+            let rt = crate::runtime::Runtime::new(args.get_or("artifacts", "artifacts"))?;
+            let trainer = crate::coordinator::PjrtTrainer::new(&rt, config, map.clone());
+            let train = Arc::new(train);
+            let (model, report) = trainer.fit(&train, &test)?;
+            maybe_save(args, &map, &model, &report)?;
+            report
+        }
+        other => bail!("unknown --backend '{other}' (native|pjrt)"),
+    };
+
+    println!(
+        "final test accuracy: {:.4}  (featurizer={}, params={})",
+        report.final_test_accuracy, report.featurizer, report.param_count
+    );
+    if let Some(csv) = args.get("csv") {
+        std::fs::write(csv, report.to_csv())?;
+        println!("wrote {csv}");
+    }
+    Ok(())
+}
+
+fn maybe_save(
+    args: &Args,
+    map: &Option<Arc<crate::mckernel::McKernel>>,
+    model: &crate::model::SoftmaxRegression,
+    report: &crate::train::TrainReport,
+) -> Result<()> {
+    if let Some(path) = args.get("checkpoint") {
+        let mut meta = BTreeMap::new();
+        meta.insert("final_test_accuracy".into(), Json::Num(report.final_test_accuracy));
+        meta.insert("featurizer".into(), Json::Str(report.featurizer.into()));
+        Checkpoint {
+            feature_config: map.as_ref().map(|m| m.config().clone()),
+            model: model.clone(),
+            meta,
+        }
+        .save(path)?;
+        println!("wrote checkpoint {path}");
+    }
+    Ok(())
+}
+
+/// `mckernel predict`.
+pub fn cmd_predict(args: &Args) -> Result<()> {
+    let path: String = args.require("checkpoint")?;
+    let ck = Checkpoint::load(&path)?;
+    let (_, test) = load_datasets(args)?;
+    let featurizer = match &ck.feature_config {
+        Some(cfg) => Featurizer::McKernel(Arc::new(crate::mckernel::McKernel::new(cfg.clone()))),
+        None => Featurizer::Identity,
+    };
+    let trainer = Trainer::new(TrainConfig::default(), featurizer);
+    let acc = trainer.evaluate(&ck.model, &test);
+    println!("checkpoint {path}: test accuracy {acc:.4} over {} samples", test.len());
+    Ok(())
+}
+
+/// `mckernel features`.
+pub fn cmd_features(args: &Args) -> Result<()> {
+    let (train, _) = load_datasets(args)?;
+    let map = build_map(args, train.dim())?.context("--featurizer identity has no features")?;
+    let (x, label) = train.sample(0);
+    let f = map.transform(x);
+    let norm: f64 = f.iter().map(|v| (*v as f64).powi(2)).sum::<f64>();
+    println!(
+        "sample label={label}: {} -> {} features  (E={}, n={}, ‖φ‖²={:.1}, params for 10-way head: {})",
+        x.len(),
+        f.len(),
+        map.expansions(),
+        map.padded_dim(),
+        norm,
+        map.head_param_count(10)
+    );
+    Ok(())
+}
+
+/// `mckernel fwht`.
+pub fn cmd_fwht(args: &Args) -> Result<()> {
+    use crate::fwht::Engine;
+    let log_n: u32 = args.parse_or("log-n", 20u32)?;
+    let n = 1usize << log_n;
+    let engine = Engine::parse(&args.get_or("engine", "mckernel")).context("bad --engine")?;
+    let mut rng = crate::hash::HashRng::new(args.parse_or("seed", 1u64)?, 0xF);
+    let mut data: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+    let cfg = crate::benchkit::BenchConfig::default();
+    let result = crate::benchkit::bench(engine.name(), &cfg, |_| engine.run(&mut data));
+    println!(
+        "FWHT n=2^{log_n} engine={}: median {:.4} ms  (min {:.4}, p95 {:.4}; {} samples × {} iters)",
+        engine.name(),
+        result.median_ms(),
+        result.stats.min * 1e3,
+        result.stats.p95 * 1e3,
+        result.stats.n,
+        result.iters_per_sample
+    );
+    Ok(())
+}
+
+/// `mckernel gen-data`.
+pub fn cmd_gen_data(args: &Args) -> Result<()> {
+    let out: String = args.require("out")?;
+    let (train, test) = load_datasets(args)?;
+    let d = std::path::Path::new(&out);
+    train.write_idx_files(
+        d.join("train-images-idx3-ubyte"),
+        d.join("train-labels-idx1-ubyte"),
+    )?;
+    test.write_idx_files(
+        d.join("t10k-images-idx3-ubyte"),
+        d.join("t10k-labels-idx1-ubyte"),
+    )?;
+    println!("wrote {} train / {} test samples to {out}", train.len(), test.len());
+    Ok(())
+}
+
+/// `mckernel info`.
+pub fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let manifest = crate::runtime::Manifest::load(&dir)?;
+    manifest.validate()?;
+    println!(
+        "artifacts in {dir}: n={} pixels={} classes={}",
+        manifest.n, manifest.pixels, manifest.classes
+    );
+    for e in &manifest.entries {
+        println!(
+            "  {:<24} kind={:<8} featurizer={:<9} batch={:<4} E={} feature_dim={}",
+            e.name, e.kind, e.featurizer, e.batch, e.expansions, e.feature_dim
+        );
+    }
+    Ok(())
+}
+
+/// `mckernel serve` — demo loop: N requests through the server.
+pub fn cmd_serve(args: &Args) -> Result<()> {
+    let (train, _) = load_datasets(args)?;
+    let map = build_map(args, train.dim())?.context("serve needs a feature map")?;
+    let max_batch: usize = args.parse_or("max-batch", 32usize)?;
+    let wait_us: u64 = args.parse_or("max-wait-us", 200u64)?;
+    let requests: usize = args.parse_or("requests", 1000usize)?;
+    let clients: usize = args.parse_or("clients", 8usize)?;
+    let server = crate::coordinator::FeatureServer::start(
+        Arc::clone(&map),
+        max_batch,
+        std::time::Duration::from_micros(wait_us),
+    );
+    let t0 = std::time::Instant::now();
+    let per_client = requests / clients;
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let client = server.client();
+            let data = train.images().clone();
+            std::thread::spawn(move || {
+                for i in 0..per_client {
+                    let row = data.row((c * per_client + i) % data.rows()).to_vec();
+                    client.transform(row).expect("server alive");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let stats = server.stats();
+    println!(
+        "served {} requests from {clients} clients in {:.2}s  ({:.0} req/s, mean batch {:.1})",
+        per_client * clients,
+        secs,
+        (per_client * clients) as f64 / secs,
+        stats.mean_batch_size()
+    );
+    server.shutdown();
+    Ok(())
+}
+
+/// Top-level dispatch.
+pub fn run(args: Args) -> Result<()> {
+    match args.subcommand() {
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some(cmd) => {
+            let rest = args.rest();
+            match cmd {
+                "train" => cmd_train(&rest),
+                "predict" => cmd_predict(&rest),
+                "features" => cmd_features(&rest),
+                "fwht" => cmd_fwht(&rest),
+                "gen-data" => cmd_gen_data(&rest),
+                "info" => cmd_info(&rest),
+                "serve" => cmd_serve(&rest),
+                "help" | "--help" => {
+                    println!("{USAGE}");
+                    Ok(())
+                }
+                other => bail!("unknown command '{other}'\n\n{USAGE}"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::parse(s.iter().copied()).unwrap()
+    }
+
+    #[test]
+    fn datasets_from_flags() {
+        let a = args(&["--dataset", "fashion", "--train-size", "30", "--test-size", "10"]);
+        let (tr, te) = load_datasets(&a).unwrap();
+        assert_eq!(tr.len(), 30);
+        assert_eq!(te.len(), 10);
+    }
+
+    #[test]
+    fn map_from_flags() {
+        let a = args(&["--expansions", "2", "--kernel", "rbf", "--sigma", "3.0", "--seed", "5"]);
+        let m = build_map(&a, 100).unwrap().unwrap();
+        assert_eq!(m.expansions(), 2);
+        assert_eq!(m.config().sigma, 3.0);
+        assert_eq!(m.config().kernel, Kernel::Rbf);
+    }
+
+    #[test]
+    fn identity_featurizer_flag() {
+        let a = args(&["--featurizer", "identity"]);
+        assert!(build_map(&a, 100).unwrap().is_none());
+    }
+
+    #[test]
+    fn train_config_defaults_match_paper() {
+        let a = args(&[]);
+        let c = train_config(&a, 0.001).unwrap();
+        assert_eq!(c.epochs, 20);
+        assert_eq!(c.batch_size, 10);
+        assert_eq!(c.sgd.lr, 0.001);
+        assert_eq!(c.seed, 1398239763);
+    }
+
+    #[test]
+    fn unknown_command_is_error() {
+        assert!(run(args(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn tiny_native_train_runs() {
+        let a = args(&[
+            "train", "--train-size", "40", "--test-size", "20", "--epochs", "1",
+            "--expansions", "1", "--quiet", "--batch-size", "10",
+        ]);
+        run(a).unwrap();
+    }
+}

@@ -1,0 +1,9 @@
+//! Command-line argument parsing (clap is unreachable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional
+//! arguments, typed accessors with defaults, and generated usage text.
+
+pub mod commands;
+pub mod parser;
+
+pub use parser::{Args, CliError};

@@ -1,0 +1,248 @@
+//! A small, strict argument parser.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Parse error.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Parsed command line: positionals + `--key[=value]` options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    positionals: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+impl Args {
+    /// Parse an argv slice (without the program name).
+    ///
+    /// Grammar: `--key=value` | `--key value` | `--flag` (when the next
+    /// token starts with `--` or is absent) | positional. A literal
+    /// `--` ends option parsing.
+    pub fn parse<I, S>(argv: I) -> Result<Args, CliError>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let tokens: Vec<String> = argv.into_iter().map(Into::into).collect();
+        let mut a = Args::default();
+        let mut i = 0;
+        let mut raw = false;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if raw || !t.starts_with("--") {
+                a.positionals.push(t.clone());
+                i += 1;
+                continue;
+            }
+            if t == "--" {
+                raw = true;
+                i += 1;
+                continue;
+            }
+            let body = &t[2..];
+            if body.is_empty() {
+                return Err(CliError("empty option name".into()));
+            }
+            if let Some(eq) = body.find('=') {
+                let (k, v) = body.split_at(eq);
+                a.options.insert(k.to_string(), v[1..].to_string());
+                i += 1;
+            } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                a.options.insert(body.to_string(), tokens[i + 1].clone());
+                i += 2;
+            } else {
+                a.flags.push(body.to_string());
+                i += 1;
+            }
+        }
+        Ok(a)
+    }
+
+    /// Parse the process argv (skipping program name).
+    pub fn from_env() -> Result<Args, CliError> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().insert(key.to_string());
+    }
+
+    /// Positional argument at `idx`.
+    pub fn positional(&self, idx: usize) -> Option<&str> {
+        self.positionals.get(idx).map(|s| s.as_str())
+    }
+
+    /// All positionals.
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+
+    /// Take the first positional as a subcommand name.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional(0)
+    }
+
+    /// Args with the subcommand stripped (for dispatch).
+    pub fn rest(&self) -> Args {
+        let mut a = self.clone();
+        if !a.positionals.is_empty() {
+            a.positionals.remove(0);
+        }
+        a
+    }
+
+    /// Whether a boolean flag was given (either `--x` or `--x=true`).
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.iter().any(|f| f == key)
+            || matches!(self.options.get(key).map(|s| s.as_str()), Some("true" | "1" | "yes"))
+    }
+
+    /// Raw string option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed option with default.
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{key}: cannot parse '{v}'"))),
+        }
+    }
+
+    /// Required typed option.
+    pub fn require<T: std::str::FromStr>(&self, key: &str) -> Result<T, CliError> {
+        let v = self
+            .get(key)
+            .ok_or_else(|| CliError(format!("missing required --{key}")))?;
+        v.parse()
+            .map_err(|_| CliError(format!("--{key}: cannot parse '{v}'")))
+    }
+
+    /// Comma-separated list option, e.g. `--expansions 1,2,4`.
+    pub fn list_or<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Result<Vec<T>, CliError>
+    where
+        T: Clone,
+    {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| CliError(format!("--{key}: cannot parse '{p}'")))
+                })
+                .collect(),
+        }
+    }
+
+    /// Error on unknown (never-queried) options — catches typos. Call
+    /// after all gets.
+    pub fn reject_unknown(&self) -> Result<(), CliError> {
+        let seen = self.consumed.borrow();
+        for k in self.options.keys().chain(self.flags.iter()) {
+            if !seen.contains(k) {
+                return Err(CliError(format!("unknown option --{k}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().copied()).unwrap()
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse(&["--alpha", "3", "--beta=4", "--gamma"]);
+        assert_eq!(a.get("alpha"), Some("3"));
+        assert_eq!(a.get("beta"), Some("4"));
+        assert!(a.flag("gamma"));
+        assert!(!a.flag("delta"));
+    }
+
+    #[test]
+    fn positionals_and_subcommand() {
+        let a = parse(&["train", "file.idx", "--lr", "0.01"]);
+        assert_eq!(a.subcommand(), Some("train"));
+        let rest = a.rest();
+        assert_eq!(rest.positional(0), Some("file.idx"));
+        assert_eq!(rest.get("lr"), Some("0.01"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse(&["--n", "42", "--x", "1.5"]);
+        assert_eq!(a.parse_or("n", 0usize).unwrap(), 42);
+        assert_eq!(a.parse_or("x", 0.0f64).unwrap(), 1.5);
+        assert_eq!(a.parse_or("missing", 7u32).unwrap(), 7);
+        assert!(a.require::<usize>("n").is_ok());
+        assert!(a.require::<usize>("absent").is_err());
+        assert!(a.parse_or("x", 0usize).is_err()); // 1.5 not usize
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["--e", "1,2, 4"]);
+        assert_eq!(a.list_or::<usize>("e", &[]).unwrap(), vec![1, 2, 4]);
+        assert_eq!(a.list_or::<usize>("f", &[9]).unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn flag_like_value_followed_by_option() {
+        // `--a --b 3`: a is a flag, b has value 3.
+        let a = parse(&["--a", "--b", "3"]);
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("3"));
+    }
+
+    #[test]
+    fn double_dash_ends_options() {
+        let a = parse(&["--x", "1", "--", "--not-an-option"]);
+        assert_eq!(a.get("x"), Some("1"));
+        assert_eq!(a.positional(0), Some("--not-an-option"));
+    }
+
+    #[test]
+    fn reject_unknown_catches_typos() {
+        let a = parse(&["--learning-rate", "3"]);
+        let _ = a.get("lr");
+        assert!(a.reject_unknown().is_err());
+        let _ = a.get("learning-rate");
+        assert!(a.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn bool_option_as_value() {
+        let a = parse(&["--verbose=true", "--quiet=false"]);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+}

@@ -1,0 +1,14 @@
+//! Layer-3 coordination: the mini-batch training orchestrator over the
+//! PJRT runtime and the dynamic-batching feature server.
+//!
+//! Rust owns the event loop, the data pipeline (prefetch threads with
+//! bounded-channel backpressure), process lifecycle and metrics; the
+//! compiled XLA artifacts own the math. Python never runs here.
+
+pub mod pipeline;
+pub mod pjrt_trainer;
+pub mod server;
+
+pub use pipeline::{FeaturizedBatch, Prefetcher};
+pub use pjrt_trainer::PjrtTrainer;
+pub use server::{FeatureServer, ServerStats};

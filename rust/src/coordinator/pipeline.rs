@@ -1,0 +1,166 @@
+//! Prefetching batch pipeline: a producer thread materializes (and
+//! optionally featurizes) mini-batches ahead of the training loop,
+//! with a bounded channel providing backpressure so memory stays
+//! constant — the coordinator never blocks on data unless the
+//! producer genuinely falls behind.
+
+use crate::data::{Batcher, Dataset};
+use crate::linalg::Matrix;
+use crate::mckernel::McKernel;
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// A batch ready for the consumer: featurized (native map applied in
+/// the producer) or raw pixels (PJRT path featurizes in-graph).
+#[derive(Debug)]
+pub struct FeaturizedBatch {
+    pub features: Matrix,
+    pub labels: Vec<u8>,
+    pub index: usize,
+}
+
+/// Handle to a running prefetch pipeline (one epoch).
+pub struct Prefetcher {
+    rx: Receiver<FeaturizedBatch>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Prefetcher {
+    /// Spawn a producer for `epoch` over `data`.
+    ///
+    /// * `map`: `Some` → features computed in the producer thread
+    ///   (native path); `None` → raw batches (PJRT path).
+    /// * `depth`: channel capacity (batches in flight).
+    /// * `drop_last`: required by fixed-shape PJRT train graphs.
+    pub fn spawn(
+        data: Arc<Dataset>,
+        batch_size: usize,
+        seed: u64,
+        epoch: usize,
+        depth: usize,
+        drop_last: bool,
+        map: Option<Arc<McKernel>>,
+    ) -> Prefetcher {
+        let (tx, rx) = sync_channel(depth.max(1));
+        let handle = std::thread::Builder::new()
+            .name(format!("mckernel-prefetch-{epoch}"))
+            .spawn(move || {
+                let mut batcher = Batcher::new(batch_size, seed);
+                if drop_last {
+                    batcher = batcher.drop_last();
+                }
+                let scratch = map.as_ref().map(|m| m.make_scratch());
+                let mut scratch = scratch;
+                for batch in batcher.epoch(&data, epoch) {
+                    let features = match (&map, &mut scratch) {
+                        (Some(m), Some(s)) => {
+                            let mut out = Matrix::zeros(batch.images.rows(), m.feature_dim());
+                            for r in 0..batch.images.rows() {
+                                m.transform_into(batch.images.row(r), out.row_mut(r), s);
+                            }
+                            out
+                        }
+                        _ => batch.images,
+                    };
+                    let fb = FeaturizedBatch { features, labels: batch.labels, index: batch.index };
+                    if tx.send(fb).is_err() {
+                        return; // consumer dropped: stop early
+                    }
+                }
+            })
+            .expect("spawn prefetch thread");
+        Prefetcher { rx, handle: Some(handle) }
+    }
+
+    /// Blocking receive of the next batch (None = epoch finished).
+    pub fn next(&self) -> Option<FeaturizedBatch> {
+        self.rx.recv().ok()
+    }
+
+    /// Iterator adapter.
+    pub fn iter(&self) -> impl Iterator<Item = FeaturizedBatch> + '_ {
+        std::iter::from_fn(move || self.next())
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        // Drain so the producer unblocks, then join.
+        while self.rx.try_recv().is_ok() {}
+        drop(std::mem::replace(&mut self.rx, sync_channel(1).1));
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticSpec;
+    use crate::mckernel::McKernelFactory;
+
+    fn data(n: usize) -> Arc<Dataset> {
+        Arc::new(Dataset::synthetic(5, &SyntheticSpec::mnist(), "train", n))
+    }
+
+    #[test]
+    fn raw_pipeline_delivers_all_batches() {
+        let d = data(45);
+        let p = Prefetcher::spawn(d, 10, 1, 0, 2, false, None);
+        let batches: Vec<_> = p.iter().collect();
+        assert_eq!(batches.len(), 5);
+        assert_eq!(batches[4].features.rows(), 5);
+        let total: usize = batches.iter().map(|b| b.labels.len()).sum();
+        assert_eq!(total, 45);
+    }
+
+    #[test]
+    fn drop_last_gives_fixed_shapes() {
+        let d = data(45);
+        let p = Prefetcher::spawn(d, 10, 1, 0, 2, true, None);
+        let batches: Vec<_> = p.iter().collect();
+        assert_eq!(batches.len(), 4);
+        assert!(batches.iter().all(|b| b.features.rows() == 10));
+    }
+
+    #[test]
+    fn featurizing_producer_matches_direct_transform() {
+        let d = data(12);
+        let map = Arc::new(McKernelFactory::new(784).expansions(1).seed(2).build());
+        let p = Prefetcher::spawn(
+            Arc::clone(&d),
+            12,
+            3,
+            0,
+            1,
+            false,
+            Some(Arc::clone(&map)),
+        );
+        let b = p.next().unwrap();
+        assert_eq!(b.features.cols(), map.feature_dim());
+        // row 0 of the shuffled batch equals transform of some dataset row
+        let direct = map.transform_batch(d.images());
+        let row = b.features.row(0);
+        assert!((0..12).any(|i| direct.row(i) == row));
+    }
+
+    #[test]
+    fn early_drop_does_not_hang() {
+        let d = data(100);
+        let p = Prefetcher::spawn(d, 5, 1, 0, 1, false, None);
+        let _one = p.next();
+        drop(p); // must join cleanly even with batches pending
+    }
+
+    #[test]
+    fn epochs_differ() {
+        let d = data(20);
+        let p0 = Prefetcher::spawn(Arc::clone(&d), 20, 7, 0, 1, false, None);
+        let p1 = Prefetcher::spawn(d, 20, 7, 1, 1, false, None);
+        let a = p0.next().unwrap().labels;
+        let b = p1.next().unwrap().labels;
+        assert_ne!(a, b);
+    }
+}

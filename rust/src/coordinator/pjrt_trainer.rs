@@ -1,0 +1,134 @@
+//! PJRT-backed training coordinator: the end-to-end three-layer path.
+//!
+//! The compiled train-step artifact (L2 JAX + L1 Pallas) runs under
+//! the PJRT CPU client while this coordinator (L3) owns epochs,
+//! prefetching, evaluation and reporting — mirroring
+//! [`crate::train::Trainer`]'s native loop so the two backends are
+//! directly comparable (`--backend native|pjrt` in the examples).
+
+use super::pipeline::Prefetcher;
+use crate::data::{Batcher, Dataset};
+use crate::mckernel::McKernel;
+use crate::model::SoftmaxRegression;
+use crate::runtime::{Predictor, Runtime, TrainStep};
+use crate::train::metrics::{accuracy, EpochRecord};
+use crate::train::trainer::{TrainConfig, TrainReport};
+use anyhow::Result;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Coordinator for training over the compiled artifacts.
+pub struct PjrtTrainer<'rt> {
+    runtime: &'rt Runtime,
+    config: TrainConfig,
+    /// `Some` → McKernel path; `None` → LR baseline path.
+    map: Option<Arc<McKernel>>,
+    /// Prefetch depth (batches in flight).
+    pub prefetch_depth: usize,
+}
+
+impl<'rt> PjrtTrainer<'rt> {
+    pub fn new(runtime: &'rt Runtime, config: TrainConfig, map: Option<Arc<McKernel>>) -> Self {
+        PjrtTrainer { runtime, config, map, prefetch_depth: 4 }
+    }
+
+    fn featurizer_name(&self) -> &'static str {
+        if self.map.is_some() {
+            "mckernel-pjrt"
+        } else {
+            "identity-pjrt"
+        }
+    }
+
+    /// Train on `train`, evaluating on `test`; returns the learned
+    /// host-side model + per-epoch history.
+    pub fn fit(&self, train: &Arc<Dataset>, test: &Dataset) -> Result<(SoftmaxRegression, TrainReport)> {
+        let featurizer = if self.map.is_some() { "mckernel" } else { "identity" };
+        let mut step = TrainStep::new(self.runtime, featurizer, self.map.as_deref())?;
+        let predictor = Predictor::new(self.runtime, featurizer, self.map.as_deref())?;
+        anyhow::ensure!(
+            step.entry().batch == self.config.batch_size,
+            "artifact batch {} != configured batch {} (regenerate artifacts)",
+            step.entry().batch,
+            self.config.batch_size
+        );
+        let mut history = Vec::with_capacity(self.config.epochs);
+        for epoch in 0..self.config.epochs {
+            let t0 = Instant::now();
+            // PJRT graphs are fixed-shape: drop the ragged tail batch.
+            let prefetch = Prefetcher::spawn(
+                Arc::clone(train),
+                self.config.batch_size,
+                self.config.seed,
+                epoch,
+                self.prefetch_depth,
+                true,
+                None, // featurization happens in-graph
+            );
+            let mut loss_sum = 0.0f64;
+            let mut batches = 0usize;
+            for fb in prefetch.iter() {
+                let loss = step.step(&fb.features, &fb.labels, self.config.sgd.lr)?;
+                loss_sum += loss as f64;
+                batches += 1;
+            }
+            let model = step.export_model()?;
+            let test_acc = if self.config.eval_every_epoch || epoch + 1 == self.config.epochs {
+                self.evaluate_with(&predictor, &model, test)?
+            } else {
+                f64::NAN
+            };
+            let rec = EpochRecord {
+                epoch,
+                train_loss: loss_sum / batches.max(1) as f64,
+                train_accuracy: f64::NAN, // not tracked on-device
+                test_accuracy: test_acc,
+                seconds: t0.elapsed().as_secs_f64(),
+            };
+            if self.config.verbose {
+                eprintln!(
+                    "[{}] epoch {:>3}  loss {:.4}  test-acc {:.4}  ({:.2}s)",
+                    self.featurizer_name(),
+                    rec.epoch,
+                    rec.train_loss,
+                    rec.test_accuracy,
+                    rec.seconds
+                );
+            }
+            history.push(rec);
+        }
+        let model = step.export_model()?;
+        let final_test_accuracy = history.last().map(|r| r.test_accuracy).unwrap_or(f64::NAN);
+        Ok((
+            model.clone(),
+            TrainReport {
+                history,
+                final_test_accuracy,
+                param_count: model.param_count(),
+                featurizer: self.featurizer_name(),
+            },
+        ))
+    }
+
+    /// Evaluate `model` on `data` through the compiled predictor.
+    pub fn evaluate(&self, model: &SoftmaxRegression, data: &Dataset) -> Result<f64> {
+        let featurizer = if self.map.is_some() { "mckernel" } else { "identity" };
+        let predictor = Predictor::new(self.runtime, featurizer, self.map.as_deref())?;
+        self.evaluate_with(&predictor, model, data)
+    }
+
+    fn evaluate_with(
+        &self,
+        predictor: &Predictor,
+        model: &SoftmaxRegression,
+        data: &Dataset,
+    ) -> Result<f64> {
+        let eval_batch = predictor.entry().batch;
+        let batcher = Batcher::new(eval_batch, 0).sequential();
+        let mut preds = Vec::with_capacity(data.len());
+        for batch in batcher.epoch(data, 0) {
+            preds.extend(predictor.predict(model, &batch.images)?);
+        }
+        Ok(accuracy(&preds, data.labels()))
+    }
+}

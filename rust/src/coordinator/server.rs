@@ -1,0 +1,286 @@
+//! Dynamic-batching feature server — the paper's "drop-in generator of
+//! features for linear methods where attributes are generated
+//! on-the-fly" (§1), coordinated vLLM-router-style: clients submit
+//! single vectors, the server coalesces them into batches (size- or
+//! deadline-triggered), featurizes once per batch, and scatters the
+//! rows back to the callers.
+
+use crate::mckernel::McKernel;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// One in-flight request.
+struct Request {
+    x: Vec<f32>,
+    reply: Sender<Vec<f32>>,
+}
+
+/// Channel message: a job, or the shutdown poison pill (so `shutdown`
+/// terminates the loop even while client handles are still alive).
+enum Msg {
+    Job(Request),
+    Shutdown,
+}
+
+/// Server throughput/latency counters.
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    /// Sum of batch sizes (for mean batch occupancy).
+    pub batched_rows: AtomicU64,
+}
+
+impl ServerStats {
+    /// Mean rows per executed batch.
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batched_rows.load(Ordering::Relaxed) as f64 / b as f64
+    }
+}
+
+/// Handle to a running feature server.
+pub struct FeatureServer {
+    tx: Option<Sender<Msg>>,
+    handle: Option<JoinHandle<()>>,
+    stats: Arc<ServerStats>,
+    input_dim: usize,
+    feature_dim: usize,
+}
+
+impl FeatureServer {
+    /// Start the server thread.
+    ///
+    /// * `max_batch`: coalesce at most this many requests per batch.
+    /// * `max_wait`: flush a partial batch after this deadline.
+    pub fn start(map: Arc<McKernel>, max_batch: usize, max_wait: Duration) -> FeatureServer {
+        assert!(max_batch > 0);
+        let (tx, rx) = channel::<Msg>();
+        let stats = Arc::new(ServerStats::default());
+        let stats2 = Arc::clone(&stats);
+        let input_dim = map.input_dim();
+        let feature_dim = map.feature_dim();
+        let handle = std::thread::Builder::new()
+            .name("mckernel-feature-server".into())
+            .spawn(move || Self::serve(map, rx, max_batch, max_wait, stats2))
+            .expect("spawn server thread");
+        FeatureServer { tx: Some(tx), handle: Some(handle), stats, input_dim, feature_dim }
+    }
+
+    /// The batching event loop.
+    fn serve(
+        map: Arc<McKernel>,
+        rx: Receiver<Msg>,
+        max_batch: usize,
+        max_wait: Duration,
+        stats: Arc<ServerStats>,
+    ) {
+        let mut scratch = map.make_scratch();
+        let mut shutting_down = false;
+        loop {
+            // Block for the first request of a batch.
+            let first = match rx.recv() {
+                Ok(Msg::Job(r)) => r,
+                Ok(Msg::Shutdown) | Err(_) => return,
+            };
+            let mut pending = vec![first];
+            let deadline = Instant::now() + max_wait;
+            // Coalesce until full or deadline.
+            while pending.len() < max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(Msg::Job(r)) => pending.push(r),
+                    Ok(Msg::Shutdown) => {
+                        shutting_down = true;
+                        break;
+                    }
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            stats.batches.fetch_add(1, Ordering::Relaxed);
+            stats
+                .batched_rows
+                .fetch_add(pending.len() as u64, Ordering::Relaxed);
+            // Featurize the coalesced batch row by row (shared scratch:
+            // the win is amortized dispatch + warm caches).
+            for req in pending {
+                let mut out = vec![0.0f32; map.feature_dim()];
+                map.transform_into(&req.x, &mut out, &mut scratch);
+                stats.requests.fetch_add(1, Ordering::Relaxed);
+                let _ = req.reply.send(out); // client may have left
+            }
+            if shutting_down {
+                return;
+            }
+        }
+    }
+
+    /// Expected input width.
+    pub fn input_dim(&self) -> usize {
+        self.input_dim
+    }
+
+    /// Produced feature width.
+    pub fn feature_dim(&self) -> usize {
+        self.feature_dim
+    }
+
+    /// Counters.
+    pub fn stats(&self) -> &ServerStats {
+        &self.stats
+    }
+
+    /// Synchronous call: featurize one vector.
+    pub fn transform(&self, x: Vec<f32>) -> Option<Vec<f32>> {
+        assert_eq!(x.len(), self.input_dim, "input width");
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .as_ref()?
+            .send(Msg::Job(Request { x, reply: reply_tx }))
+            .ok()?;
+        reply_rx.recv().ok()
+    }
+
+    /// A cloneable client handle usable from other threads.
+    pub fn client(&self) -> FeatureClient {
+        FeatureClient {
+            tx: self.tx.as_ref().expect("server running").clone(),
+            input_dim: self.input_dim,
+        }
+    }
+
+    /// Stop the server (drains requests already queued ahead of the
+    /// poison pill; safe even while client handles are still alive).
+    pub fn shutdown(mut self) {
+        if let Some(tx) = self.tx.take() {
+            let _ = tx.send(Msg::Shutdown);
+        }
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for FeatureServer {
+    fn drop(&mut self) {
+        if let Some(tx) = self.tx.take() {
+            let _ = tx.send(Msg::Shutdown);
+        }
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Cheap cloneable submission handle.
+#[derive(Clone)]
+pub struct FeatureClient {
+    tx: Sender<Msg>,
+    input_dim: usize,
+}
+
+impl FeatureClient {
+    /// Synchronous featurize (None if the server shut down).
+    pub fn transform(&self, x: Vec<f32>) -> Option<Vec<f32>> {
+        assert_eq!(x.len(), self.input_dim, "input width");
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(Msg::Job(Request { x, reply: reply_tx }))
+            .ok()?;
+        reply_rx.recv().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mckernel::McKernelFactory;
+
+    fn server(max_batch: usize) -> FeatureServer {
+        let map = Arc::new(McKernelFactory::new(16).expansions(1).seed(4).build());
+        FeatureServer::start(map, max_batch, Duration::from_millis(2))
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let s = server(8);
+        let x: Vec<f32> = (0..16).map(|i| i as f32 * 0.1).collect();
+        let f = s.transform(x.clone()).unwrap();
+        assert_eq!(f.len(), s.feature_dim());
+        // must equal the direct map output
+        let map = McKernelFactory::new(16).expansions(1).seed(4).build();
+        assert_eq!(f, map.transform(&x));
+        s.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_get_correct_rows() {
+        let s = server(4);
+        let client = s.client();
+        let map = Arc::new(McKernelFactory::new(16).expansions(1).seed(4).build());
+        let handles: Vec<_> = (0..12)
+            .map(|k| {
+                let c = client.clone();
+                let m = Arc::clone(&map);
+                std::thread::spawn(move || {
+                    let x: Vec<f32> = (0..16).map(|i| (i + k) as f32 * 0.3).collect();
+                    let got = c.transform(x.clone()).unwrap();
+                    assert_eq!(got, m.transform(&x), "client {k}");
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.stats().requests.load(Ordering::Relaxed), 12);
+        assert!(s.stats().batches.load(Ordering::Relaxed) <= 12);
+        s.shutdown();
+    }
+
+    #[test]
+    fn batching_actually_coalesces() {
+        let s = server(16);
+        let client = s.client();
+        // Burst of 16 concurrent requests with a 2ms window: expect
+        // far fewer than 16 batches.
+        let handles: Vec<_> = (0..16)
+            .map(|k| {
+                let c = client.clone();
+                std::thread::spawn(move || {
+                    let x: Vec<f32> = (0..16).map(|i| (i * k) as f32).collect();
+                    c.transform(x).unwrap();
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let batches = s.stats().batches.load(Ordering::Relaxed);
+        assert!(batches < 16, "no coalescing happened: {batches} batches");
+        assert!(s.stats().mean_batch_size() > 1.0);
+        s.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_clean_with_no_requests() {
+        let s = server(2);
+        s.shutdown();
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_width_rejected() {
+        let s = server(2);
+        let _ = s.transform(vec![0.0; 3]);
+    }
+}

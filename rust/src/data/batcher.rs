@@ -1,0 +1,186 @@
+//! Mini-batch iteration with deterministic per-epoch shuffling — the
+//! paper's mini-batch SGD setting (§7, §9; batch size 10 in the
+//! figures).
+
+use super::dataset::Dataset;
+use crate::hash::hash_rng::streams;
+use crate::hash::HashRng;
+use crate::linalg::Matrix;
+use crate::rand::fisher_yates::random_permutation;
+
+/// One mini-batch: a dense `(b, d)` slice of the dataset + labels.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub images: Matrix,
+    pub labels: Vec<u8>,
+    /// Position of this batch within the epoch.
+    pub index: usize,
+}
+
+/// Deterministic shuffling batcher: epoch `e` visits the dataset in
+/// the order of a hash-derived Fisher–Yates permutation of `(seed, e)`.
+#[derive(Debug)]
+pub struct Batcher {
+    batch_size: usize,
+    seed: u64,
+    /// When false, iterate in dataset order (full-batch / eval).
+    shuffle: bool,
+    /// When true, drop the final ragged batch.
+    drop_last: bool,
+}
+
+impl Batcher {
+    /// New shuffling batcher.
+    pub fn new(batch_size: usize, seed: u64) -> Batcher {
+        assert!(batch_size > 0);
+        Batcher { batch_size, seed, shuffle: true, drop_last: false }
+    }
+
+    /// Disable shuffling (evaluation order).
+    pub fn sequential(mut self) -> Batcher {
+        self.shuffle = false;
+        self
+    }
+
+    /// Drop the final ragged batch.
+    pub fn drop_last(mut self) -> Batcher {
+        self.drop_last = true;
+        self
+    }
+
+    /// Number of batches per epoch over `n` samples.
+    pub fn batches_per_epoch(&self, n: usize) -> usize {
+        if self.drop_last {
+            n / self.batch_size
+        } else {
+            n.div_ceil(self.batch_size)
+        }
+    }
+
+    /// Materialize the batches of `epoch` over `data`.
+    pub fn epoch<'d>(&self, data: &'d Dataset, epoch: usize) -> BatchIter<'d> {
+        let n = data.len();
+        let order: Vec<u32> = if self.shuffle {
+            let mut rng = HashRng::new(self.seed, streams::SHUFFLE).derive(epoch as u64);
+            random_permutation(n, &mut rng)
+        } else {
+            (0..n as u32).collect()
+        };
+        BatchIter {
+            data,
+            order,
+            batch_size: self.batch_size,
+            drop_last: self.drop_last,
+            cursor: 0,
+            index: 0,
+        }
+    }
+}
+
+/// Iterator over one epoch's batches.
+pub struct BatchIter<'d> {
+    data: &'d Dataset,
+    order: Vec<u32>,
+    batch_size: usize,
+    drop_last: bool,
+    cursor: usize,
+    index: usize,
+}
+
+impl Iterator for BatchIter<'_> {
+    type Item = Batch;
+
+    fn next(&mut self) -> Option<Batch> {
+        let n = self.order.len();
+        if self.cursor >= n {
+            return None;
+        }
+        let end = (self.cursor + self.batch_size).min(n);
+        if self.drop_last && end - self.cursor < self.batch_size {
+            return None;
+        }
+        let idxs = &self.order[self.cursor..end];
+        let d = self.data.dim();
+        let mut images = Matrix::zeros(idxs.len(), d);
+        let mut labels = Vec::with_capacity(idxs.len());
+        for (r, &i) in idxs.iter().enumerate() {
+            images.row_mut(r).copy_from_slice(self.data.images().row(i as usize));
+            labels.push(self.data.labels()[i as usize]);
+        }
+        let batch = Batch { images, labels, index: self.index };
+        self.cursor = end;
+        self.index += 1;
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticSpec;
+
+    fn data(n: usize) -> Dataset {
+        Dataset::synthetic(7, &SyntheticSpec::mnist(), "train", n)
+    }
+
+    #[test]
+    fn covers_every_sample_exactly_once() {
+        let d = data(53);
+        let b = Batcher::new(10, 1);
+        let mut seen = vec![0u32; 53];
+        for batch in b.epoch(&d, 0) {
+            for r in 0..batch.images.rows() {
+                // match rows back to dataset by exhaustive comparison
+                let row = batch.images.row(r);
+                let i = (0..53).find(|&i| d.images().row(i) == row).unwrap();
+                seen[i] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "{seen:?}");
+    }
+
+    #[test]
+    fn batch_count_and_ragged_tail() {
+        let d = data(53);
+        let b = Batcher::new(10, 1);
+        assert_eq!(b.batches_per_epoch(53), 6);
+        let batches: Vec<_> = b.epoch(&d, 0).collect();
+        assert_eq!(batches.len(), 6);
+        assert_eq!(batches[5].images.rows(), 3);
+        let dropping = Batcher::new(10, 1).drop_last();
+        assert_eq!(dropping.batches_per_epoch(53), 5);
+        assert_eq!(dropping.epoch(&d, 0).count(), 5);
+    }
+
+    #[test]
+    fn epochs_shuffle_differently_but_deterministically() {
+        let d = data(40);
+        let b = Batcher::new(40, 9);
+        let e0: Vec<u8> = b.epoch(&d, 0).next().unwrap().labels;
+        let e0_again: Vec<u8> = b.epoch(&d, 0).next().unwrap().labels;
+        let e1: Vec<u8> = b.epoch(&d, 1).next().unwrap().labels;
+        assert_eq!(e0, e0_again);
+        assert_ne!(e0, e1);
+    }
+
+    #[test]
+    fn sequential_preserves_order() {
+        let d = data(25);
+        let b = Batcher::new(25, 0).sequential();
+        let batch = b.epoch(&d, 3).next().unwrap();
+        assert_eq!(batch.labels, d.labels());
+    }
+
+    #[test]
+    fn labels_travel_with_rows() {
+        let d = data(30);
+        let b = Batcher::new(7, 2);
+        for batch in b.epoch(&d, 5) {
+            for r in 0..batch.images.rows() {
+                let row = batch.images.row(r);
+                let i = (0..30).find(|&i| d.images().row(i) == row).unwrap();
+                assert_eq!(batch.labels[r], d.labels()[i]);
+            }
+        }
+    }
+}

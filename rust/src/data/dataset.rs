@@ -1,0 +1,206 @@
+//! In-memory labelled dataset: images as normalized f32 rows.
+
+use super::idx::IdxU8;
+use super::synthetic::{self, SyntheticSpec, CLASSES, PIXELS};
+use crate::linalg::Matrix;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// A labelled dataset: `(n, d)` feature matrix (pixels normalized to
+/// `[0,1]`) + class labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    images: Matrix,
+    labels: Vec<u8>,
+    classes: usize,
+}
+
+impl Dataset {
+    /// Build from raw parts.
+    pub fn new(images: Matrix, labels: Vec<u8>, classes: usize) -> Dataset {
+        assert_eq!(images.rows(), labels.len(), "image/label count");
+        assert!(labels.iter().all(|&l| (l as usize) < classes), "label out of range");
+        Dataset { images, labels, classes }
+    }
+
+    /// Generate a synthetic split (see [`super::synthetic`]).
+    pub fn synthetic(seed: u64, spec: &SyntheticSpec, split: &str, n: usize) -> Dataset {
+        let (raw, labels) = synthetic::generate(seed, spec, split, n);
+        let images = Matrix::from_vec(
+            n,
+            PIXELS,
+            raw.iter().map(|&b| b as f32 / 255.0).collect(),
+        );
+        Dataset { images, labels, classes: CLASSES }
+    }
+
+    /// Load an MNIST-format pair of IDX files
+    /// (`images`: `[n, 28, 28]` u8, `labels`: `[n]` u8).
+    pub fn from_idx_files<P: AsRef<Path>>(images_path: P, labels_path: P) -> Result<Dataset> {
+        let img = IdxU8::read_file(&images_path).context("images file")?;
+        let lab = IdxU8::read_file(&labels_path).context("labels file")?;
+        if img.dims.len() != 3 {
+            bail!("expected 3-dim image tensor, got {:?}", img.dims);
+        }
+        if lab.dims.len() != 1 {
+            bail!("expected 1-dim label tensor, got {:?}", lab.dims);
+        }
+        if img.items() != lab.items() {
+            bail!("image/label count mismatch: {} vs {}", img.items(), lab.items());
+        }
+        let d = img.item_size();
+        let images = Matrix::from_vec(
+            img.items(),
+            d,
+            img.data.iter().map(|&b| b as f32 / 255.0).collect(),
+        );
+        let classes = lab.data.iter().copied().max().unwrap_or(0) as usize + 1;
+        Ok(Dataset { images, labels: lab.data, classes })
+    }
+
+    /// Write this dataset out as the IDX pair (for interchange with
+    /// the Python compile path and external tools).
+    pub fn write_idx_files<P: AsRef<Path>>(&self, images_path: P, labels_path: P) -> Result<()> {
+        let side = (self.dim() as f64).sqrt() as usize;
+        assert_eq!(side * side, self.dim(), "non-square images");
+        let img = IdxU8 {
+            dims: vec![self.len(), side, side],
+            data: self
+                .images
+                .data()
+                .iter()
+                .map(|&v| (v * 255.0).round().clamp(0.0, 255.0) as u8)
+                .collect(),
+        };
+        let lab = IdxU8 { dims: vec![self.len()], data: self.labels.clone() };
+        img.write_file(images_path)?;
+        lab.write_file(labels_path)?;
+        Ok(())
+    }
+
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.images.rows()
+    }
+
+    /// True if no samples.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Feature dimension (pixels).
+    pub fn dim(&self) -> usize {
+        self.images.cols()
+    }
+
+    /// Number of classes.
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    /// Feature matrix.
+    pub fn images(&self) -> &Matrix {
+        &self.images
+    }
+
+    /// Labels.
+    pub fn labels(&self) -> &[u8] {
+        &self.labels
+    }
+
+    /// Sample `i` as `(row, label)`.
+    pub fn sample(&self, i: usize) -> (&[f32], u8) {
+        (self.images.row(i), self.labels[i])
+    }
+
+    /// First `n` samples as a new dataset (paper Figure 3 rounds the
+    /// train/test sizes to powers of two).
+    pub fn take(&self, n: usize) -> Dataset {
+        assert!(n <= self.len());
+        let images = Matrix::from_vec(
+            n,
+            self.dim(),
+            self.images.data()[..n * self.dim()].to_vec(),
+        );
+        Dataset { images, labels: self.labels[..n].to_vec(), classes: self.classes }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset::synthetic(1, &SyntheticSpec::mnist(), "train", 30)
+    }
+
+    #[test]
+    fn synthetic_shape() {
+        let d = tiny();
+        assert_eq!(d.len(), 30);
+        assert_eq!(d.dim(), 784);
+        assert_eq!(d.classes(), 10);
+        assert!(!d.is_empty());
+    }
+
+    #[test]
+    fn pixels_normalized() {
+        let d = tiny();
+        assert!(d.images().data().iter().all(|&v| (0.0..=1.0).contains(&v)));
+        // and not all zero
+        assert!(d.images().data().iter().any(|&v| v > 0.3));
+    }
+
+    #[test]
+    fn sample_accessor() {
+        let d = tiny();
+        let (row, label) = d.sample(3);
+        assert_eq!(row.len(), 784);
+        assert!((label as usize) < 10);
+        assert_eq!(row, d.images().row(3));
+    }
+
+    #[test]
+    fn take_prefix() {
+        let d = tiny();
+        let t = d.take(10);
+        assert_eq!(t.len(), 10);
+        assert_eq!(t.images().row(5), d.images().row(5));
+        assert_eq!(t.labels()[..], d.labels()[..10]);
+    }
+
+    #[test]
+    fn idx_roundtrip_through_files() {
+        let d = tiny();
+        let dir = std::env::temp_dir().join("mckernel_ds_test");
+        let ip = dir.join("img.idx");
+        let lp = dir.join("lab.idx");
+        d.write_idx_files(&ip, &lp).unwrap();
+        let back = Dataset::from_idx_files(&ip, &lp).unwrap();
+        assert_eq!(back.len(), d.len());
+        assert_eq!(back.dim(), d.dim());
+        assert_eq!(back.labels(), d.labels());
+        // round-trip through u8 quantization: max error 0.5/255
+        for (a, b) in back.images().data().iter().zip(d.images().data()) {
+            assert!((a - b).abs() <= 0.5 / 255.0 + 1e-6);
+        }
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn rejects_mismatched_idx() {
+        let dir = std::env::temp_dir().join("mckernel_ds_bad");
+        let ip = dir.join("img.idx");
+        let lp = dir.join("lab.idx");
+        IdxU8 { dims: vec![2, 28, 28], data: vec![0; 2 * 784] }.write_file(&ip).unwrap();
+        IdxU8 { dims: vec![3], data: vec![0; 3] }.write_file(&lp).unwrap();
+        assert!(Dataset::from_idx_files(&ip, &lp).is_err());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    #[should_panic]
+    fn label_range_checked() {
+        Dataset::new(Matrix::zeros(1, 4), vec![7], 3);
+    }
+}

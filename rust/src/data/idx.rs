@@ -1,0 +1,172 @@
+//! IDX file format (the MNIST container: Y. LeCun's format).
+//!
+//! Layout: big-endian magic `0x00 0x00 <dtype> <ndim>`, then `ndim`
+//! u32 dimension sizes, then the payload. We support the two dtypes
+//! the MNIST family uses: `0x08` (unsigned byte) for both images
+//! (ndim 3) and labels (ndim 1). The loader accepts real MNIST /
+//! FASHION-MNIST files when the user has them; the synthetic
+//! generator writes the same format so the whole pipeline is
+//! format-identical to the paper's inputs.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// A parsed IDX tensor of unsigned bytes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IdxU8 {
+    /// Dimension sizes (e.g. `[60000, 28, 28]` for MNIST images).
+    pub dims: Vec<usize>,
+    /// Row-major payload.
+    pub data: Vec<u8>,
+}
+
+const DTYPE_U8: u8 = 0x08;
+
+impl IdxU8 {
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Number of items along the first axis.
+    pub fn items(&self) -> usize {
+        *self.dims.first().unwrap_or(&0)
+    }
+
+    /// Elements per item (product of trailing dims).
+    pub fn item_size(&self) -> usize {
+        self.dims.iter().skip(1).product()
+    }
+
+    /// Parse from a reader.
+    pub fn read_from<R: Read>(mut r: R) -> Result<IdxU8> {
+        let mut head = [0u8; 4];
+        r.read_exact(&mut head).context("IDX header")?;
+        if head[0] != 0 || head[1] != 0 {
+            bail!("bad IDX magic: {:02x}{:02x}", head[0], head[1]);
+        }
+        if head[2] != DTYPE_U8 {
+            bail!("unsupported IDX dtype 0x{:02x} (only u8 supported)", head[2]);
+        }
+        let ndim = head[3] as usize;
+        if ndim == 0 || ndim > 4 {
+            bail!("unreasonable IDX ndim {ndim}");
+        }
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            let mut b = [0u8; 4];
+            r.read_exact(&mut b).context("IDX dims")?;
+            dims.push(u32::from_be_bytes(b) as usize);
+        }
+        let total: usize = dims.iter().product();
+        if total > 1 << 31 {
+            bail!("IDX payload too large: {total} elements");
+        }
+        let mut data = vec![0u8; total];
+        r.read_exact(&mut data).context("IDX payload")?;
+        Ok(IdxU8 { dims, data })
+    }
+
+    /// Load from a file path.
+    pub fn read_file<P: AsRef<Path>>(path: P) -> Result<IdxU8> {
+        let f = std::fs::File::open(&path)
+            .with_context(|| format!("open {}", path.as_ref().display()))?;
+        IdxU8::read_from(std::io::BufReader::new(f))
+    }
+
+    /// Serialize to a writer.
+    pub fn write_to<W: Write>(&self, mut w: W) -> Result<()> {
+        assert_eq!(self.data.len(), self.len(), "dims/payload mismatch");
+        assert!(self.dims.len() <= 4 && !self.dims.is_empty());
+        w.write_all(&[0, 0, DTYPE_U8, self.dims.len() as u8])?;
+        for &d in &self.dims {
+            w.write_all(&(d as u32).to_be_bytes())?;
+        }
+        w.write_all(&self.data)?;
+        Ok(())
+    }
+
+    /// Write to a file path.
+    pub fn write_file<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let f = std::fs::File::create(&path)
+            .with_context(|| format!("create {}", path.as_ref().display()))?;
+        self.write_to(std::io::BufWriter::new(f))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_images() {
+        let idx = IdxU8 {
+            dims: vec![3, 4, 5],
+            data: (0..60).map(|i| (i * 3) as u8).collect(),
+        };
+        let mut buf = Vec::new();
+        idx.write_to(&mut buf).unwrap();
+        let back = IdxU8::read_from(&buf[..]).unwrap();
+        assert_eq!(idx, back);
+        assert_eq!(back.items(), 3);
+        assert_eq!(back.item_size(), 20);
+    }
+
+    #[test]
+    fn roundtrip_labels() {
+        let idx = IdxU8 { dims: vec![7], data: vec![0, 1, 2, 3, 4, 5, 6] };
+        let mut buf = Vec::new();
+        idx.write_to(&mut buf).unwrap();
+        let back = IdxU8::read_from(&buf[..]).unwrap();
+        assert_eq!(idx, back);
+        assert_eq!(back.item_size(), 1);
+    }
+
+    #[test]
+    fn header_layout_matches_mnist_spec() {
+        let idx = IdxU8 { dims: vec![2, 28, 28], data: vec![0; 2 * 28 * 28] };
+        let mut buf = Vec::new();
+        idx.write_to(&mut buf).unwrap();
+        // magic for u8 3-dim: 00 00 08 03
+        assert_eq!(&buf[..4], &[0, 0, 8, 3]);
+        // first dim big-endian = 2
+        assert_eq!(&buf[4..8], &[0, 0, 0, 2]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(IdxU8::read_from(&[1, 2, 3, 4][..]).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_dtype() {
+        // dtype 0x0D (float) unsupported
+        let buf = [0u8, 0, 0x0D, 1, 0, 0, 0, 0];
+        assert!(IdxU8::read_from(&buf[..]).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_payload() {
+        let buf = [0u8, 0, 8, 1, 0, 0, 0, 10, 1, 2, 3]; // says 10, has 3
+        assert!(IdxU8::read_from(&buf[..]).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("mckernel_idx_test");
+        let path = dir.join("t.idx");
+        let idx = IdxU8 { dims: vec![2, 3], data: vec![9; 6] };
+        idx.write_file(&path).unwrap();
+        assert_eq!(IdxU8::read_file(&path).unwrap(), idx);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,12 @@
+//! Dataset substrate: the IDX (MNIST) container format, deterministic
+//! synthetic MNIST/FASHION-MNIST generators (the data substitution —
+//! see DESIGN.md §5), and mini-batch iteration.
+
+pub mod batcher;
+pub mod dataset;
+pub mod idx;
+pub mod synthetic;
+
+pub use batcher::Batcher;
+pub use dataset::Dataset;
+pub use synthetic::{generate, SyntheticSpec};

@@ -1,0 +1,306 @@
+//! Deterministic synthetic MNIST / FASHION-MNIST generators.
+//!
+//! **Substitution note (DESIGN.md §5):** real MNIST downloads are not
+//! reachable in this environment, so experiments run on synthetic
+//! 28×28 ten-class data that exercises the identical code path (IDX
+//! tensors → pad to 1024 → feature map → SGD) and preserves the
+//! evaluation's qualitative structure: classes are *multi-modal* blob
+//! compositions, so they are not linearly separable and a kernel
+//! expansion visibly outperforms plain logistic regression — the
+//! paper's Figures 3–5 comparison shape. Real IDX files are accepted
+//! wherever synthetic data is used (`--data-dir`).
+//!
+//! Generation model, all randomness hash-derived from `(seed, split,
+//! index)` so train/test are disjoint deterministic streams:
+//!
+//! * each `(class, mode)` has a prototype: `blobs` Gaussian bumps with
+//!   hash-random centers/widths/amplitudes;
+//! * each sample picks a mode, jitters every blob center (class-
+//!   conditional deformation ≈ MNIST stroke variation), applies a
+//!   global translation, adds pixel noise, clips to `[0, 255]`.
+//!
+//! The FASHION variant uses more modes, wider blobs, shared
+//! cross-class background texture and stronger noise — measurably
+//! harder, as FASHION-MNIST is relative to MNIST.
+
+use crate::hash::hash_rng::streams;
+use crate::hash::HashRng;
+use crate::rand::BoxMuller;
+
+/// Image side (MNIST geometry).
+pub const SIDE: usize = 28;
+/// Pixels per image.
+pub const PIXELS: usize = SIDE * SIDE;
+/// Number of classes.
+pub const CLASSES: usize = 10;
+
+/// Generator parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SyntheticSpec {
+    /// Prototype modes per class (multi-modality → non-linearity).
+    pub modes: usize,
+    /// Gaussian bumps per prototype.
+    pub blobs: usize,
+    /// Per-blob center jitter (pixels, std-dev).
+    pub jitter: f64,
+    /// Global translation range (pixels, uniform ±).
+    pub shift: i64,
+    /// Additive pixel noise std-dev (0–255 scale).
+    pub noise: f64,
+    /// Blob width range (pixels).
+    pub width: (f64, f64),
+    /// Cross-class shared background amplitude (0 disables).
+    pub background: f64,
+}
+
+impl SyntheticSpec {
+    /// MNIST-like: compact strokes, moderate variation.
+    pub fn mnist() -> SyntheticSpec {
+        SyntheticSpec {
+            modes: 3,
+            blobs: 6,
+            jitter: 1.0,
+            shift: 2,
+            noise: 12.0,
+            width: (1.3, 2.6),
+            background: 0.0,
+        }
+    }
+
+    /// FASHION-MNIST-like: larger shapes, more modes, shared texture,
+    /// heavier noise → harder problem (larger LR-vs-kernel gap).
+    pub fn fashion() -> SyntheticSpec {
+        SyntheticSpec {
+            modes: 5,
+            blobs: 9,
+            jitter: 1.6,
+            shift: 2,
+            noise: 22.0,
+            width: (2.0, 4.5),
+            background: 40.0,
+        }
+    }
+
+    /// Look up by dataset name (`mnist` | `fashion`).
+    pub fn by_name(name: &str) -> Option<SyntheticSpec> {
+        match name {
+            "mnist" => Some(SyntheticSpec::mnist()),
+            "fashion" | "fashion-mnist" | "fashion_mnist" => Some(SyntheticSpec::fashion()),
+            _ => None,
+        }
+    }
+}
+
+/// One prototype blob.
+#[derive(Debug, Clone, Copy)]
+struct Blob {
+    cx: f64,
+    cy: f64,
+    w: f64,
+    amp: f64,
+}
+
+/// Deterministic prototype for `(class, mode)`.
+fn prototype(seed: u64, spec: &SyntheticSpec, class: usize, mode: usize) -> Vec<Blob> {
+    let rng = HashRng::new(seed, streams::DATA)
+        .derive(0x5060)
+        .derive(class as u64)
+        .derive(mode as u64);
+    let mut r = rng;
+    (0..spec.blobs)
+        .map(|_| {
+            // keep centers away from the border so shifts stay inside
+            let cx = 5.0 + r.next_f64() * (SIDE as f64 - 10.0);
+            let cy = 5.0 + r.next_f64() * (SIDE as f64 - 10.0);
+            let w = spec.width.0 + r.next_f64() * (spec.width.1 - spec.width.0);
+            let amp = 120.0 + r.next_f64() * 135.0;
+            Blob { cx, cy, w, amp }
+        })
+        .collect()
+}
+
+/// Render sample `index` of `split` ("train"/"test") for `class`.
+fn render(
+    seed: u64,
+    spec: &SyntheticSpec,
+    split_tag: u64,
+    index: u64,
+    class: usize,
+    out: &mut [u8],
+) {
+    debug_assert_eq!(out.len(), PIXELS);
+    let sample_rng = HashRng::new(seed, streams::DATA)
+        .derive(split_tag)
+        .derive(index);
+    let mut r = sample_rng.clone();
+    let mode = r.next_below(spec.modes as u64) as usize;
+    let proto = prototype(seed, spec, class, mode);
+    let mut bm = BoxMuller::new(sample_rng.derive(1));
+    let dx = r.next_range(-spec.shift, spec.shift + 1) as f64;
+    let dy = r.next_range(-spec.shift, spec.shift + 1) as f64;
+    let mut img = [0.0f64; PIXELS];
+
+    // class-shared background texture (fashion only): 2 wide bumps
+    if spec.background > 0.0 {
+        let bg_proto = prototype(seed, spec, CLASSES, mode % 2); // pseudo-class
+        for b in bg_proto.iter().take(2) {
+            splat(&mut img, b.cx, b.cy, b.w * 2.0, spec.background);
+        }
+    }
+    for b in &proto {
+        let cx = b.cx + dx + bm.next() * spec.jitter;
+        let cy = b.cy + dy + bm.next() * spec.jitter;
+        let amp = b.amp * (0.85 + 0.3 * r.next_f64());
+        splat(&mut img, cx, cy, b.w, amp);
+    }
+    // pixel noise + clip
+    let mut noise = BoxMuller::new(sample_rng.derive(2));
+    for (o, v) in out.iter_mut().zip(img.iter()) {
+        let n = noise.next() * spec.noise;
+        *o = (v + n).clamp(0.0, 255.0) as u8;
+    }
+}
+
+/// Add a Gaussian bump to the accumulator (3σ support window).
+fn splat(img: &mut [f64; PIXELS], cx: f64, cy: f64, w: f64, amp: f64) {
+    let r = (3.0 * w).ceil() as i64;
+    let x0 = ((cx as i64) - r).max(0);
+    let x1 = ((cx as i64) + r).min(SIDE as i64 - 1);
+    let y0 = ((cy as i64) - r).max(0);
+    let y1 = ((cy as i64) + r).min(SIDE as i64 - 1);
+    let inv = 1.0 / (2.0 * w * w);
+    for y in y0..=y1 {
+        for x in x0..=x1 {
+            let d2 = (x as f64 - cx).powi(2) + (y as f64 - cy).powi(2);
+            img[y as usize * SIDE + x as usize] += amp * (-d2 * inv).exp();
+        }
+    }
+}
+
+/// Generate `n` samples for `split` ("train" or "test"): returns
+/// `(images, labels)` with images as `n × 784` u8 rows. Labels cycle
+/// through classes in hash-shuffled order (balanced to ±1).
+pub fn generate(seed: u64, spec: &SyntheticSpec, split: &str, n: usize) -> (Vec<u8>, Vec<u8>) {
+    let split_tag = match split {
+        "train" => 0x7121u64,
+        "test" => 0x7e57u64,
+        other => crate::hash::murmur3::murmur3_x64_128(other.as_bytes(), seed).0,
+    };
+    let mut images = vec![0u8; n * PIXELS];
+    let mut labels = vec![0u8; n];
+    let label_rng = HashRng::new(seed, streams::DATA).derive(split_tag).derive(0xAB);
+    for i in 0..n {
+        // balanced-ish labels, order hash-shuffled
+        let class = ((i as u64 + label_rng.at(i as u64 / CLASSES as u64) % CLASSES as u64)
+            % CLASSES as u64) as usize;
+        labels[i] = class as u8;
+        render(
+            seed,
+            spec,
+            split_tag,
+            i as u64,
+            class,
+            &mut images[i * PIXELS..(i + 1) * PIXELS],
+        );
+    }
+    (images, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let spec = SyntheticSpec::mnist();
+        let (a, la) = generate(1, &spec, "train", 20);
+        let (b, lb) = generate(1, &spec, "train", 20);
+        assert_eq!(a, b);
+        assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn splits_differ() {
+        let spec = SyntheticSpec::mnist();
+        let (a, _) = generate(1, &spec, "train", 10);
+        let (b, _) = generate(1, &spec, "test", 10);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn labels_roughly_balanced() {
+        let spec = SyntheticSpec::mnist();
+        let (_, labels) = generate(2, &spec, "train", 1000);
+        let mut counts = [0usize; CLASSES];
+        for &l in &labels {
+            counts[l as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((50..=200).contains(&c), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn images_have_signal() {
+        let spec = SyntheticSpec::mnist();
+        let (imgs, _) = generate(3, &spec, "train", 10);
+        for i in 0..10 {
+            let img = &imgs[i * PIXELS..(i + 1) * PIXELS];
+            let mean: f64 = img.iter().map(|&v| v as f64).sum::<f64>() / PIXELS as f64;
+            let max = *img.iter().max().unwrap();
+            assert!(mean > 2.0, "image {i} empty: mean {mean}");
+            assert!(max > 100, "image {i} washed out: max {max}");
+        }
+    }
+
+    #[test]
+    fn same_class_more_similar_than_cross_class() {
+        // Sanity: class structure exists. Average L2 distance between
+        // same-class/same-mode pairs must be below cross-class pairs.
+        let spec = SyntheticSpec::mnist();
+        let n = 400;
+        let (imgs, labels) = generate(4, &spec, "train", n);
+        let img = |i: usize| &imgs[i * PIXELS..(i + 1) * PIXELS];
+        let dist = |a: &[u8], b: &[u8]| -> f64 {
+            a.iter()
+                .zip(b)
+                .map(|(&x, &y)| ((x as f64) - (y as f64)).powi(2))
+                .sum::<f64>()
+                .sqrt()
+        };
+        let mut same = (0.0, 0usize);
+        let mut cross = (0.0, 0usize);
+        for i in 0..n {
+            for j in (i + 1)..n.min(i + 40) {
+                let d = dist(img(i), img(j));
+                if labels[i] == labels[j] {
+                    same = (same.0 + d, same.1 + 1);
+                } else {
+                    cross = (cross.0 + d, cross.1 + 1);
+                }
+            }
+        }
+        let same_mean = same.0 / same.1 as f64;
+        let cross_mean = cross.0 / cross.1 as f64;
+        assert!(
+            same_mean < cross_mean * 0.95,
+            "same {same_mean} cross {cross_mean}"
+        );
+    }
+
+    #[test]
+    fn fashion_is_noisier_than_mnist() {
+        let (m, _) = generate(5, &SyntheticSpec::mnist(), "train", 50);
+        let (f, _) = generate(5, &SyntheticSpec::fashion(), "train", 50);
+        let mean = |v: &[u8]| v.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64;
+        // fashion has background + wider blobs → higher mean intensity
+        assert!(mean(&f) > mean(&m), "fashion {} mnist {}", mean(&f), mean(&m));
+    }
+
+    #[test]
+    fn spec_by_name() {
+        assert_eq!(SyntheticSpec::by_name("mnist"), Some(SyntheticSpec::mnist()));
+        assert_eq!(SyntheticSpec::by_name("fashion"), Some(SyntheticSpec::fashion()));
+        assert_eq!(SyntheticSpec::by_name("imagenet"), None);
+    }
+}

@@ -1,0 +1,58 @@
+//! Textbook in-place radix-2 iterative FWHT (Cooley–Tukey ordering).
+//!
+//! `log₂ n` passes; pass `s` combines elements at stride `s`. Simple
+//! and branch-free, but every pass streams the whole array through the
+//! cache — the deficiency the optimized engine (paper §5) fixes.
+
+/// In-place radix-2 iterative FWHT.
+pub fn fwht(data: &mut [f32]) {
+    let n = data.len();
+    assert!(n.is_power_of_two(), "FWHT length must be a power of two");
+    let mut h = 1;
+    while h < n {
+        let mut base = 0;
+        while base < n {
+            for i in base..base + h {
+                let a = data[i];
+                let b = data[i + h];
+                data[i] = a + b;
+                data[i + h] = a - b;
+            }
+            base += 2 * h;
+        }
+        h *= 2;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fwht::naive;
+
+    #[test]
+    fn matches_naive_many_sizes() {
+        for log_n in 0..=12 {
+            let n = 1usize << log_n;
+            let x: Vec<f32> = (0..n).map(|i| ((i * 97 + 3) % 23) as f32 - 11.0).collect();
+            let mut a = x.clone();
+            let mut b = x;
+            fwht(&mut a);
+            naive::fwht(&mut b);
+            for (u, v) in a.iter().zip(b.iter()) {
+                assert!((u - v).abs() < 1e-3 * v.abs().max(1.0), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn idempotent_scaling() {
+        let n = 1024;
+        let x: Vec<f32> = (0..n).map(|i| (i % 7) as f32).collect();
+        let mut y = x.clone();
+        fwht(&mut y);
+        fwht(&mut y);
+        for (a, b) in y.iter().zip(x.iter()) {
+            assert!((a / n as f32 - b).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,224 @@
+//! Fast Walsh–Hadamard Transform engines (paper §4–5).
+//!
+//! The Walsh–Hadamard matrix is defined recursively (`paper Eq. 10-11`):
+//!
+//! ```text
+//! H_0 = [1],   H_n = [[H_{n-1},  H_{n-1}],
+//!                     [H_{n-1}, -H_{n-1}]]
+//! ```
+//!
+//! `H·c` factors into `log₂ n` butterfly stages (`paper Eq. 12-13`),
+//! giving `O(n log n)` time. Four engines are provided:
+//!
+//! * [`naive`] — `O(n²)` by explicit sign computation (test oracle).
+//! * [`recursive`] — plan-based divide-and-conquer in the style of
+//!   Spiral [Johnson & Püschel 2000]; the paper's comparison baseline.
+//! * [`iterative`] — textbook in-place radix-2 Cooley–Tukey loop.
+//! * [`optimized`] — the paper's contribution, re-created: cache-blocked
+//!   two-phase traversal with unrolled SIMD-friendly codelets
+//!   ("vectorized sums and subtractions … till a small routine Hadamard
+//!   that fits in cache … then doubling on each iteration").
+//!
+//! All engines operate **in place** and compute the *unnormalized*
+//! transform (`H x`, not `H x/√n`); [`crate::mckernel`] folds the
+//! `1/(σ√n)` normalization of Eq. 8 into the calibration diagonal.
+
+pub mod iterative;
+pub mod naive;
+pub mod optimized;
+pub mod recursive;
+
+/// The default engine used by the library hot path.
+pub use optimized::fwht as fwht_fast;
+
+/// Which FWHT engine to run (CLI / bench selectable).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    /// O(n²) oracle.
+    Naive,
+    /// Spiral-like plan-based recursion (comparison baseline).
+    Recursive,
+    /// Plain in-place radix-2 loop.
+    Iterative,
+    /// Cache-blocked, unrolled (the McKernel engine).
+    Optimized,
+}
+
+impl Engine {
+    /// All engines, for sweeps.
+    pub const ALL: [Engine; 4] =
+        [Engine::Naive, Engine::Recursive, Engine::Iterative, Engine::Optimized];
+
+    /// Human name (used by benches and the CLI).
+    pub fn name(self) -> &'static str {
+        match self {
+            Engine::Naive => "naive",
+            Engine::Recursive => "recursive",
+            Engine::Iterative => "iterative",
+            Engine::Optimized => "mckernel",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<Engine> {
+        match s {
+            "naive" => Some(Engine::Naive),
+            "recursive" | "spiral" => Some(Engine::Recursive),
+            "iterative" => Some(Engine::Iterative),
+            "optimized" | "mckernel" => Some(Engine::Optimized),
+            _ => None,
+        }
+    }
+
+    /// Run this engine in place on `data` (`data.len()` must be a
+    /// power of two).
+    pub fn run(self, data: &mut [f32]) {
+        match self {
+            Engine::Naive => naive::fwht(data),
+            Engine::Recursive => recursive::fwht(data),
+            Engine::Iterative => iterative::fwht(data),
+            Engine::Optimized => optimized::fwht(data),
+        }
+    }
+}
+
+/// In-place FWHT with the default (optimized) engine.
+///
+/// # Panics
+/// If `data.len()` is not a power of two.
+pub fn fwht(data: &mut [f32]) {
+    optimized::fwht(data);
+}
+
+/// FWHT of each row of a row-major `(rows, cols)` matrix.
+pub fn fwht_batch(data: &mut [f32], cols: usize) {
+    assert!(cols.is_power_of_two(), "row length must be a power of two");
+    assert_eq!(data.len() % cols, 0);
+    for row in data.chunks_exact_mut(cols) {
+        optimized::fwht(row);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::HashRng;
+
+    fn random_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = HashRng::new(seed, 0xF0);
+        (0..n).map(|_| r.next_f32() * 2.0 - 1.0).collect()
+    }
+
+    #[test]
+    fn all_engines_agree_across_sizes() {
+        for log_n in 0..=13 {
+            let n = 1usize << log_n;
+            let x = random_vec(n, log_n as u64);
+            let mut want = x.clone();
+            naive::fwht(&mut want);
+            for eng in [Engine::Recursive, Engine::Iterative, Engine::Optimized] {
+                let mut got = x.clone();
+                eng.run(&mut got);
+                for (g, w) in got.iter().zip(want.iter()) {
+                    assert!(
+                        (g - w).abs() <= 1e-3 * w.abs().max(1.0),
+                        "{} n={} g={} w={}",
+                        eng.name(),
+                        n,
+                        g,
+                        w
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn involution_up_to_n() {
+        // H(Hx) = n·x
+        for log_n in [0usize, 1, 4, 7, 10] {
+            let n = 1usize << log_n;
+            let x = random_vec(n, 77 + log_n as u64);
+            let mut y = x.clone();
+            fwht(&mut y);
+            fwht(&mut y);
+            for (a, b) in y.iter().zip(x.iter()) {
+                assert!((a / n as f32 - b).abs() < 1e-3, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn parseval_energy() {
+        // ‖Hx‖² = n·‖x‖²
+        let n = 2048;
+        let x = random_vec(n, 9);
+        let e0: f64 = x.iter().map(|v| (*v as f64) * (*v as f64)).sum();
+        let mut y = x;
+        fwht(&mut y);
+        let e1: f64 = y.iter().map(|v| (*v as f64) * (*v as f64)).sum();
+        assert!((e1 / (n as f64 * e0) - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn impulse_gives_constant_row() {
+        // H e_0 = all-ones
+        let n = 512;
+        let mut x = vec![0.0f32; n];
+        x[0] = 1.0;
+        fwht(&mut x);
+        assert!(x.iter().all(|&v| (v - 1.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn linearity() {
+        let n = 256;
+        let a = random_vec(n, 1);
+        let b = random_vec(n, 2);
+        let mut ab: Vec<f32> = a.iter().zip(&b).map(|(x, y)| 2.0 * x + 3.0 * y).collect();
+        let (mut ha, mut hb) = (a, b);
+        fwht(&mut ha);
+        fwht(&mut hb);
+        fwht(&mut ab);
+        for i in 0..n {
+            assert!((ab[i] - (2.0 * ha[i] + 3.0 * hb[i])).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn batch_equals_per_row() {
+        let cols = 128;
+        let rows = 5;
+        let flat = random_vec(rows * cols, 3);
+        let mut batch = flat.clone();
+        fwht_batch(&mut batch, cols);
+        for r in 0..rows {
+            let mut row = flat[r * cols..(r + 1) * cols].to_vec();
+            fwht(&mut row);
+            assert_eq!(&batch[r * cols..(r + 1) * cols], &row[..]);
+        }
+    }
+
+    #[test]
+    fn size_one_is_identity() {
+        let mut x = vec![3.5f32];
+        fwht(&mut x);
+        assert_eq!(x, vec![3.5]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_pow2_panics() {
+        let mut x = vec![0.0f32; 12];
+        fwht(&mut x);
+    }
+
+    #[test]
+    fn engine_parse_roundtrip() {
+        for e in Engine::ALL {
+            assert_eq!(Engine::parse(e.name()), Some(e));
+        }
+        assert_eq!(Engine::parse("spiral"), Some(Engine::Recursive));
+        assert_eq!(Engine::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,90 @@
+//! `O(n²)` Walsh–Hadamard by explicit matrix entries — the correctness
+//! oracle for the fast engines (paper §4: "a naïve implementation
+//! results in complexity O(n²)").
+//!
+//! Entry `(i, j)` of `H_n` is `(-1)^{popcount(i & j)}` (Sylvester
+//! ordering, the same ordering the butterfly engines produce).
+
+/// In-place `O(n²)` Walsh–Hadamard transform.
+pub fn fwht(data: &mut [f32]) {
+    let n = data.len();
+    assert!(n.is_power_of_two(), "FWHT length must be a power of two");
+    let x = data.to_vec();
+    for (i, out) in data.iter_mut().enumerate() {
+        let mut acc = 0.0f64;
+        for (j, &v) in x.iter().enumerate() {
+            if (i & j).count_ones() & 1 == 0 {
+                acc += v as f64;
+            } else {
+                acc -= v as f64;
+            }
+        }
+        *out = acc as f32;
+    }
+}
+
+/// The explicit Hadamard matrix entry `H[i][j] ∈ {+1, -1}`.
+pub fn entry(i: usize, j: usize) -> f32 {
+    if (i & j).count_ones() & 1 == 0 {
+        1.0
+    } else {
+        -1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_recursive_definition_small() {
+        // H_1 = [[1,1],[1,-1]]
+        assert_eq!(entry(0, 0), 1.0);
+        assert_eq!(entry(0, 1), 1.0);
+        assert_eq!(entry(1, 0), 1.0);
+        assert_eq!(entry(1, 1), -1.0);
+        // H_2 block structure: H[2..4][2..4] = -H[0..2][0..2]
+        for i in 0..2 {
+            for j in 0..2 {
+                assert_eq!(entry(i + 2, j + 2), -entry(i, j));
+                assert_eq!(entry(i + 2, j), entry(i, j));
+                assert_eq!(entry(i, j + 2), entry(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn rows_are_orthogonal() {
+        let n = 64;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let dot: f32 = (0..n).map(|k| entry(i, k) * entry(j, k)).sum();
+                assert_eq!(dot, 0.0, "rows {i},{j}");
+            }
+        }
+    }
+
+    #[test]
+    fn transform_of_ones_is_scaled_impulse() {
+        let n = 128;
+        let mut x = vec![1.0f32; n];
+        fwht(&mut x);
+        assert_eq!(x[0], n as f32);
+        assert!(x[1..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn size_two_by_hand() {
+        let mut x = vec![3.0f32, 5.0];
+        fwht(&mut x);
+        assert_eq!(x, vec![8.0, -2.0]);
+    }
+
+    #[test]
+    fn size_four_by_hand() {
+        let mut x = vec![1.0f32, 2.0, 3.0, 4.0];
+        fwht(&mut x);
+        // H_2 · [1,2,3,4] = [10, -2, -4, 0]
+        assert_eq!(x, vec![10.0, -2.0, -4.0, 0.0]);
+    }
+}

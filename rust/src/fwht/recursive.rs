@@ -1,0 +1,161 @@
+//! Plan-based recursive FWHT — the *Spiral-like baseline* of Table 1 /
+//! Figure 2.
+//!
+//! Spiral [Johnson & Püschel 2000] searches over recursive
+//! factorizations ("breakdown trees") of the transform and executes the
+//! chosen plan by straight-line recursion. We reproduce that execution
+//! model: a precomputed [`Plan`] tree describing the split at every
+//! level, walked by a recursive interpreter with a scalar size-≤8 base
+//! codelet. This carries Spiral's structural costs — call/plan-node
+//! overhead per region and no cross-stage cache blocking — which is
+//! precisely what the paper's engine removes. (Spiral's published FWHT
+//! also caps at `n = 2²⁰`; we note but do not impose the cap.)
+
+/// One node of a Spiral-style breakdown tree.
+#[derive(Debug)]
+pub struct Plan {
+    /// Transform size at this node (power of two).
+    pub n: usize,
+    /// `None` for a leaf codelet; `Some((left, right))` for the
+    /// divide-and-conquer split into two half-size transforms.
+    pub children: Option<Box<(Plan, Plan)>>,
+}
+
+/// Leaf codelet size: transforms of ≤ this size run straight-line.
+const LEAF: usize = 8;
+
+impl Plan {
+    /// Build the balanced radix-2 breakdown tree for size `n`
+    /// (Spiral's default FWHT rule `WHT_{2^k} → WHT_2 ⊗ WHT_{2^{k-1}}`
+    /// evaluated as split-in-half recursion).
+    pub fn build(n: usize) -> Plan {
+        assert!(n.is_power_of_two(), "FWHT length must be a power of two");
+        if n <= LEAF {
+            Plan { n, children: None }
+        } else {
+            let half = Plan::build(n / 2);
+            let half2 = Plan::build(n / 2);
+            Plan { n, children: Some(Box::new((half, half2))) }
+        }
+    }
+
+    /// Number of nodes in the plan (bench metadata: Spiral's
+    /// "precompute trees" cost is proportional to this).
+    pub fn node_count(&self) -> usize {
+        1 + self
+            .children
+            .as_ref()
+            .map_or(0, |c| c.0.node_count() + c.1.node_count())
+    }
+
+    /// Execute the plan in place.
+    pub fn execute(&self, data: &mut [f32]) {
+        debug_assert_eq!(data.len(), self.n);
+        match &self.children {
+            None => leaf_codelet(data),
+            Some(c) => {
+                let (lo, hi) = data.split_at_mut(self.n / 2);
+                c.0.execute(lo);
+                c.1.execute(hi);
+                // combine: [lo+hi, lo-hi]  (paper Eq. 12)
+                for (a, b) in lo.iter_mut().zip(hi.iter_mut()) {
+                    let s = *a + *b;
+                    let d = *a - *b;
+                    *a = s;
+                    *b = d;
+                }
+            }
+        }
+    }
+}
+
+/// Straight-line transform for n ∈ {1, 2, 4, 8}.
+fn leaf_codelet(d: &mut [f32]) {
+    match d.len() {
+        1 => {}
+        2 => {
+            let (a, b) = (d[0], d[1]);
+            d[0] = a + b;
+            d[1] = a - b;
+        }
+        4 => {
+            let (a, b, c, e) = (d[0], d[1], d[2], d[3]);
+            let (s0, d0, s1, d1) = (a + b, a - b, c + e, c - e);
+            d[0] = s0 + s1;
+            d[1] = d0 + d1;
+            d[2] = s0 - s1;
+            d[3] = d0 - d1;
+        }
+        8 => {
+            // two size-4 transforms + combine
+            let (lo, hi) = d.split_at_mut(4);
+            leaf_codelet(lo);
+            leaf_codelet(hi);
+            for i in 0..4 {
+                let s = lo[i] + hi[i];
+                let t = lo[i] - hi[i];
+                lo[i] = s;
+                hi[i] = t;
+            }
+        }
+        _ => unreachable!("leaf codelet sizes are 1,2,4,8"),
+    }
+}
+
+/// One-shot plan-build + execute (what the Table 1 baseline times; a
+/// cached-plan variant is exposed for fairness in the bench harness).
+pub fn fwht(data: &mut [f32]) {
+    let plan = Plan::build(data.len());
+    plan.execute(data);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fwht::naive;
+
+    #[test]
+    fn matches_naive() {
+        for log_n in 0..=12 {
+            let n = 1usize << log_n;
+            let x: Vec<f32> = (0..n).map(|i| ((i * 37 + 11) % 17) as f32 - 8.0).collect();
+            let mut a = x.clone();
+            let mut b = x;
+            fwht(&mut a);
+            naive::fwht(&mut b);
+            for (u, v) in a.iter().zip(b.iter()) {
+                assert!((u - v).abs() < 1e-3 * v.abs().max(1.0), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_node_count_grows_linearly() {
+        // Balanced binary tree over n/LEAF leaves → ~2·n/LEAF − 1 nodes.
+        let p = Plan::build(1 << 12);
+        assert_eq!(p.node_count(), 2 * (1 << 12) / LEAF - 1);
+    }
+
+    #[test]
+    fn plan_reuse_is_consistent() {
+        let plan = Plan::build(256);
+        let x: Vec<f32> = (0..256).map(|i| i as f32).collect();
+        let mut a = x.clone();
+        let mut b = x;
+        plan.execute(&mut a);
+        plan.execute(&mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn leaf_sizes_direct() {
+        for n in [1usize, 2, 4, 8] {
+            let x: Vec<f32> = (0..n).map(|i| (i as f32) - 1.5).collect();
+            let mut a = x.clone();
+            let mut b = x;
+            fwht(&mut a);
+            naive::fwht(&mut b);
+            assert_eq!(a, b, "n={n}");
+        }
+    }
+}

@@ -1,0 +1,286 @@
+//! Counter-based deterministic RNG built on MurmurHash3.
+//!
+//! The paper's key operational trick (§3, §7): *never store* random
+//! coefficients — recompute them from `hash(seed, stream, counter)` at
+//! any time, on any machine, in any order. This makes models a few
+//! bytes (a seed), makes training/testing use identical randomness, and
+//! makes distributed workers coefficient-consistent for free.
+//!
+//! `HashRng` is a *random-access* generator: `at(k)` returns the k-th
+//! variate directly, without sequencing, which is exactly what the
+//! diagonal operators `B`, `G`, `C` need ("for each feature dimension,
+//! we only need one floating point number").
+
+use super::murmur3::murmur3_words;
+
+/// Deterministic counter-based RNG: the k-th block of 128 random bits
+/// is `murmur3_x64_128(seed ‖ stream ‖ k)`.
+///
+/// Distinct `stream` values give statistically independent sequences
+/// under the same seed (used to separate B / Π / G / C and the
+/// per-expansion draws).
+#[derive(Debug, Clone)]
+pub struct HashRng {
+    seed: u64,
+    stream: u64,
+    counter: u64,
+    /// one buffered u64 from the last 128-bit hash output
+    spare: Option<u64>,
+}
+
+/// Well-known stream ids for the feature-map operators. Keeping them
+/// in one place guarantees Rust and the AOT-compile path (Python
+/// `python/compile/model.py`) derive identical coefficients.
+pub mod streams {
+    /// Binary ±1 diagonal `B`.
+    pub const BINARY: u64 = 0xB1;
+    /// Permutation `Π` (Fisher–Yates draws).
+    pub const PERMUTATION: u64 = 0x91;
+    /// Gaussian diagonal `G` (Box–Muller pairs).
+    pub const GAUSS: u64 = 0x6A;
+    /// Calibration diagonal `C`.
+    pub const CALIBRATION: u64 = 0xCA;
+    /// Dataset synthesis.
+    pub const DATA: u64 = 0xDA;
+    /// Weight initialization.
+    pub const INIT: u64 = 0x14;
+    /// Mini-batch shuffling.
+    pub const SHUFFLE: u64 = 0x5F;
+}
+
+impl HashRng {
+    /// New generator for `(seed, stream)`; counter starts at 0.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        HashRng { seed, stream, counter: 0, spare: None }
+    }
+
+    /// Sub-stream derivation: a new independent generator obtained by
+    /// hashing the parent identity with `tag` (used for per-expansion
+    /// operators: expansion `e`'s `G` is `derive(GAUSS).derive(e)`…).
+    pub fn derive(&self, tag: u64) -> HashRng {
+        let (lo, hi) = murmur3_words(self.stream, tag, 0x6d63_6b65_726e_656c, self.seed);
+        HashRng { seed: lo, stream: hi, counter: 0, spare: None }
+    }
+
+    /// The seed this generator was constructed with.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Random-access: the `k`-th 64-bit word of this stream,
+    /// independent of any sequential state.
+    #[inline]
+    pub fn at(&self, k: u64) -> u64 {
+        murmur3_words(self.stream, k, 0, self.seed).0
+    }
+
+    /// Random-access uniform in `[0, 1)` (f64, 53 mantissa bits).
+    #[inline]
+    pub fn at_f64(&self, k: u64) -> f64 {
+        (self.at(k) >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Random-access uniform in `[0, 1)` (f32, 24 mantissa bits).
+    #[inline]
+    pub fn at_f32(&self, k: u64) -> f32 {
+        (self.at(k) >> 40) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Random-access ±1 sign (the `B` diagonal's entries).
+    #[inline]
+    pub fn at_sign(&self, k: u64) -> f32 {
+        if self.at(k) & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Next 64 random bits (sequential API).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        if let Some(s) = self.spare.take() {
+            return s;
+        }
+        let (lo, hi) = murmur3_words(self.stream, self.counter, 0, self.seed);
+        self.counter += 1;
+        self.spare = Some(hi);
+        lo
+    }
+
+    /// Next 32 random bits.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform integer in `[0, bound)` via Lemire's multiply-shift
+    /// rejection method (unbiased).
+    pub fn next_below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0, "bound must be positive");
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128) * (bound as u128);
+            let lo = m as u64;
+            if lo >= bound || lo >= bound.wrapping_neg() % bound {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform integer in `[lo, hi)` (half-open).
+    pub fn next_range(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo < hi, "empty range");
+        lo + self.next_below((hi - lo) as u64) as i64
+    }
+
+    /// Fill a slice with uniform `[0,1)` f32s.
+    pub fn fill_f32(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.next_f32();
+        }
+    }
+
+    /// Reset the sequential counter to zero (random-access `at*` calls
+    /// are unaffected; they never touch the counter).
+    pub fn reset(&mut self) {
+        self.counter = 0;
+        self.spare = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_replay() {
+        let mut a = HashRng::new(1398239763, streams::GAUSS);
+        let mut b = HashRng::new(1398239763, streams::GAUSS);
+        let xs: Vec<u64> = (0..100).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..100).map(|_| b.next_u64()).collect();
+        assert_eq!(xs, ys);
+    }
+
+    #[test]
+    fn reset_replays() {
+        let mut a = HashRng::new(7, 1);
+        let first: Vec<u64> = (0..10).map(|_| a.next_u64()).collect();
+        a.reset();
+        let again: Vec<u64> = (0..10).map(|_| a.next_u64()).collect();
+        assert_eq!(first, again);
+    }
+
+    #[test]
+    fn streams_independent() {
+        let mut a = HashRng::new(42, streams::BINARY);
+        let mut b = HashRng::new(42, streams::GAUSS);
+        let xs: Vec<u64> = (0..32).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..32).map(|_| b.next_u64()).collect();
+        assert_ne!(xs, ys);
+    }
+
+    #[test]
+    fn seeds_independent() {
+        let mut a = HashRng::new(1, 0);
+        let mut b = HashRng::new(2, 0);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn derive_differs_from_parent_and_siblings() {
+        let root = HashRng::new(9, 9);
+        let mut c0 = root.derive(0);
+        let mut c1 = root.derive(1);
+        let mut p = root.clone();
+        let x0 = c0.next_u64();
+        let x1 = c1.next_u64();
+        let xp = p.next_u64();
+        assert_ne!(x0, x1);
+        assert_ne!(x0, xp);
+    }
+
+    #[test]
+    fn unit_interval_bounds() {
+        let mut r = HashRng::new(3, 3);
+        for _ in 0..10_000 {
+            let f = r.next_f64();
+            assert!((0.0..1.0).contains(&f));
+            let g = r.next_f32();
+            assert!((0.0..1.0).contains(&g));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_close_to_half() {
+        let mut r = HashRng::new(5, 5);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn next_below_unbiased_small_bound() {
+        let mut r = HashRng::new(11, 0);
+        let mut counts = [0u32; 3];
+        for _ in 0..30_000 {
+            counts[r.next_below(3) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 500.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn next_range_bounds() {
+        let mut r = HashRng::new(13, 0);
+        for _ in 0..1000 {
+            let v = r.next_range(-5, 5);
+            assert!((-5..5).contains(&v));
+        }
+    }
+
+    #[test]
+    fn random_access_is_stateless() {
+        let r = HashRng::new(17, 4);
+        let a = r.at(100);
+        let _ = r.at(5);
+        assert_eq!(a, r.at(100));
+    }
+
+    #[test]
+    fn at_sign_balanced() {
+        let r = HashRng::new(19, streams::BINARY);
+        let n = 50_000;
+        let sum: f32 = (0..n).map(|k| r.at_sign(k)).sum();
+        assert!(sum.abs() < 1_000.0, "sign sum {sum}");
+    }
+
+    #[test]
+    fn sequential_matches_hash_blocks() {
+        // next_u64 must yield (lo, hi) pairs of successive counter hashes.
+        let mut r = HashRng::new(23, 8);
+        let a = r.next_u64();
+        let b = r.next_u64();
+        let (lo, hi) = crate::hash::murmur3::murmur3_words(8, 0, 0, 23);
+        assert_eq!((a, b), (lo, hi));
+    }
+
+    #[test]
+    #[should_panic]
+    fn next_below_zero_panics() {
+        HashRng::new(0, 0).next_below(0);
+    }
+}

@@ -1,0 +1,14 @@
+//! Hash-derived randomness.
+//!
+//! The paper (§3, §7) replaces stored random matrices with values
+//! *recomputed on demand* from a hash function: "to allow for very
+//! compact distribution of models, we use hashing … for each feature
+//! dimension, we only need one floating point number." This module
+//! provides MurmurHash3 (the hash named in the paper) and a
+//! counter-based deterministic RNG built on it.
+
+pub mod hash_rng;
+pub mod murmur3;
+
+pub use hash_rng::HashRng;
+pub use murmur3::{murmur3_x64_128, murmur3_x86_32};

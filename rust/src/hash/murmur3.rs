@@ -1,0 +1,256 @@
+//! MurmurHash3 — public-domain hash by Austin Appleby, reimplemented
+//! from the reference description.
+//!
+//! The paper uses Murmurhash to derive every random coefficient of the
+//! feature map (the binary diagonal `B`, the permutation `Π`, the
+//! Gaussian diagonal `G` and the calibration `C`), so the hash must be
+//! byte-for-byte deterministic across platforms. Both the 32-bit x86
+//! variant and the 128-bit x64 variant are provided; the RNG
+//! ([`crate::hash::HashRng`]) uses the 128-bit variant for throughput
+//! (one hash call yields 128 bits).
+
+#[inline(always)]
+fn fmix32(mut h: u32) -> u32 {
+    h ^= h >> 16;
+    h = h.wrapping_mul(0x85eb_ca6b);
+    h ^= h >> 13;
+    h = h.wrapping_mul(0xc2b2_ae35);
+    h ^= h >> 16;
+    h
+}
+
+#[inline(always)]
+fn fmix64(mut k: u64) -> u64 {
+    k ^= k >> 33;
+    k = k.wrapping_mul(0xff51_afd7_ed55_8ccd);
+    k ^= k >> 33;
+    k = k.wrapping_mul(0xc4ce_b9fe_1a85_ec53);
+    k ^= k >> 33;
+    k
+}
+
+/// MurmurHash3_x86_32. Returns a 32-bit hash of `data` under `seed`.
+pub fn murmur3_x86_32(data: &[u8], seed: u32) -> u32 {
+    const C1: u32 = 0xcc9e_2d51;
+    const C2: u32 = 0x1b87_3593;
+    let nblocks = data.len() / 4;
+    let mut h1 = seed;
+
+    // body
+    for b in 0..nblocks {
+        let k = u32::from_le_bytes([
+            data[4 * b],
+            data[4 * b + 1],
+            data[4 * b + 2],
+            data[4 * b + 3],
+        ]);
+        let mut k1 = k.wrapping_mul(C1);
+        k1 = k1.rotate_left(15);
+        k1 = k1.wrapping_mul(C2);
+        h1 ^= k1;
+        h1 = h1.rotate_left(13);
+        h1 = h1.wrapping_mul(5).wrapping_add(0xe654_6b64);
+    }
+
+    // tail
+    let tail = &data[nblocks * 4..];
+    let mut k1: u32 = 0;
+    if tail.len() >= 3 {
+        k1 ^= (tail[2] as u32) << 16;
+    }
+    if tail.len() >= 2 {
+        k1 ^= (tail[1] as u32) << 8;
+    }
+    if !tail.is_empty() {
+        k1 ^= tail[0] as u32;
+        k1 = k1.wrapping_mul(C1);
+        k1 = k1.rotate_left(15);
+        k1 = k1.wrapping_mul(C2);
+        h1 ^= k1;
+    }
+
+    // finalization
+    h1 ^= data.len() as u32;
+    fmix32(h1)
+}
+
+/// MurmurHash3_x64_128. Returns the 128-bit hash as `(low, high)` u64s.
+pub fn murmur3_x64_128(data: &[u8], seed: u64) -> (u64, u64) {
+    const C1: u64 = 0x87c3_7b91_1142_53d5;
+    const C2: u64 = 0x4cf5_ad43_2745_937f;
+    let nblocks = data.len() / 16;
+    let mut h1 = seed;
+    let mut h2 = seed;
+
+    // body
+    for b in 0..nblocks {
+        let base = 16 * b;
+        let k1 = u64::from_le_bytes(data[base..base + 8].try_into().unwrap());
+        let k2 = u64::from_le_bytes(data[base + 8..base + 16].try_into().unwrap());
+
+        let mut k1 = k1.wrapping_mul(C1);
+        k1 = k1.rotate_left(31);
+        k1 = k1.wrapping_mul(C2);
+        h1 ^= k1;
+        h1 = h1.rotate_left(27);
+        h1 = h1.wrapping_add(h2);
+        h1 = h1.wrapping_mul(5).wrapping_add(0x52dc_e729);
+
+        let mut k2 = k2.wrapping_mul(C2);
+        k2 = k2.rotate_left(33);
+        k2 = k2.wrapping_mul(C1);
+        h2 ^= k2;
+        h2 = h2.rotate_left(31);
+        h2 = h2.wrapping_add(h1);
+        h2 = h2.wrapping_mul(5).wrapping_add(0x3849_5ab5);
+    }
+
+    // tail
+    let tail = &data[nblocks * 16..];
+    let mut k1: u64 = 0;
+    let mut k2: u64 = 0;
+    let t = tail.len();
+    // bytes 15..8 feed k2, bytes 7..0 feed k1 (reference order)
+    if t >= 15 {
+        k2 ^= (tail[14] as u64) << 48;
+    }
+    if t >= 14 {
+        k2 ^= (tail[13] as u64) << 40;
+    }
+    if t >= 13 {
+        k2 ^= (tail[12] as u64) << 32;
+    }
+    if t >= 12 {
+        k2 ^= (tail[11] as u64) << 24;
+    }
+    if t >= 11 {
+        k2 ^= (tail[10] as u64) << 16;
+    }
+    if t >= 10 {
+        k2 ^= (tail[9] as u64) << 8;
+    }
+    if t >= 9 {
+        k2 ^= tail[8] as u64;
+        k2 = k2.wrapping_mul(C2);
+        k2 = k2.rotate_left(33);
+        k2 = k2.wrapping_mul(C1);
+        h2 ^= k2;
+    }
+    if t >= 8 {
+        k1 ^= (tail[7] as u64) << 56;
+    }
+    if t >= 7 {
+        k1 ^= (tail[6] as u64) << 48;
+    }
+    if t >= 6 {
+        k1 ^= (tail[5] as u64) << 40;
+    }
+    if t >= 5 {
+        k1 ^= (tail[4] as u64) << 32;
+    }
+    if t >= 4 {
+        k1 ^= (tail[3] as u64) << 24;
+    }
+    if t >= 3 {
+        k1 ^= (tail[2] as u64) << 16;
+    }
+    if t >= 2 {
+        k1 ^= (tail[1] as u64) << 8;
+    }
+    if t >= 1 {
+        k1 ^= tail[0] as u64;
+        k1 = k1.wrapping_mul(C1);
+        k1 = k1.rotate_left(31);
+        k1 = k1.wrapping_mul(C2);
+        h1 ^= k1;
+    }
+
+    // finalization
+    h1 ^= data.len() as u64;
+    h2 ^= data.len() as u64;
+    h1 = h1.wrapping_add(h2);
+    h2 = h2.wrapping_add(h1);
+    h1 = fmix64(h1);
+    h2 = fmix64(h2);
+    h1 = h1.wrapping_add(h2);
+    h2 = h2.wrapping_add(h1);
+    (h1, h2)
+}
+
+/// Fast-path: hash three u64 words (seed-stream-counter) without
+/// allocating. Equivalent to `murmur3_x64_128` over their LE bytes.
+#[inline]
+pub fn murmur3_words(a: u64, b: u64, c: u64, seed: u64) -> (u64, u64) {
+    let mut buf = [0u8; 24];
+    buf[0..8].copy_from_slice(&a.to_le_bytes());
+    buf[8..16].copy_from_slice(&b.to_le_bytes());
+    buf[16..24].copy_from_slice(&c.to_le_bytes());
+    murmur3_x64_128(&buf, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Reference vectors computed with the canonical C++ smhasher
+    // implementation (MurmurHash3_x86_32 / MurmurHash3_x64_128).
+    #[test]
+    fn x86_32_known_vectors() {
+        assert_eq!(murmur3_x86_32(b"", 0), 0);
+        assert_eq!(murmur3_x86_32(b"", 1), 0x514e_28b7);
+        assert_eq!(murmur3_x86_32(b"", 0xffff_ffff), 0x81f1_6f39);
+        assert_eq!(murmur3_x86_32(b"test", 0), 0xba6b_d213);
+        assert_eq!(murmur3_x86_32(b"test", 0x9747_b28c), 0x704b_81dc);
+        assert_eq!(murmur3_x86_32(b"Hello, world!", 0x9747_b28c), 0x2488_4cba);
+        assert_eq!(murmur3_x86_32(b"The quick brown fox jumps over the lazy dog", 0x9747_b28c), 0x2fa8_26cd);
+    }
+
+    #[test]
+    fn x64_128_known_vectors() {
+        // canonical: MurmurHash3_x64_128("", 0) = 0x00000000000000000000000000000000
+        assert_eq!(murmur3_x64_128(b"", 0), (0, 0));
+        // MurmurHash3_x64_128("", 1) = b55cff6ee5ab1046 8335f878aa2d6251
+        // (canonical smhasher byte string, little-endian words)
+        let (l, h) = murmur3_x64_128(b"", 1);
+        assert_eq!(l, 0x4610_abe5_6eff_5cb5);
+        assert_eq!(h, 0x5162_2daa_78f8_3583);
+    }
+
+    #[test]
+    fn x64_128_tail_lengths_all_distinct() {
+        // Exercise every tail length 0..=15: hashes must all differ.
+        let data: Vec<u8> = (0u8..64).collect();
+        let mut seen = std::collections::HashSet::new();
+        for len in 0..=31 {
+            let hv = murmur3_x64_128(&data[..len], 42);
+            assert!(seen.insert(hv), "collision at len {len}");
+        }
+    }
+
+    #[test]
+    fn x86_32_tail_lengths_all_distinct() {
+        let data: Vec<u8> = (0u8..32).collect();
+        let mut seen = std::collections::HashSet::new();
+        for len in 0..=15 {
+            let hv = murmur3_x86_32(&data[..len], 7);
+            assert!(seen.insert(hv), "collision at len {len}");
+        }
+    }
+
+    #[test]
+    fn words_matches_byte_path() {
+        let (a, b, c, s) = (0x0123_4567_89ab_cdefu64, 42u64, u64::MAX, 1_398_239_763u64);
+        let mut buf = [0u8; 24];
+        buf[0..8].copy_from_slice(&a.to_le_bytes());
+        buf[8..16].copy_from_slice(&(b as u64).to_le_bytes());
+        buf[16..24].copy_from_slice(&c.to_le_bytes());
+        assert_eq!(murmur3_words(a, b, c, s), murmur3_x64_128(&buf, s));
+    }
+
+    #[test]
+    fn seed_sensitivity() {
+        let d = b"mckernel";
+        assert_ne!(murmur3_x86_32(d, 0), murmur3_x86_32(d, 1));
+        assert_ne!(murmur3_x64_128(d, 0), murmur3_x64_128(d, 1));
+    }
+}

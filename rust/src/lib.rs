@@ -1,0 +1,51 @@
+//! # McKernel — approximate kernel expansions in log-linear time
+//!
+//! A Rust + JAX + Pallas reproduction of *McKernel: A Library for
+//! Approximate Kernel Expansions in Log-linear Time* (Curtó et al., 2017).
+//!
+//! The library computes the Fastfood factorization
+//!
+//! ```text
+//! Ẑ := (1/(σ√n)) · C · H · G · Π · H · B          (paper Eq. 8)
+//! φ(x) = [cos(Ẑ x̂), sin(Ẑ x̂)]                     (paper Eq. 9)
+//! ```
+//!
+//! in `O(n log n)` time per expansion via a cache-friendly Fast
+//! Walsh–Hadamard Transform, with *all* randomness derived from
+//! MurmurHash3 so models never store their random coefficients.
+//!
+//! ## Layer map
+//!
+//! * [`hash`], [`rand`], [`fwht`], [`linalg`], [`util`] — substrates.
+//! * [`mckernel`] — the feature-map library (the paper's contribution).
+//! * [`data`], [`model`], [`optim`], [`train`] — the learning stack
+//!   (softmax regression + SGD in the mini-batch setting, paper §7–9).
+//! * [`runtime`] — PJRT client loading AOT-compiled JAX/Pallas graphs
+//!   (`artifacts/*.hlo.txt`), never Python at run time.
+//! * [`coordinator`] — mini-batch training orchestration and the
+//!   feature-server request loop.
+//! * [`benchkit`], [`proplite`], [`cli`] — in-tree bench harness,
+//!   property-testing framework and CLI parser (offline build: no
+//!   criterion / proptest / clap).
+
+pub mod benchkit;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod fwht;
+pub mod hash;
+pub mod linalg;
+pub mod mckernel;
+pub mod model;
+pub mod optim;
+pub mod proplite;
+pub mod rand;
+pub mod runtime;
+pub mod train;
+pub mod util;
+
+/// Library version string (mirrors `Cargo.toml`).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// The seed used throughout the paper's experiments (Figures 3–5).
+pub const PAPER_SEED: u64 = 1_398_239_763;

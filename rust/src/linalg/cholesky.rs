@@ -1,0 +1,121 @@
+//! Cholesky factorization / SPD solve — the substrate for the paper's
+//! §2 exact learning-with-kernels formulation `(nγI + K)t = y`
+//! (Eq. 2), which is strictly positive definite.
+
+use super::matrix::Matrix;
+use anyhow::{ensure, Result};
+
+/// Lower-triangular Cholesky factor of an SPD matrix (`A = L·Lᵀ`).
+pub fn cholesky(a: &Matrix) -> Result<Matrix> {
+    let (n, m) = a.shape();
+    ensure!(n == m, "Cholesky needs a square matrix");
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[(i, j)] as f64;
+            for k in 0..j {
+                sum -= (l[(i, k)] as f64) * (l[(j, k)] as f64);
+            }
+            if i == j {
+                ensure!(sum > 0.0, "matrix not positive definite at pivot {i}");
+                l[(i, j)] = (sum.sqrt()) as f32;
+            } else {
+                l[(i, j)] = (sum / l[(j, j)] as f64) as f32;
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve `A x = b` for SPD `A` via Cholesky (forward + back substitution).
+pub fn solve_spd(a: &Matrix, b: &[f32]) -> Result<Vec<f32>> {
+    let l = cholesky(a)?;
+    let n = b.len();
+    ensure!(a.rows() == n, "dimension mismatch");
+    // forward: L z = b
+    let mut z = vec![0.0f32; n];
+    for i in 0..n {
+        let mut s = b[i] as f64;
+        for k in 0..i {
+            s -= (l[(i, k)] as f64) * (z[k] as f64);
+        }
+        z[i] = (s / l[(i, i)] as f64) as f32;
+    }
+    // back: Lᵀ x = z
+    let mut x = vec![0.0f32; n];
+    for i in (0..n).rev() {
+        let mut s = z[i] as f64;
+        for k in (i + 1)..n {
+            s -= (l[(k, i)] as f64) * (x[k] as f64);
+        }
+        x[i] = (s / l[(i, i)] as f64) as f32;
+    }
+    Ok(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spd(n: usize, seed: u64) -> Matrix {
+        // A = BᵀB + n·I is SPD
+        let mut rng = crate::hash::HashRng::new(seed, 0xC0);
+        let b = Matrix::from_fn(n, n, |_, _| rng.next_f32() - 0.5);
+        let mut a = Matrix::zeros(n, n);
+        crate::linalg::ops::gemm_tn(&b, &b, &mut a);
+        for i in 0..n {
+            a[(i, i)] += n as f32;
+        }
+        a
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let a = spd(12, 1);
+        let l = cholesky(&a).unwrap();
+        // L·Lᵀ == A
+        for i in 0..12 {
+            for j in 0..12 {
+                let mut s = 0.0f64;
+                for k in 0..12 {
+                    s += (l[(i, k)] as f64) * (l[(j, k)] as f64);
+                }
+                assert!((s - a[(i, j)] as f64).abs() < 1e-3, "({i},{j})");
+            }
+            // strictly lower-triangular above diagonal
+            for j in (i + 1)..12 {
+                assert_eq!(l[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn solve_roundtrip() {
+        let a = spd(20, 2);
+        let x_true: Vec<f32> = (0..20).map(|i| (i as f32 - 10.0) / 7.0).collect();
+        let mut b = vec![0.0f32; 20];
+        crate::linalg::gemv(&a, &x_true, &mut b);
+        let x = solve_spd(&a, &b).unwrap();
+        for (got, want) in x.iter().zip(&x_true) {
+            assert!((got - want).abs() < 1e-3, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn identity_is_its_own_factor() {
+        let l = cholesky(&Matrix::eye(5)).unwrap();
+        assert_eq!(l, Matrix::eye(5));
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let mut a = Matrix::eye(3);
+        a[(2, 2)] = -1.0;
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn rejects_non_square() {
+        assert!(cholesky(&Matrix::zeros(2, 3)).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! Dense linear algebra substrate (no BLAS reachable offline).
+//!
+//! Row-major [`Matrix`] plus the handful of kernels the classifier
+//! needs: a cache-blocked GEMM, GEMV, softmax/log-sum-exp and
+//! reductions. Everything is f32 with f64 accumulation where it
+//! matters for stability.
+
+pub mod cholesky;
+pub mod matrix;
+pub mod ops;
+
+pub use matrix::Matrix;
+pub use cholesky::{cholesky, solve_spd};
+pub use ops::{argmax, gemm, gemv, log_softmax_rows, logsumexp, softmax_rows};

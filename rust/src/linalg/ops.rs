@@ -1,0 +1,289 @@
+//! Linear-algebra kernels: blocked GEMM, GEMV, numerically stable
+//! softmax / log-sum-exp, and reductions.
+
+use super::matrix::Matrix;
+
+/// Cache-block edge for GEMM (MC×KC panel of A ~ 64·256·4 B = 64 KiB).
+const MC: usize = 64;
+const KC: usize = 256;
+
+/// `out = a · b` (shapes `(m,k)·(k,n) → (m,n)`), blocked over K and M
+/// with a unit-stride inner loop over N (auto-vectorizes).
+pub fn gemm(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    let (m, k) = a.shape();
+    let (k2, n) = b.shape();
+    assert_eq!(k, k2, "inner dimensions differ");
+    assert_eq!(out.shape(), (m, n), "output shape");
+    out.data_mut().fill(0.0);
+    let (ad, bd) = (a.data(), b.data());
+    let od = out.data_mut();
+    let mut k0 = 0;
+    while k0 < k {
+        let kb = KC.min(k - k0);
+        let mut m0 = 0;
+        while m0 < m {
+            let mb = MC.min(m - m0);
+            for i in m0..m0 + mb {
+                let arow = &ad[i * k + k0..i * k + k0 + kb];
+                let orow = &mut od[i * n..(i + 1) * n];
+                for (p, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue; // padded features are exactly zero often
+                    }
+                    let brow = &bd[(k0 + p) * n..(k0 + p + 1) * n];
+                    for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                        *o += av * bv;
+                    }
+                }
+            }
+            m0 += mb;
+        }
+        k0 += kb;
+    }
+}
+
+/// `out = a · bᵀ` taking `b` as `(n, k)` — the classifier's logits
+/// `X·Wᵀ` with unit-stride dot products (no transpose materialized).
+pub fn gemm_nt(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    let (m, k) = a.shape();
+    let (n, k2) = b.shape();
+    assert_eq!(k, k2, "inner dimensions differ");
+    assert_eq!(out.shape(), (m, n), "output shape");
+    let (ad, bd) = (a.data(), b.data());
+    let od = out.data_mut();
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &bd[j * k..(j + 1) * k];
+            od[i * n + j] = dot(arow, brow);
+        }
+    }
+}
+
+/// Vectorizable dot product: 8 independent accumulator lanes so the
+/// compiler can keep SIMD registers full (a single sequential f32
+/// accumulator forbids reassociation and stays scalar — §Perf).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 8];
+    let mut ac = a.chunks_exact(8);
+    let mut bc = b.chunks_exact(8);
+    for (xa, xb) in (&mut ac).zip(&mut bc) {
+        for l in 0..8 {
+            acc[l] += xa[l] * xb[l];
+        }
+    }
+    let mut tail = 0.0f32;
+    for (x, y) in ac.remainder().iter().zip(bc.remainder()) {
+        tail += x * y;
+    }
+    acc.iter().sum::<f32>() + tail
+}
+
+/// `out = aᵀ · b` taking `a` as `(k, m)`, `b` as `(k, n)` — the
+/// gradient contraction `∂L/∂W = δᵀ·X` without materializing δᵀ.
+pub fn gemm_tn(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    let (k, m) = a.shape();
+    let (k2, n) = b.shape();
+    assert_eq!(k, k2, "inner dimensions differ");
+    assert_eq!(out.shape(), (m, n), "output shape");
+    out.data_mut().fill(0.0);
+    let (ad, bd) = (a.data(), b.data());
+    let od = out.data_mut();
+    for p in 0..k {
+        let arow = &ad[p * m..(p + 1) * m];
+        let brow = &bd[p * n..(p + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut od[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// `y = M · x` (matrix–vector).
+pub fn gemv(m: &Matrix, x: &[f32], y: &mut [f32]) {
+    let (rows, cols) = m.shape();
+    assert_eq!(x.len(), cols);
+    assert_eq!(y.len(), rows);
+    for (r, out) in y.iter_mut().enumerate() {
+        let row = m.row(r);
+        let mut acc = 0.0f64;
+        for (a, b) in row.iter().zip(x.iter()) {
+            acc += (*a as f64) * (*b as f64);
+        }
+        *out = acc as f32;
+    }
+}
+
+/// Numerically stable `log Σ exp(x_i)`.
+pub fn logsumexp(x: &[f32]) -> f32 {
+    let m = x.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    if m == f32::NEG_INFINITY {
+        return f32::NEG_INFINITY;
+    }
+    let s: f64 = x.iter().map(|&v| ((v - m) as f64).exp()).sum();
+    m + (s.ln() as f32)
+}
+
+/// Row-wise in-place softmax of a `(rows, cols)` matrix.
+pub fn softmax_rows(m: &mut Matrix) {
+    let cols = m.cols();
+    for r in 0..m.rows() {
+        let row = m.row_mut(r);
+        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0.0f64;
+        for v in row.iter_mut() {
+            let e = ((*v - mx) as f64).exp();
+            *v = e as f32;
+            sum += e;
+        }
+        let inv = (1.0 / sum) as f32;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+        debug_assert_eq!(row.len(), cols);
+    }
+}
+
+/// Row-wise in-place log-softmax.
+pub fn log_softmax_rows(m: &mut Matrix) {
+    for r in 0..m.rows() {
+        let row = m.row_mut(r);
+        let lse = logsumexp(row);
+        for v in row.iter_mut() {
+            *v -= lse;
+        }
+    }
+}
+
+/// Index of the maximum element (first on ties).
+pub fn argmax(x: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in x.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_gemm(a: &Matrix, b: &Matrix) -> Matrix {
+        let (m, k) = a.shape();
+        let (_, n) = b.shape();
+        Matrix::from_fn(m, n, |i, j| (0..k).map(|p| a[(i, p)] * b[(p, j)]).sum())
+    }
+
+    fn rand_matrix(r: usize, c: usize, seed: u64) -> Matrix {
+        let mut rng = crate::hash::HashRng::new(seed, 0x6e);
+        Matrix::from_fn(r, c, |_, _| rng.next_f32() * 2.0 - 1.0)
+    }
+
+    #[test]
+    fn gemm_matches_naive() {
+        for (m, k, n) in [(1, 1, 1), (3, 4, 5), (17, 33, 9), (65, 300, 10)] {
+            let a = rand_matrix(m, k, 1);
+            let b = rand_matrix(k, n, 2);
+            let mut out = Matrix::zeros(m, n);
+            gemm(&a, &b, &mut out);
+            let want = naive_gemm(&a, &b);
+            for (x, y) in out.data().iter().zip(want.data().iter()) {
+                assert!((x - y).abs() < 1e-3, "{m}x{k}x{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_nt_matches_transpose() {
+        let a = rand_matrix(6, 20, 3);
+        let b = rand_matrix(7, 20, 4); // (n, k)
+        let mut out = Matrix::zeros(6, 7);
+        gemm_nt(&a, &b, &mut out);
+        let want = naive_gemm(&a, &b.transpose());
+        for (x, y) in out.data().iter().zip(want.data().iter()) {
+            assert!((x - y).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn gemm_tn_matches_transpose() {
+        let a = rand_matrix(20, 6, 5); // (k, m)
+        let b = rand_matrix(20, 7, 6); // (k, n)
+        let mut out = Matrix::zeros(6, 7);
+        gemm_tn(&a, &b, &mut out);
+        let want = naive_gemm(&a.transpose(), &b);
+        for (x, y) in out.data().iter().zip(want.data().iter()) {
+            assert!((x - y).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn gemv_matches_gemm() {
+        let m = rand_matrix(9, 31, 7);
+        let x: Vec<f32> = (0..31).map(|i| (i as f32) / 31.0).collect();
+        let mut y = vec![0.0f32; 9];
+        gemv(&m, &x, &mut y);
+        let xm = Matrix::from_vec(31, 1, x);
+        let want = naive_gemm(&m, &xm);
+        for (a, b) in y.iter().zip(want.data().iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sums_to_one_and_orders() {
+        let mut m = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, -1.0, -1.0, -1.0]);
+        softmax_rows(&mut m);
+        for r in 0..2 {
+            let s: f32 = m.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+        assert!(m[(0, 2)] > m[(0, 1)] && m[(0, 1)] > m[(0, 0)]);
+        assert!((m[(1, 0)] - 1.0 / 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn softmax_stable_under_large_logits() {
+        let mut m = Matrix::from_vec(1, 3, vec![1000.0, 1001.0, 999.0]);
+        softmax_rows(&mut m);
+        assert!(m.data().iter().all(|v| v.is_finite()));
+        let s: f32 = m.row(0).iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn logsumexp_values() {
+        assert!((logsumexp(&[0.0, 0.0]) - std::f32::consts::LN_2).abs() < 1e-6);
+        assert_eq!(logsumexp(&[f32::NEG_INFINITY]), f32::NEG_INFINITY);
+        assert!((logsumexp(&[5.0]) - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn log_softmax_matches_softmax_log() {
+        let src = vec![0.5f32, -1.0, 2.0, 0.0];
+        let mut a = Matrix::from_vec(1, 4, src.clone());
+        let mut b = Matrix::from_vec(1, 4, src);
+        log_softmax_rows(&mut a);
+        softmax_rows(&mut b);
+        for (x, y) in a.data().iter().zip(b.data().iter()) {
+            assert!((x - y.ln()).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn argmax_first_on_ties() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+}

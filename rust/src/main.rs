@@ -1,0 +1,19 @@
+//! `mckernel` CLI — leader entrypoint for the three-layer stack.
+//!
+//! See `mckernel help` (or [`mckernel::cli::commands::USAGE`]).
+
+use mckernel::cli::{commands, Args};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = commands::run(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,150 @@
+//! The three diagonal operators of Eq. 8, hash-derived so they are
+//! never stored with a model (paper §3).
+
+use super::kernel::Kernel;
+use crate::hash::hash_rng::streams;
+use crate::hash::HashRng;
+use crate::rand::BoxMuller;
+
+/// Binary diagonal `B`: entries `±1` uniform, "extract bits from
+/// h(k, x)" — here, bit 0 of the k-th hash word.
+pub fn binary_diag(root: &HashRng, n: usize) -> Vec<f32> {
+    let rng = root.derive(streams::BINARY);
+    (0..n as u64).map(|k| rng.at_sign(k)).collect()
+}
+
+/// Gaussian diagonal `G`: i.i.d. N(0,1) via Box–Muller on hash draws.
+pub fn gauss_diag(root: &HashRng, n: usize) -> Vec<f32> {
+    let rng = root.derive(streams::GAUSS);
+    (0..n as u64).map(|k| BoxMuller::at(&rng, k) as f32).collect()
+}
+
+/// Calibration diagonal `C` for the chosen kernel, already folded
+/// together with the global `1/(σ√n)` factor of Eq. 8 and the
+/// `1/‖g‖` row-norm correction of Fastfood:
+///
+/// ```text
+/// scale_i = r_i / (‖g‖₂ · σ · √n)
+/// ```
+///
+/// where `r_i` is the kernel's radial draw ([`Kernel::radius`]). With
+/// this choice the rows of `Ẑ` have norms distributed exactly like the
+/// rows of the dense Gaussian matrix `W ~ N(0, σ⁻²)` that Random
+/// Kitchen Sinks would sample.
+pub fn calibration_diag(
+    root: &HashRng,
+    n: usize,
+    kernel: Kernel,
+    sigma: f64,
+    g: &[f32],
+) -> Vec<f32> {
+    assert_eq!(g.len(), n);
+    assert!(sigma > 0.0, "sigma must be positive");
+    let g_norm = g.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt();
+    assert!(g_norm > 0.0, "degenerate Gaussian diagonal");
+    let cal = root.derive(streams::CALIBRATION);
+    let denom = g_norm * sigma * (n as f64).sqrt();
+    (0..n)
+        .map(|i| {
+            // Independent derived streams per entry keep each radius
+            // i.i.d. while staying random-access (order-free).
+            let entry = cal.derive(i as u64);
+            let mut bm = BoxMuller::new(entry.derive(0));
+            let mut uni = entry.derive(1);
+            (kernel.radius(n, &mut bm, &mut uni) / denom) as f32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn root(seed: u64) -> HashRng {
+        HashRng::new(seed, 0)
+    }
+
+    #[test]
+    fn binary_entries_are_signs() {
+        let b = binary_diag(&root(1), 1024);
+        assert_eq!(b.len(), 1024);
+        assert!(b.iter().all(|&v| v == 1.0 || v == -1.0));
+        // roughly balanced
+        let sum: f32 = b.iter().sum();
+        assert!(sum.abs() < 120.0, "sum {sum}");
+    }
+
+    #[test]
+    fn gauss_entries_standard_normal() {
+        let g = gauss_diag(&root(2), 50_000);
+        let mean: f64 = g.iter().map(|v| *v as f64).sum::<f64>() / g.len() as f64;
+        let var: f64 = g.iter().map(|v| (*v as f64 - mean).powi(2)).sum::<f64>() / g.len() as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn diagonals_deterministic_per_seed() {
+        let a = binary_diag(&root(3), 256);
+        let b = binary_diag(&root(3), 256);
+        assert_eq!(a, b);
+        let c = binary_diag(&root(4), 256);
+        assert_ne!(a, c);
+        let g1 = gauss_diag(&root(3), 64);
+        let g2 = gauss_diag(&root(3), 64);
+        assert_eq!(g1, g2);
+    }
+
+    #[test]
+    fn prefix_stability() {
+        // Random access ⇒ the first k entries don't depend on n.
+        let short = gauss_diag(&root(5), 16);
+        let long = gauss_diag(&root(5), 256);
+        assert_eq!(&short[..], &long[..16]);
+    }
+
+    #[test]
+    fn calibration_positive_and_scaled() {
+        let n = 64;
+        let r = root(6);
+        let g = gauss_diag(&r, n);
+        let c = calibration_diag(&r, n, Kernel::Rbf, 1.0, &g);
+        assert_eq!(c.len(), n);
+        assert!(c.iter().all(|&v| v > 0.0 && v.is_finite()));
+        // E[r_i] ≈ √n ⇒ E[scale_i] ≈ 1/(‖g‖σ). With ‖g‖ ≈ √n:
+        let g_norm = g.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+        let mean: f64 = c.iter().map(|v| *v as f64).sum::<f64>() / n as f64;
+        let expect = 1.0 / (g_norm * 1.0);
+        assert!((mean - expect).abs() < 0.25 * expect, "mean {mean} expect {expect}");
+    }
+
+    #[test]
+    fn calibration_sigma_inverse_scaling() {
+        let n = 32;
+        let r = root(7);
+        let g = gauss_diag(&r, n);
+        let c1 = calibration_diag(&r, n, Kernel::Rbf, 1.0, &g);
+        let c2 = calibration_diag(&r, n, Kernel::Rbf, 2.0, &g);
+        for (a, b) in c1.iter().zip(c2.iter()) {
+            assert!((a / b - 2.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn calibration_kernel_changes_distribution() {
+        let n = 32;
+        let r = root(8);
+        let g = gauss_diag(&r, n);
+        let rbf = calibration_diag(&r, n, Kernel::Rbf, 1.0, &g);
+        let mat = calibration_diag(&r, n, Kernel::RbfMatern { t: 40 }, 1.0, &g);
+        assert_ne!(rbf, mat);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_sigma_rejected() {
+        let r = root(9);
+        let g = gauss_diag(&r, 8);
+        calibration_diag(&r, 8, Kernel::Rbf, 0.0, &g);
+    }
+}

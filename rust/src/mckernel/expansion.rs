@@ -1,0 +1,194 @@
+//! One Fastfood expansion: the materialized diagonals + permutation of
+//! a single `Ẑ` instance, and its application to vectors.
+
+use super::diag::{binary_diag, calibration_diag, gauss_diag};
+use super::kernel::Kernel;
+use crate::fwht;
+use crate::hash::hash_rng::streams;
+use crate::hash::HashRng;
+use crate::rand::fisher_yates::random_permutation;
+
+/// The per-expansion operators of `Ẑ = (1/(σ√n))·C·H·G·Π·H·B`,
+/// materialized (`O(n)` memory each — or zero if regenerated, see
+/// [`FastfoodBlock::regenerate`]).
+#[derive(Debug, Clone)]
+pub struct FastfoodBlock {
+    /// Padded dimension (power of two).
+    n: usize,
+    /// `B` diagonal (±1).
+    b: Vec<f32>,
+    /// `Π` as an index vector: `y[i] = x[perm[i]]`.
+    perm: Vec<u32>,
+    /// `G` diagonal (i.i.d. N(0,1)).
+    g: Vec<f32>,
+    /// `C` merged with `1/(σ√n ‖g‖)` (see [`super::diag::calibration_diag`]).
+    scale: Vec<f32>,
+}
+
+impl FastfoodBlock {
+    /// Materialize expansion `index` of a feature map with root seed
+    /// `seed` (each expansion derives an independent hash stream).
+    pub fn new(seed: u64, index: usize, n: usize, kernel: Kernel, sigma: f64) -> FastfoodBlock {
+        assert!(n.is_power_of_two(), "padded dimension must be a power of two");
+        let root = HashRng::new(seed, 0).derive(index as u64);
+        let b = binary_diag(&root, n);
+        let g = gauss_diag(&root, n);
+        let scale = calibration_diag(&root, n, kernel, sigma, &g);
+        let mut perm_rng = root.derive(streams::PERMUTATION);
+        let perm = random_permutation(n, &mut perm_rng);
+        FastfoodBlock { n, b, perm, g, scale }
+    }
+
+    /// Padded dimension.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Apply `Ẑ` to padded input `x` (`len n`), writing into `out`
+    /// (`len n`), using `tmp` (`len n`) as scratch. All in `O(n log n)`.
+    pub fn apply(&self, x: &[f32], out: &mut [f32], tmp: &mut [f32]) {
+        let n = self.n;
+        assert_eq!(x.len(), n);
+        assert_eq!(out.len(), n);
+        assert_eq!(tmp.len(), n);
+        // v = B x
+        for i in 0..n {
+            tmp[i] = x[i] * self.b[i];
+        }
+        // v = H v
+        fwht::fwht(tmp);
+        // v = Π v, then fold G in during the gather (single pass)
+        for i in 0..n {
+            out[i] = tmp[self.perm[i] as usize] * self.g[i];
+        }
+        // v = H v
+        fwht::fwht(out);
+        // v = (C/(σ√n‖g‖)) v
+        for i in 0..n {
+            out[i] *= self.scale[i];
+        }
+    }
+
+    /// Accessors for cross-layer tests (Python L1/L2 must derive
+    /// identical operators).
+    pub fn b(&self) -> &[f32] {
+        &self.b
+    }
+    pub fn g(&self) -> &[f32] {
+        &self.g
+    }
+    pub fn scale(&self) -> &[f32] {
+        &self.scale
+    }
+    pub fn perm(&self) -> &[u32] {
+        &self.perm
+    }
+
+    /// Regeneration check: rebuild from the seed and compare — the
+    /// paper's "no need to store the coefficients" property, used by
+    /// tests and the checkpoint loader.
+    pub fn regenerate(seed: u64, index: usize, n: usize, kernel: Kernel, sigma: f64) -> FastfoodBlock {
+        FastfoodBlock::new(seed, index, n, kernel, sigma)
+    }
+
+    /// Bytes of coefficient state this block holds (what the hash trick
+    /// saves when shipping models).
+    pub fn coefficient_bytes(&self) -> usize {
+        self.b.len() * 4 + self.g.len() * 4 + self.scale.len() * 4 + self.perm.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rand::fisher_yates::is_permutation;
+
+    fn block(seed: u64, n: usize) -> FastfoodBlock {
+        FastfoodBlock::new(seed, 0, n, Kernel::Rbf, 1.0)
+    }
+
+    #[test]
+    fn construction_shapes() {
+        let fb = block(1, 64);
+        assert_eq!(fb.n(), 64);
+        assert_eq!(fb.b().len(), 64);
+        assert_eq!(fb.g().len(), 64);
+        assert_eq!(fb.scale().len(), 64);
+        assert!(is_permutation(fb.perm()));
+    }
+
+    #[test]
+    fn apply_is_linear() {
+        let fb = block(2, 32);
+        let mut rng = HashRng::new(5, 5);
+        let x: Vec<f32> = (0..32).map(|_| rng.next_f32() - 0.5).collect();
+        let y: Vec<f32> = (0..32).map(|_| rng.next_f32() - 0.5).collect();
+        let mut zx = vec![0.0; 32];
+        let mut zy = vec![0.0; 32];
+        let mut zxy = vec![0.0; 32];
+        let mut tmp = vec![0.0; 32];
+        fb.apply(&x, &mut zx, &mut tmp);
+        fb.apply(&y, &mut zy, &mut tmp);
+        let xy: Vec<f32> = x.iter().zip(&y).map(|(a, b)| a + 2.0 * b).collect();
+        fb.apply(&xy, &mut zxy, &mut tmp);
+        for i in 0..32 {
+            assert!((zxy[i] - (zx[i] + 2.0 * zy[i])).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn expansions_are_independent() {
+        let a = FastfoodBlock::new(7, 0, 64, Kernel::Rbf, 1.0);
+        let b = FastfoodBlock::new(7, 1, 64, Kernel::Rbf, 1.0);
+        assert_ne!(a.b(), b.b());
+        assert_ne!(a.g(), b.g());
+        assert_ne!(a.perm(), b.perm());
+    }
+
+    #[test]
+    fn regeneration_identical() {
+        let a = block(9, 128);
+        let b = FastfoodBlock::regenerate(9, 0, 128, Kernel::Rbf, 1.0);
+        assert_eq!(a.b(), b.b());
+        assert_eq!(a.g(), b.g());
+        assert_eq!(a.scale(), b.scale());
+        assert_eq!(a.perm(), b.perm());
+    }
+
+    #[test]
+    fn row_norms_match_gaussian_matrix() {
+        // The whole point of the calibration: rows of Ẑ must have
+        // norms distributed like rows of the dense RKS matrix
+        // W ~ N(0, σ⁻²)ⁿˣⁿ. For a fixed unit vector x this gives
+        // E‖Ẑx‖² = Σᵢ E[(rowᵢ·x)²] = Σᵢ ‖rowᵢ‖²/n = E[chi²_n]/σ² = n/σ².
+        let n = 256;
+        let sigma = 1.0f64;
+        let mut tmp = vec![0.0; n];
+        let mut out = vec![0.0; n];
+        let mut acc = 0.0f64;
+        let trials = 40;
+        for s in 0..trials {
+            let fb = FastfoodBlock::new(s as u64, 0, n, Kernel::Rbf, sigma);
+            let mut rng = HashRng::new(s as u64 + 1000, 3);
+            let mut x: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+            let xn = x.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+            for v in x.iter_mut() {
+                *v /= xn as f32;
+            }
+            fb.apply(&x, &mut out, &mut tmp);
+            acc += out.iter().map(|v| (*v as f64).powi(2)).sum::<f64>();
+        }
+        let mean = acc / trials as f64;
+        let expect = n as f64 / (sigma * sigma);
+        assert!(
+            (mean / expect - 1.0).abs() < 0.15,
+            "mean {mean} expect {expect}"
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_pow2_rejected() {
+        FastfoodBlock::new(1, 0, 48, Kernel::Rbf, 1.0);
+    }
+}

@@ -1,0 +1,158 @@
+//! Factory API (paper §6: "the API follows the design pattern in
+//! factory … a means of instantiating the parameters according to
+//! pre-specified sets of parameters, e.g. a RBF Kernel or a RBF MATÉRN
+//! Kernel. The so-chosen parameters are deterministic, given by the
+//! values of a function of hashing.")
+
+use super::feature_map::McKernel;
+use super::kernel::Kernel;
+
+/// Complete specification of a feature map. Two equal configs build
+/// byte-identical maps on any machine — this is the whole model
+/// "checkpoint" for the feature layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct McKernelConfig {
+    /// Raw input dimension `S` (padded internally to `[S]₂`).
+    pub input_dim: usize,
+    /// Number of kernel expansions `E`.
+    pub expansions: usize,
+    /// Kernel bandwidth σ.
+    pub sigma: f64,
+    /// Kernel family for the calibration `C`.
+    pub kernel: Kernel,
+    /// Root seed (the paper's experiments use 1398239763).
+    pub seed: u64,
+}
+
+impl McKernelConfig {
+    /// Panics on degenerate configurations.
+    pub fn validate(&self) {
+        assert!(self.input_dim > 0, "input_dim must be positive");
+        assert!(self.expansions > 0, "need at least one expansion");
+        assert!(self.sigma > 0.0 && self.sigma.is_finite(), "sigma must be positive");
+    }
+}
+
+impl Default for McKernelConfig {
+    fn default() -> Self {
+        McKernelConfig {
+            input_dim: 784,
+            expansions: 1,
+            sigma: 1.0,
+            kernel: Kernel::RbfMatern { t: 40 },
+            seed: crate::PAPER_SEED,
+        }
+    }
+}
+
+/// Builder-style factory for [`McKernel`] instances.
+///
+/// ```
+/// use mckernel::mckernel::McKernelFactory;
+/// let fm = McKernelFactory::new(784)
+///     .expansions(4)
+///     .sigma(1.0)
+///     .rbf_matern(40)
+///     .seed(1398239763)
+///     .build();
+/// assert_eq!(fm.feature_dim(), 2 * 1024 * 4);
+/// ```
+#[derive(Debug, Clone)]
+pub struct McKernelFactory {
+    config: McKernelConfig,
+}
+
+impl McKernelFactory {
+    /// Start from the input dimension.
+    pub fn new(input_dim: usize) -> McKernelFactory {
+        McKernelFactory { config: McKernelConfig { input_dim, ..Default::default() } }
+    }
+
+    /// Set the number of expansions `E`.
+    pub fn expansions(mut self, e: usize) -> Self {
+        self.config.expansions = e;
+        self
+    }
+
+    /// Set the bandwidth σ.
+    pub fn sigma(mut self, s: f64) -> Self {
+        self.config.sigma = s;
+        self
+    }
+
+    /// Use the Gaussian RBF kernel.
+    pub fn rbf(mut self) -> Self {
+        self.config.kernel = Kernel::Rbf;
+        self
+    }
+
+    /// Use the RBF Matérn kernel with `t` ball summands.
+    pub fn rbf_matern(mut self, t: u32) -> Self {
+        self.config.kernel = Kernel::RbfMatern { t };
+        self
+    }
+
+    /// Set the root seed.
+    pub fn seed(mut self, s: u64) -> Self {
+        self.config.seed = s;
+        self
+    }
+
+    /// The config built so far.
+    pub fn config(&self) -> &McKernelConfig {
+        &self.config
+    }
+
+    /// Materialize the feature map.
+    pub fn build(self) -> McKernel {
+        McKernel::new(self.config)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_sets_everything() {
+        let f = McKernelFactory::new(100)
+            .expansions(3)
+            .sigma(2.5)
+            .rbf()
+            .seed(77);
+        let c = f.config();
+        assert_eq!(c.input_dim, 100);
+        assert_eq!(c.expansions, 3);
+        assert_eq!(c.sigma, 2.5);
+        assert_eq!(c.kernel, Kernel::Rbf);
+        assert_eq!(c.seed, 77);
+    }
+
+    #[test]
+    fn default_matches_paper_hypers() {
+        let c = McKernelConfig::default();
+        assert_eq!(c.sigma, 1.0);
+        assert_eq!(c.kernel, Kernel::RbfMatern { t: 40 });
+        assert_eq!(c.seed, 1398239763);
+    }
+
+    #[test]
+    fn same_config_same_map() {
+        let x: Vec<f32> = (0..50).map(|i| i as f32 * 0.02).collect();
+        let a = McKernelFactory::new(50).expansions(2).seed(5).build();
+        let b = McKernelFactory::new(50).expansions(2).seed(5).build();
+        assert_eq!(a.transform(&x), b.transform(&x));
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_expansions_rejected() {
+        McKernelFactory::new(10).expansions(0).build();
+    }
+
+    #[test]
+    #[should_panic]
+    fn negative_sigma_rejected() {
+        McKernelFactory::new(10).sigma(-1.0).build();
+    }
+}

@@ -1,0 +1,287 @@
+//! The full McKernel feature map: `E` stacked Fastfood expansions +
+//! the real feature map `φ(x) = [cos(Ẑx̂), sin(Ẑx̂)]` (paper Eq. 9,
+//! Figure 1).
+
+use super::expansion::FastfoodBlock;
+use super::factory::McKernelConfig;
+use crate::linalg::Matrix;
+use crate::util::pow2::next_pow2;
+
+/// The McKernel feature generator (paper Figure 1's `mckernel(x)`).
+///
+/// Output layout for expansion `e` (0-based), padded dim `n`:
+/// `out[e·2n .. e·2n+n] = cos(Ẑ_e x̂)`, `out[e·2n+n .. (e+1)·2n] = sin(Ẑ_e x̂)`.
+#[derive(Debug, Clone)]
+pub struct McKernel {
+    config: McKernelConfig,
+    /// Padded dimension `[S]₂`.
+    n: usize,
+    blocks: Vec<FastfoodBlock>,
+}
+
+impl McKernel {
+    /// Materialize the feature map for `config` (deterministic in
+    /// `config.seed`).
+    pub fn new(config: McKernelConfig) -> McKernel {
+        config.validate();
+        let n = next_pow2(config.input_dim);
+        let blocks = (0..config.expansions)
+            .map(|e| FastfoodBlock::new(config.seed, e, n, config.kernel, config.sigma))
+            .collect();
+        McKernel { config, n, blocks }
+    }
+
+    /// The configuration this map was built from.
+    pub fn config(&self) -> &McKernelConfig {
+        &self.config
+    }
+
+    /// Padded input dimension `[S]₂`.
+    pub fn padded_dim(&self) -> usize {
+        self.n
+    }
+
+    /// Raw input dimension `S`.
+    pub fn input_dim(&self) -> usize {
+        self.config.input_dim
+    }
+
+    /// Output feature dimension `2·[S]₂·E` (paper Eq. 22's feature
+    /// term).
+    pub fn feature_dim(&self) -> usize {
+        2 * self.n * self.blocks.len()
+    }
+
+    /// Number of expansions `E`.
+    pub fn expansions(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Per-expansion blocks (for cross-layer coefficient checks).
+    pub fn blocks(&self) -> &[FastfoodBlock] {
+        &self.blocks
+    }
+
+    /// Scratch buffer pair sized for [`McKernel::transform_into`].
+    pub fn make_scratch(&self) -> (Vec<f32>, Vec<f32>) {
+        (vec![0.0; self.n], vec![0.0; self.n])
+    }
+
+    /// Compute `φ(x)` into `out` (`len == feature_dim()`), using the
+    /// caller's scratch (allocation-free hot path). `x.len()` must be
+    /// `input_dim` (padding applied internally) or exactly `n`.
+    pub fn transform_into(
+        &self,
+        x: &[f32],
+        out: &mut [f32],
+        scratch: &mut (Vec<f32>, Vec<f32>),
+    ) {
+        let n = self.n;
+        assert!(
+            x.len() == self.config.input_dim || x.len() == n,
+            "input length {} (expect {} or {})",
+            x.len(),
+            self.config.input_dim,
+            n
+        );
+        assert_eq!(out.len(), self.feature_dim(), "output length");
+        let (padded, tmp) = scratch;
+        padded[..x.len()].copy_from_slice(x);
+        padded[x.len()..].fill(0.0);
+        for (e, block) in self.blocks.iter().enumerate() {
+            let seg = &mut out[e * 2 * n..(e + 1) * 2 * n];
+            let (cos_half, sin_half) = seg.split_at_mut(n);
+            // Ẑx̂ into cos_half (as scratch), then write the pair.
+            // sin_cos computes both trig values in one libm call —
+            // the trig map dominates the per-sample profile (§Perf).
+            block.apply(padded, cos_half, tmp);
+            for i in 0..n {
+                let (s, c) = cos_half[i].sin_cos();
+                sin_half[i] = s;
+                cos_half[i] = c;
+            }
+        }
+    }
+
+    /// Allocating convenience wrapper over [`McKernel::transform_into`].
+    pub fn transform(&self, x: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0; self.feature_dim()];
+        let mut scratch = self.make_scratch();
+        self.transform_into(x, &mut out, &mut scratch);
+        out
+    }
+
+    /// Transform every row of `(batch, input_dim)` into
+    /// `(batch, feature_dim)`.
+    pub fn transform_batch(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols(), self.config.input_dim, "batch feature width");
+        let mut out = Matrix::zeros(x.rows(), self.feature_dim());
+        let mut scratch = self.make_scratch();
+        for r in 0..x.rows() {
+            self.transform_into(x.row(r), out.row_mut(r), &mut scratch);
+        }
+        out
+    }
+
+    /// Kernel-approximation form: features scaled by `1/√(n·E)` so
+    /// that `⟨φ̄(x), φ̄(y)⟩ ≈ k(x, y)` (Rahimi–Recht estimator — the
+    /// normalization is absorbed by `W` in the learning setting, but
+    /// needed to *validate* the approximation).
+    pub fn transform_normalized(&self, x: &[f32]) -> Vec<f32> {
+        let mut out = self.transform(x);
+        let s = 1.0 / ((self.n * self.expansions()) as f32).sqrt();
+        for v in out.iter_mut() {
+            *v *= s;
+        }
+        out
+    }
+
+    /// `Ẑ_e x̂` alone (the linear stage) — used by tests and the
+    /// Python cross-check.
+    pub fn zx(&self, e: usize, x: &[f32]) -> Vec<f32> {
+        let mut padded = vec![0.0f32; self.n];
+        padded[..x.len()].copy_from_slice(x);
+        let mut out = vec![0.0f32; self.n];
+        let mut tmp = vec![0.0f32; self.n];
+        self.blocks[e].apply(&padded, &mut out, &mut tmp);
+        out
+    }
+
+    /// Learned-parameter count for a `classes`-way linear head on top
+    /// of this map (paper Eq. 22: `C·(2·[S]₂·E + 1)`).
+    pub fn head_param_count(&self, classes: usize) -> usize {
+        classes * (self.feature_dim() + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mckernel::factory::McKernelConfig;
+    use crate::mckernel::kernel::Kernel;
+
+    fn map(input_dim: usize, e: usize, sigma: f64, seed: u64) -> McKernel {
+        McKernel::new(McKernelConfig {
+            input_dim,
+            expansions: e,
+            sigma,
+            kernel: Kernel::Rbf,
+            seed,
+        })
+    }
+
+    #[test]
+    fn dimensions() {
+        let m = map(784, 3, 1.0, 1);
+        assert_eq!(m.padded_dim(), 1024);
+        assert_eq!(m.feature_dim(), 2 * 1024 * 3);
+        assert_eq!(m.head_param_count(10), 10 * (2 * 1024 * 3 + 1));
+    }
+
+    #[test]
+    fn eq22_parameter_count_paper_example() {
+        // MNIST: S=784 → [S]₂=1024; C=10.  Eq. 22: 10·(2·1024·E + 1).
+        for e in [1usize, 2, 4, 8] {
+            let m = map(784, e, 1.0, 1);
+            assert_eq!(m.head_param_count(10), 10 * (2 * 1024 * e + 1));
+        }
+    }
+
+    #[test]
+    fn output_in_unit_box() {
+        let m = map(20, 2, 1.0, 2);
+        let x: Vec<f32> = (0..20).map(|i| i as f32 / 20.0).collect();
+        let f = m.transform(&x);
+        assert!(f.iter().all(|v| (-1.0..=1.0).contains(v)));
+    }
+
+    #[test]
+    fn cos_sin_blocks_consistent() {
+        // cos²+sin² = 1 element-wise within each expansion.
+        let m = map(16, 2, 1.0, 3);
+        let x: Vec<f32> = (0..16).map(|i| (i as f32).sin()).collect();
+        let f = m.transform(&x);
+        let n = m.padded_dim();
+        for e in 0..2 {
+            for i in 0..n {
+                let c = f[e * 2 * n + i];
+                let s = f[e * 2 * n + n + i];
+                assert!((c * c + s * s - 1.0).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let x: Vec<f32> = (0..30).map(|i| i as f32 * 0.1).collect();
+        let a = map(30, 1, 1.0, 5).transform(&x);
+        let b = map(30, 1, 1.0, 5).transform(&x);
+        let c = map(30, 1, 1.0, 6).transform(&x);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn kernel_approximation_rbf() {
+        // THE core validity test: ⟨φ̄(x), φ̄(y)⟩ → exp(-‖x−y‖²/(2σ²)).
+        let d = 24;
+        let sigma = 2.0;
+        let m = map(d, 16, sigma, 7); // 16 expansions → 32·32=… features
+        let mut rng = crate::hash::HashRng::new(99, 0);
+        let mut max_err = 0.0f64;
+        for _ in 0..8 {
+            let x: Vec<f32> = (0..d).map(|_| rng.next_f32() - 0.5).collect();
+            let y: Vec<f32> = (0..d).map(|_| rng.next_f32() - 0.5).collect();
+            let fx = m.transform_normalized(&x);
+            let fy = m.transform_normalized(&y);
+            let dot: f64 = fx.iter().zip(&fy).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+            let exact = Kernel::Rbf.exact(&x, &y, sigma);
+            max_err = max_err.max((dot - exact).abs());
+        }
+        assert!(max_err < 0.08, "kernel approx error {max_err}");
+    }
+
+    #[test]
+    fn self_similarity_is_one() {
+        // k(x,x)=1 exactly: cos²+sin² sums give ⟨φ̄(x),φ̄(x)⟩ = 1.
+        let m = map(10, 4, 1.0, 8);
+        let x: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let f = m.transform_normalized(&x);
+        let dot: f64 = f.iter().map(|v| (*v as f64).powi(2)).sum();
+        assert!((dot - 1.0).abs() < 1e-4, "self-sim {dot}");
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let m = map(12, 2, 1.0, 9);
+        let x = Matrix::from_fn(3, 12, |r, c| (r * 12 + c) as f32 * 0.01);
+        let batch = m.transform_batch(&x);
+        for r in 0..3 {
+            let single = m.transform(x.row(r));
+            assert_eq!(batch.row(r), &single[..]);
+        }
+    }
+
+    #[test]
+    fn padding_is_zero_extension() {
+        // Same content padded by hand must give identical features.
+        let m = map(12, 1, 1.0, 10);
+        let x: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let mut xp = x.clone();
+        xp.resize(16, 0.0);
+        assert_eq!(m.transform(&x), m.transform(&xp));
+    }
+
+    #[test]
+    fn zx_matches_transform_prefix() {
+        let m = map(8, 2, 1.0, 11);
+        let x: Vec<f32> = (0..8).map(|i| (i as f32) * 0.3).collect();
+        let z1 = m.zx(1, &x);
+        let f = m.transform(&x);
+        let n = m.padded_dim();
+        for i in 0..n {
+            assert!((f[2 * n + i] - z1[i].cos()).abs() < 1e-6);
+            assert!((f[2 * n + n + i] - z1[i].sin()).abs() < 1e-6);
+        }
+    }
+}

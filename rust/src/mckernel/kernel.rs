@@ -1,0 +1,157 @@
+//! Kernel calibration (paper §3 "Calibration C" and §6.1).
+//!
+//! The choice of kernel only changes the *radial distribution* of the
+//! calibration entries: the diagonal `C` rescales each row of the
+//! structured matrix `H·G·Π·H·B` so row norms follow the spectral
+//! distribution of the target kernel.
+//!
+//! * **RBF** (Gaussian): row norms of an i.i.d. Gaussian matrix are
+//!   chi_n distributed → `r_i ~ chi_n` via [`crate::rand::chi`].
+//! * **RBF Matérn**: the paper's recipe — "draw `t` i.i.d. samples from
+//!   the n-dimensional unit ball, add them and compute its Euclidean
+//!   norm" (§6.1, Eq. 14).
+
+use crate::hash::HashRng;
+use crate::rand::{ball, chi, BoxMuller};
+
+/// Which kernel the calibration diagonal realizes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Kernel {
+    /// Gaussian RBF, `k(x,x') = exp(-‖x−x'‖²/(2σ²))` (paper Eq. 3).
+    Rbf,
+    /// RBF Matérn with `t` ball-sample summands (paper §6.1; the
+    /// figures use `t = 40`).
+    RbfMatern { t: u32 },
+}
+
+impl Kernel {
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<Kernel> {
+        match s {
+            "rbf" => Some(Kernel::Rbf),
+            "matern" | "rbf_matern" | "rbf-matern" => Some(Kernel::RbfMatern { t: 40 }),
+            _ => None,
+        }
+    }
+
+    /// Human name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kernel::Rbf => "rbf",
+            Kernel::RbfMatern { .. } => "rbf_matern",
+        }
+    }
+
+    /// Draw the calibration radius `r_i` for one output dimension of
+    /// an `n`-dimensional expansion. `bm`/`uni` must be dedicated
+    /// derived streams so entries are i.i.d. and regenerable.
+    pub fn radius(&self, n: usize, bm: &mut BoxMuller, uni: &mut HashRng) -> f64 {
+        match *self {
+            Kernel::Rbf => chi(n as f64, bm, uni),
+            Kernel::RbfMatern { t } => {
+                // Sum of t uniform draws in the unit n-ball, then norm.
+                let mut acc = vec![0.0f64; n];
+                for _ in 0..t {
+                    let z = ball::sample_ball(n, 1.0, uni.next_f64(), bm);
+                    for (a, v) in acc.iter_mut().zip(z) {
+                        *a += v;
+                    }
+                }
+                ball::norm(&acc)
+            }
+        }
+    }
+
+    /// The exact kernel value `k(x, x')` — the oracle the approximate
+    /// feature map is validated against.
+    pub fn exact(&self, x: &[f32], y: &[f32], sigma: f64) -> f64 {
+        assert_eq!(x.len(), y.len());
+        let d2: f64 = x
+            .iter()
+            .zip(y.iter())
+            .map(|(a, b)| {
+                let d = (*a - *b) as f64;
+                d * d
+            })
+            .sum();
+        match self {
+            Kernel::Rbf => (-d2 / (2.0 * sigma * sigma)).exp(),
+            // No closed form published for the paper's summed-ball
+            // Matérn variant; the RBF bound is used for sanity only.
+            Kernel::RbfMatern { .. } => (-d2 / (2.0 * sigma * sigma)).exp(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn streams(seed: u64) -> (BoxMuller, HashRng) {
+        (
+            BoxMuller::new(HashRng::new(seed, 1)),
+            HashRng::new(seed, 2),
+        )
+    }
+
+    #[test]
+    fn rbf_radius_matches_chi_mean() {
+        // E[chi_n] ≈ √n for large n.
+        let n = 256;
+        let (mut bm, mut uni) = streams(11);
+        let trials = 2_000;
+        let mean: f64 = (0..trials)
+            .map(|_| Kernel::Rbf.radius(n, &mut bm, &mut uni))
+            .sum::<f64>()
+            / trials as f64;
+        let expect = (n as f64).sqrt();
+        assert!((mean - expect).abs() < 0.05 * expect, "mean {mean} vs {expect}");
+    }
+
+    #[test]
+    fn matern_radius_positive_and_bounded() {
+        // Sum of t unit-ball vectors has norm ≤ t.
+        let (mut bm, mut uni) = streams(13);
+        let k = Kernel::RbfMatern { t: 10 };
+        for _ in 0..200 {
+            let r = k.radius(16, &mut bm, &mut uni);
+            assert!(r > 0.0 && r <= 10.0, "r={r}");
+        }
+    }
+
+    #[test]
+    fn matern_radius_scales_sub_linearly_in_t() {
+        // Random-walk norm grows ~√t, far below the t upper bound.
+        let (mut bm, mut uni) = streams(17);
+        let n = 32;
+        let trials = 300;
+        let mean_t = |t: u32, bm: &mut BoxMuller, uni: &mut HashRng| -> f64 {
+            (0..trials)
+                .map(|_| Kernel::RbfMatern { t }.radius(n, bm, uni))
+                .sum::<f64>()
+                / trials as f64
+        };
+        let m4 = mean_t(4, &mut bm, &mut uni);
+        let m64 = mean_t(64, &mut bm, &mut uni);
+        assert!(m64 > m4, "norm should grow with t");
+        assert!(m64 < m4 * 16.0 * 0.5, "should grow sub-linearly: {m4} {m64}");
+    }
+
+    #[test]
+    fn exact_rbf_values() {
+        let x = [0.0f32, 0.0];
+        let y = [1.0f32, 0.0];
+        assert!((Kernel::Rbf.exact(&x, &x, 1.0) - 1.0).abs() < 1e-12);
+        assert!((Kernel::Rbf.exact(&x, &y, 1.0) - (-0.5f64).exp()).abs() < 1e-9);
+        // larger sigma → closer to 1
+        assert!(Kernel::Rbf.exact(&x, &y, 10.0) > Kernel::Rbf.exact(&x, &y, 0.1));
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Kernel::parse("rbf"), Some(Kernel::Rbf));
+        assert_eq!(Kernel::parse("matern"), Some(Kernel::RbfMatern { t: 40 }));
+        assert_eq!(Kernel::parse("poly"), None);
+        assert_eq!(Kernel::Rbf.name(), "rbf");
+    }
+}

@@ -1,0 +1,30 @@
+//! The McKernel feature map — the paper's primary contribution.
+//!
+//! Computes the Fastfood factorization (paper Eq. 8)
+//!
+//! ```text
+//! Ẑ := (1/(σ√n)) · C · H · G · Π · H · B
+//! ```
+//!
+//! and the real feature map (paper Eq. 9) `φ(x) = [cos(Ẑx̂), sin(Ẑx̂)]`
+//! where `x̂` is the input padded to the next power of two. `E`
+//! independent expansions are stacked to reach any target feature
+//! dimension ("whenever the number of rows in W exceeds the
+//! dimensionality of the data, we can simply generate multiple
+//! instances of Ẑ, drawn i.i.d.").
+//!
+//! Every random coefficient is hash-derived (see [`crate::hash`]), so
+//! a trained model is reproduced from `(seed, config)` alone — the
+//! paper's compact-distribution story (§7).
+
+pub mod diag;
+pub mod expansion;
+pub mod factory;
+pub mod feature_map;
+pub mod kernel;
+pub mod mmd;
+
+pub use expansion::FastfoodBlock;
+pub use factory::{McKernelConfig, McKernelFactory};
+pub use feature_map::McKernel;
+pub use kernel::Kernel;

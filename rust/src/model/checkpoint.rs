@@ -1,0 +1,219 @@
+//! Binary checkpoints: JSON header + little-endian f32 payload.
+//!
+//! Only the *learned* parameters (W, b) are stored — the feature map
+//! is reconstructed from its config (the paper's compact-model story:
+//! "no need to save the coefficients generated for McKernel when
+//! deploying", §6).
+
+use crate::linalg::Matrix;
+use crate::mckernel::{Kernel, McKernelConfig};
+use crate::model::SoftmaxRegression;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"MCKCKPT1";
+
+/// Everything needed to reconstruct an inference pipeline.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    /// Feature-map config (`None` = raw-pixel LR baseline).
+    pub feature_config: Option<McKernelConfig>,
+    /// The linear head.
+    pub model: SoftmaxRegression,
+    /// Training metadata (epochs run, final loss, …) — free-form.
+    pub meta: BTreeMap<String, Json>,
+}
+
+fn config_to_json(c: &McKernelConfig) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("input_dim".into(), Json::Num(c.input_dim as f64));
+    m.insert("expansions".into(), Json::Num(c.expansions as f64));
+    m.insert("sigma".into(), Json::Num(c.sigma));
+    m.insert("kernel".into(), Json::Str(c.kernel.name().into()));
+    if let Kernel::RbfMatern { t } = c.kernel {
+        m.insert("matern_t".into(), Json::Num(t as f64));
+    }
+    m.insert("seed".into(), Json::Num(c.seed as f64));
+    Json::Obj(m)
+}
+
+fn config_from_json(j: &Json) -> Result<McKernelConfig> {
+    let get = |k: &str| j.get(k).with_context(|| format!("missing config key {k}"));
+    let kernel = match get("kernel")?.as_str().context("kernel type")? {
+        "rbf" => Kernel::Rbf,
+        "rbf_matern" => Kernel::RbfMatern {
+            t: get("matern_t")?.as_usize().context("matern_t")? as u32,
+        },
+        other => bail!("unknown kernel '{other}'"),
+    };
+    Ok(McKernelConfig {
+        input_dim: get("input_dim")?.as_usize().context("input_dim")?,
+        expansions: get("expansions")?.as_usize().context("expansions")?,
+        sigma: get("sigma")?.as_f64().context("sigma")?,
+        kernel,
+        seed: get("seed")?.as_f64().context("seed")? as u64,
+    })
+}
+
+impl Checkpoint {
+    /// Serialize: magic, u32 header length, JSON header, then W then b
+    /// as little-endian f32.
+    pub fn write_to<W: Write>(&self, mut w: W) -> Result<()> {
+        let mut head = BTreeMap::new();
+        head.insert("classes".into(), Json::Num(self.model.classes() as f64));
+        head.insert("features".into(), Json::Num(self.model.features() as f64));
+        if let Some(fc) = &self.feature_config {
+            head.insert("feature_config".into(), config_to_json(fc));
+        }
+        head.insert("meta".into(), Json::Obj(self.meta.clone()));
+        let header = Json::Obj(head).to_string();
+        w.write_all(MAGIC)?;
+        w.write_all(&(header.len() as u32).to_le_bytes())?;
+        w.write_all(header.as_bytes())?;
+        for v in self.model.w().data() {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        for v in self.model.b() {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    /// Deserialize (format produced by [`Checkpoint::write_to`]).
+    pub fn read_from<R: Read>(mut r: R) -> Result<Checkpoint> {
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic).context("checkpoint magic")?;
+        if &magic != MAGIC {
+            bail!("not a McKernel checkpoint");
+        }
+        let mut len = [0u8; 4];
+        r.read_exact(&mut len)?;
+        let mut header = vec![0u8; u32::from_le_bytes(len) as usize];
+        r.read_exact(&mut header).context("checkpoint header")?;
+        let head = Json::parse(std::str::from_utf8(&header)?).context("header JSON")?;
+        let classes = head.get("classes").and_then(Json::as_usize).context("classes")?;
+        let features = head.get("features").and_then(Json::as_usize).context("features")?;
+        let feature_config = match head.get("feature_config") {
+            Some(fc) => Some(config_from_json(fc)?),
+            None => None,
+        };
+        let meta = head
+            .get("meta")
+            .and_then(Json::as_obj)
+            .cloned()
+            .unwrap_or_default();
+        let mut buf = vec![0u8; (classes * features + classes) * 4];
+        r.read_exact(&mut buf).context("checkpoint payload")?;
+        let floats: Vec<f32> = buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let (wdata, bdata) = floats.split_at(classes * features);
+        let mut model = SoftmaxRegression::zeros(classes, features);
+        model.w_mut().data_mut().copy_from_slice(wdata);
+        model.b_mut().copy_from_slice(bdata);
+        let _ = Matrix::zeros(0, 0); // keep Matrix import honest
+        Ok(Checkpoint { feature_config, model, meta })
+    }
+
+    /// Save to a file.
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let f = std::fs::File::create(&path)
+            .with_context(|| format!("create {}", path.as_ref().display()))?;
+        self.write_to(std::io::BufWriter::new(f))
+    }
+
+    /// Load from a file.
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Checkpoint> {
+        let f = std::fs::File::open(&path)
+            .with_context(|| format!("open {}", path.as_ref().display()))?;
+        Checkpoint::read_from(std::io::BufReader::new(f))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        let mut model = SoftmaxRegression::zeros(3, 5);
+        for (i, v) in model.w_mut().data_mut().iter_mut().enumerate() {
+            *v = i as f32 * 0.5 - 3.0;
+        }
+        model.b_mut()[1] = 9.25;
+        let mut meta = BTreeMap::new();
+        meta.insert("epochs".into(), Json::Num(20.0));
+        Checkpoint {
+            feature_config: Some(McKernelConfig {
+                input_dim: 784,
+                expansions: 4,
+                sigma: 1.0,
+                kernel: Kernel::RbfMatern { t: 40 },
+                seed: 1398239763,
+            }),
+            model,
+            meta,
+        }
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let ck = sample();
+        let mut buf = Vec::new();
+        ck.write_to(&mut buf).unwrap();
+        let back = Checkpoint::read_from(&buf[..]).unwrap();
+        assert_eq!(back.model.w().data(), ck.model.w().data());
+        assert_eq!(back.model.b(), ck.model.b());
+        assert_eq!(back.feature_config, ck.feature_config);
+        assert_eq!(back.meta.get("epochs"), Some(&Json::Num(20.0)));
+    }
+
+    #[test]
+    fn roundtrip_file() {
+        let dir = std::env::temp_dir().join("mckernel_ckpt_test");
+        let p = dir.join("model.mck");
+        let ck = sample();
+        ck.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(back.model.w().data(), ck.model.w().data());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn lr_baseline_without_feature_config() {
+        let ck = Checkpoint {
+            feature_config: None,
+            model: SoftmaxRegression::zeros(10, 784),
+            meta: BTreeMap::new(),
+        };
+        let mut buf = Vec::new();
+        ck.write_to(&mut buf).unwrap();
+        let back = Checkpoint::read_from(&buf[..]).unwrap();
+        assert!(back.feature_config.is_none());
+        assert_eq!(back.model.features(), 784);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Checkpoint::read_from(&b"NOTACKPT"[..]).is_err());
+        assert!(Checkpoint::read_from(&b"MCKCKPT1\xff\xff\xff\xff"[..]).is_err());
+    }
+
+    #[test]
+    fn feature_map_reconstruction_matches() {
+        // The checkpoint's promise: rebuilding the map from config
+        // yields the identical featurizer.
+        let ck = sample();
+        let cfg = ck.feature_config.clone().unwrap();
+        let a = crate::mckernel::McKernel::new(cfg.clone());
+        let b = crate::mckernel::McKernel::new(cfg);
+        let x: Vec<f32> = (0..784).map(|i| (i % 255) as f32 / 255.0).collect();
+        assert_eq!(a.transform(&x), b.transform(&x));
+    }
+}

@@ -1,0 +1,234 @@
+//! Learning with kernels, exactly as in paper §2: kernel ridge
+//! regression `f(x) = Σ t_z k(x_z, x)` with `(nγI + K)t = y` (Eq. 1–2),
+//! the V-matrix invariant generalization `(nγI + VK)t = Vy` (Eq. 4–5),
+//! and the random-features approximation that replaces `K` with
+//! `Φ Φᵀ` — demonstrating the paper's core promise that McKernel
+//! features "obviate the need for explicit kernel computations".
+
+use crate::linalg::cholesky::solve_spd;
+use crate::linalg::ops::gemm_nt;
+use crate::linalg::Matrix;
+use crate::mckernel::{Kernel, McKernel};
+use anyhow::{ensure, Result};
+
+/// Exact kernel ridge regression (paper Eq. 1–2).
+pub struct KernelRidge {
+    kernel: Kernel,
+    sigma: f64,
+    gamma: f64,
+    x_train: Matrix,
+    t: Vec<f32>,
+}
+
+impl KernelRidge {
+    /// Fit `(nγI + K)t = y` (Eq. 2) by Cholesky.
+    pub fn fit(kernel: Kernel, sigma: f64, gamma: f64, x: &Matrix, y: &[f32]) -> Result<KernelRidge> {
+        let n = x.rows();
+        ensure!(n == y.len(), "sample/label mismatch");
+        ensure!(gamma > 0.0, "gamma must be positive (well-posedness, §2)");
+        let mut k = Matrix::from_fn(n, n, |i, j| kernel.exact(x.row(i), x.row(j), sigma) as f32);
+        for i in 0..n {
+            k[(i, i)] += (n as f64 * gamma) as f32;
+        }
+        let t = solve_spd(&k, y)?;
+        Ok(KernelRidge { kernel, sigma, gamma, x_train: x.clone(), t })
+    }
+
+    /// Fit the V-matrix variant `(nγI + VK)t = Vy` (paper Eq. 4):
+    /// mutual-position weighting via `V(c,z) = Σ_k (t_k − max(x_c^k, x_z^k))`
+    /// (Eq. 5) with `t_k = 1` for data in `[0,1]^d`. `VK` is not
+    /// symmetric in general; we solve the symmetrized normal form.
+    pub fn fit_with_invariants(
+        kernel: Kernel,
+        sigma: f64,
+        gamma: f64,
+        x: &Matrix,
+        y: &[f32],
+    ) -> Result<KernelRidge> {
+        let n = x.rows();
+        ensure!(n == y.len(), "sample/label mismatch");
+        let d = x.cols();
+        // V(c,z) per Eq. 5 (t_k = 1; inputs expected in [0,1])
+        let v = Matrix::from_fn(n, n, |c, z| {
+            let mut s = 0.0f32;
+            for k in 0..d {
+                s += 1.0 - x.row(c)[k].max(x.row(z)[k]);
+            }
+            s / d as f32 // normalize so V ~ O(1)
+        });
+        let km = Matrix::from_fn(n, n, |i, j| kernel.exact(x.row(i), x.row(j), sigma) as f32);
+        // A = nγI + VK ; solve AᵀA t = Aᵀ V y  (SPD normal equations)
+        let mut vk = Matrix::zeros(n, n);
+        crate::linalg::gemm(&v, &km, &mut vk);
+        for i in 0..n {
+            vk[(i, i)] += (n as f64 * gamma) as f32;
+        }
+        let mut vy = vec![0.0f32; n];
+        crate::linalg::gemv(&v, y, &mut vy);
+        let mut ata = Matrix::zeros(n, n);
+        crate::linalg::ops::gemm_tn(&vk, &vk, &mut ata);
+        let vkt = vk.transpose();
+        let mut rhs = vec![0.0f32; n];
+        crate::linalg::gemv(&vkt, &vy, &mut rhs);
+        // Jitter the normal equations relative to their scale (f32
+        // Cholesky on AᵀA squares the condition number), growing until
+        // the factorization succeeds.
+        let mean_diag: f32 = (0..n).map(|i| ata[(i, i)]).sum::<f32>() / n as f32;
+        let mut jitter = 1e-6 * mean_diag.max(1e-12);
+        let t = loop {
+            let mut reg = ata.clone();
+            for i in 0..n {
+                reg[(i, i)] += jitter;
+            }
+            match solve_spd(&reg, &rhs) {
+                Ok(t) => break t,
+                Err(_) if jitter < mean_diag => jitter *= 10.0,
+                Err(e) => return Err(e),
+            }
+        };
+        Ok(KernelRidge { kernel, sigma, gamma, x_train: x.clone(), t })
+    }
+
+    /// `f(x) = Σ_z t_z k(x_z, x)` (Eq. 1).
+    pub fn predict_one(&self, x: &[f32]) -> f32 {
+        self.t
+            .iter()
+            .enumerate()
+            .map(|(z, &tz)| tz * self.kernel.exact(self.x_train.row(z), x, self.sigma) as f32)
+            .sum()
+    }
+
+    /// Batch prediction.
+    pub fn predict(&self, x: &Matrix) -> Vec<f32> {
+        (0..x.rows()).map(|r| self.predict_one(x.row(r))).collect()
+    }
+
+    /// Regularization strength γ.
+    pub fn gamma(&self) -> f64 {
+        self.gamma
+    }
+}
+
+/// Ridge regression on McKernel random features: `K ≈ Φ Φᵀ` with
+/// `Φ = φ̄(X)` — linear-time in n for fitting the primal weights.
+pub struct FeatureRidge {
+    w: Vec<f32>,
+}
+
+impl FeatureRidge {
+    /// Fit primal ridge `(ΦᵀΦ + λI) w = Φᵀ y` over normalized McKernel
+    /// features.
+    pub fn fit(map: &McKernel, lambda: f64, x: &Matrix, y: &[f32]) -> Result<FeatureRidge> {
+        ensure!(x.rows() == y.len());
+        let phi = normalized_features(map, x);
+        let d = phi.cols();
+        // Gram in feature space
+        let phit = phi.transpose();
+        let mut gram = Matrix::zeros(d, d);
+        crate::linalg::ops::gemm_tn(&phi, &phi, &mut gram);
+        for i in 0..d {
+            gram[(i, i)] += lambda as f32;
+        }
+        let mut rhs = vec![0.0f32; d];
+        crate::linalg::gemv(&phit, y, &mut rhs);
+        let w = solve_spd(&gram, &rhs)?;
+        Ok(FeatureRidge { w })
+    }
+
+    /// `f(x) = ⟨w, φ̄(x)⟩`.
+    pub fn predict(&self, map: &McKernel, x: &Matrix) -> Vec<f32> {
+        let phi = normalized_features(map, x);
+        let mut out = Matrix::zeros(x.rows(), 1);
+        let wm = Matrix::from_vec(1, self.w.len(), self.w.clone());
+        gemm_nt(&phi, &wm, &mut out);
+        out.into_vec()
+    }
+}
+
+fn normalized_features(map: &McKernel, x: &Matrix) -> Matrix {
+    let mut phi = map.transform_batch(x);
+    let s = 1.0 / ((map.padded_dim() * map.expansions()) as f32).sqrt();
+    for v in phi.data_mut() {
+        *v *= s;
+    }
+    phi
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mckernel::McKernelFactory;
+
+    /// Smooth 1-target regression problem on [0,1]^d.
+    fn problem(n: usize, d: usize, seed: u64) -> (Matrix, Vec<f32>) {
+        let mut rng = crate::hash::HashRng::new(seed, 0x12);
+        let x = Matrix::from_fn(n, d, |_, _| rng.next_f32());
+        let y: Vec<f32> = (0..n)
+            .map(|i| {
+                let r = x.row(i);
+                (2.0 * std::f32::consts::PI * r[0]).sin() + r[1 % d]
+            })
+            .collect();
+        (x, y)
+    }
+
+    #[test]
+    fn krr_interpolates_training_data_with_small_gamma() {
+        let (x, y) = problem(40, 2, 1);
+        let m = KernelRidge::fit(Kernel::Rbf, 0.5, 1e-6, &x, &y).unwrap();
+        let pred = m.predict(&x);
+        let mse: f32 = pred.iter().zip(&y).map(|(p, t)| (p - t) * (p - t)).sum::<f32>() / 40.0;
+        assert!(mse < 1e-3, "train mse {mse}");
+    }
+
+    #[test]
+    fn krr_generalizes_smooth_function() {
+        let (x, y) = problem(120, 2, 2);
+        let (xt, yt) = problem(40, 2, 3);
+        let m = KernelRidge::fit(Kernel::Rbf, 0.5, 1e-4, &x, &y).unwrap();
+        let pred = m.predict(&xt);
+        let mse: f32 = pred.iter().zip(&yt).map(|(p, t)| (p - t) * (p - t)).sum::<f32>() / 40.0;
+        assert!(mse < 0.05, "test mse {mse}");
+    }
+
+    #[test]
+    fn gamma_controls_smoothing() {
+        // Large gamma shrinks the fit toward zero (Eq. 2's nγI term).
+        let (x, y) = problem(30, 2, 4);
+        let tight = KernelRidge::fit(Kernel::Rbf, 0.5, 1e-6, &x, &y).unwrap();
+        let smooth = KernelRidge::fit(Kernel::Rbf, 0.5, 10.0, &x, &y).unwrap();
+        let norm = |p: &[f32]| p.iter().map(|v| v * v).sum::<f32>();
+        assert!(norm(&smooth.predict(&x)) < norm(&tight.predict(&x)) * 0.5);
+    }
+
+    #[test]
+    fn invariant_variant_runs_and_fits() {
+        let (x, y) = problem(40, 2, 5);
+        let m = KernelRidge::fit_with_invariants(Kernel::Rbf, 0.5, 1e-3, &x, &y).unwrap();
+        let pred = m.predict(&x);
+        let mse: f32 = pred.iter().zip(&y).map(|(p, t)| (p - t) * (p - t)).sum::<f32>() / 40.0;
+        assert!(mse < 0.2, "train mse {mse}");
+    }
+
+    #[test]
+    fn feature_ridge_approximates_exact_krr() {
+        // The paper's pitch: Φ Φᵀ ≈ K, so primal ridge on McKernel
+        // features tracks exact KRR.
+        let (x, y) = problem(100, 2, 6);
+        let (xt, _) = problem(30, 2, 7);
+        let exact = KernelRidge::fit(Kernel::Rbf, 0.5, 1e-3, &x, &y).unwrap();
+        let map = McKernelFactory::new(2).expansions(64).sigma(0.5).rbf().seed(8).build();
+        let approx = FeatureRidge::fit(&map, 100.0 * 1e-3, &x, &y).unwrap();
+        let pe = exact.predict(&xt);
+        let pa = approx.predict(&map, &xt);
+        let corr = {
+            let me = pe.iter().sum::<f32>() / pe.len() as f32;
+            let ma = pa.iter().sum::<f32>() / pa.len() as f32;
+            let cov: f32 = pe.iter().zip(&pa).map(|(a, b)| (a - me) * (b - ma)).sum();
+            let va: f32 = pe.iter().map(|a| (a - me) * (a - me)).sum();
+            let vb: f32 = pa.iter().map(|b| (b - ma) * (b - ma)).sum();
+            cov / (va.sqrt() * vb.sqrt())
+        };
+        assert!(corr > 0.9, "exact-vs-features prediction correlation {corr}");
+    }
+}

@@ -1,0 +1,11 @@
+//! Models: the linear softmax head `softmax(Wx̃ + b)` the paper trains
+//! on top of the feature map (Eq. 23), which doubles as plain
+//! multinomial logistic regression when fed raw pixels (the paper's
+//! LR baseline in Figures 3–5). Plus binary checkpointing.
+
+pub mod checkpoint;
+pub mod krr;
+pub mod softmax_reg;
+
+pub use krr::{FeatureRidge, KernelRidge};
+pub use softmax_reg::SoftmaxRegression;

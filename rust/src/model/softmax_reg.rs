@@ -1,0 +1,259 @@
+//! Multinomial logistic (softmax) regression with explicit
+//! forward/backward — the paper's linear head (Eq. 23) and its LR
+//! baseline. Loss is the multiclass logistic loss (Eq. 20's softmax
+//! generalization), minimized by SGD (Eq. 21).
+
+use crate::hash::hash_rng::streams;
+use crate::hash::HashRng;
+use crate::linalg::ops::{gemm_nt, gemm_tn, softmax_rows};
+use crate::linalg::Matrix;
+
+/// `softmax(W x + b)` classifier. `W: (classes, features)`, `b: (classes)`.
+#[derive(Debug, Clone)]
+pub struct SoftmaxRegression {
+    w: Matrix,
+    b: Vec<f32>,
+}
+
+/// Gradients of the loss w.r.t. `(W, b)`.
+#[derive(Debug, Clone)]
+pub struct Gradients {
+    pub dw: Matrix,
+    pub db: Vec<f32>,
+}
+
+impl SoftmaxRegression {
+    /// Zero-initialized model (convex problem: zeros are a fine start,
+    /// and they make runs bit-reproducible trivially).
+    pub fn zeros(classes: usize, features: usize) -> SoftmaxRegression {
+        SoftmaxRegression { w: Matrix::zeros(classes, features), b: vec![0.0; classes] }
+    }
+
+    /// Small hash-seeded Gaussian init (scale `0.01`), for parity with
+    /// the Python/JAX L2 model.
+    pub fn init(classes: usize, features: usize, seed: u64) -> SoftmaxRegression {
+        let rng = HashRng::new(seed, streams::INIT);
+        let mut w = Matrix::zeros(classes, features);
+        for (k, v) in w.data_mut().iter_mut().enumerate() {
+            *v = 0.01 * crate::rand::BoxMuller::at(&rng, k as u64) as f32;
+        }
+        SoftmaxRegression { w, b: vec![0.0; classes] }
+    }
+
+    pub fn classes(&self) -> usize {
+        self.w.rows()
+    }
+
+    pub fn features(&self) -> usize {
+        self.w.cols()
+    }
+
+    /// Learned parameter count `C·(features + 1)` (paper Eq. 22 when
+    /// `features = 2·[S]₂·E`).
+    pub fn param_count(&self) -> usize {
+        self.classes() * (self.features() + 1)
+    }
+
+    pub fn w(&self) -> &Matrix {
+        &self.w
+    }
+
+    pub fn b(&self) -> &[f32] {
+        &self.b
+    }
+
+    pub fn w_mut(&mut self) -> &mut Matrix {
+        &mut self.w
+    }
+
+    pub fn b_mut(&mut self) -> &mut [f32] {
+        &mut self.b
+    }
+
+    /// Logits `X·Wᵀ + b` for a `(batch, features)` input.
+    pub fn logits(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols(), self.features(), "feature width");
+        let mut out = Matrix::zeros(x.rows(), self.classes());
+        gemm_nt(x, &self.w, &mut out);
+        for r in 0..out.rows() {
+            for (v, bias) in out.row_mut(r).iter_mut().zip(self.b.iter()) {
+                *v += bias;
+            }
+        }
+        out
+    }
+
+    /// Class probabilities.
+    pub fn predict_proba(&self, x: &Matrix) -> Matrix {
+        let mut p = self.logits(x);
+        softmax_rows(&mut p);
+        p
+    }
+
+    /// Hard predictions.
+    pub fn predict(&self, x: &Matrix) -> Vec<u8> {
+        let p = self.logits(x);
+        (0..p.rows())
+            .map(|r| crate::linalg::argmax(p.row(r)) as u8)
+            .collect()
+    }
+
+    /// Mean cross-entropy loss and gradients for a batch.
+    ///
+    /// Backward pass in closed form: with `P = softmax(XWᵀ+b)` and
+    /// one-hot `Y`, `δ = (P − Y)/batch`, `∂L/∂W = δᵀX`, `∂L/∂b = Σᵣ δᵣ`.
+    pub fn loss_and_grad(&self, x: &Matrix, labels: &[u8]) -> (f32, Gradients) {
+        let batch = x.rows();
+        assert_eq!(labels.len(), batch);
+        let classes = self.classes();
+        let mut delta = self.logits(x);
+        // loss from log-softmax before overwriting with probabilities
+        let mut loss = 0.0f64;
+        for r in 0..batch {
+            let row = delta.row(r);
+            let lse = crate::linalg::logsumexp(row);
+            loss += (lse - row[labels[r] as usize]) as f64;
+        }
+        loss /= batch as f64;
+        softmax_rows(&mut delta);
+        let inv = 1.0 / batch as f32;
+        for r in 0..batch {
+            let row = delta.row_mut(r);
+            row[labels[r] as usize] -= 1.0;
+            for v in row.iter_mut() {
+                *v *= inv;
+            }
+        }
+        // dW = deltaᵀ · X   ((batch,classes)ᵀ·(batch,features))
+        let mut dw = Matrix::zeros(classes, self.features());
+        gemm_tn(&delta, x, &mut dw);
+        let mut db = vec![0.0f32; classes];
+        for r in 0..batch {
+            for (a, v) in db.iter_mut().zip(delta.row(r)) {
+                *a += v;
+            }
+        }
+        (loss as f32, Gradients { dw, db })
+    }
+
+    /// Numerical-gradient check helper (tests): loss only.
+    pub fn loss(&self, x: &Matrix, labels: &[u8]) -> f32 {
+        let mut l = self.logits(x);
+        let mut loss = 0.0f64;
+        for r in 0..x.rows() {
+            let row = l.row_mut(r);
+            let lse = crate::linalg::logsumexp(row);
+            loss += (lse - row[labels[r] as usize]) as f64;
+        }
+        (loss / x.rows() as f64) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_batch() -> (Matrix, Vec<u8>) {
+        // 4 samples, 3 features, 3 classes — separable
+        let x = Matrix::from_vec(
+            4,
+            3,
+            vec![
+                1.0, 0.0, 0.0, //
+                0.9, 0.1, 0.0, //
+                0.0, 1.0, 0.1, //
+                0.0, 0.0, 1.0,
+            ],
+        );
+        (x, vec![0, 0, 1, 2])
+    }
+
+    #[test]
+    fn zero_model_uniform_probs_ln_c_loss() {
+        let (x, y) = toy_batch();
+        let m = SoftmaxRegression::zeros(3, 3);
+        let p = m.predict_proba(&x);
+        for r in 0..4 {
+            for c in 0..3 {
+                assert!((p[(r, c)] - 1.0 / 3.0).abs() < 1e-6);
+            }
+        }
+        let (loss, _) = m.loss_and_grad(&x, &y);
+        assert!((loss - (3.0f32).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let (x, y) = toy_batch();
+        let mut m = SoftmaxRegression::init(3, 3, 42);
+        let (_, g) = m.loss_and_grad(&x, &y);
+        let eps = 1e-3f32;
+        for idx in [(0usize, 0usize), (1, 2), (2, 1)] {
+            let orig = m.w()[idx];
+            m.w_mut()[idx] = orig + eps;
+            let lp = m.loss(&x, &y);
+            m.w_mut()[idx] = orig - eps;
+            let lm = m.loss(&x, &y);
+            m.w_mut()[idx] = orig;
+            let num = (lp - lm) / (2.0 * eps);
+            assert!(
+                (num - g.dw[idx]).abs() < 1e-3,
+                "dW{idx:?}: numeric {num} analytic {}",
+                g.dw[idx]
+            );
+        }
+        // bias gradient
+        let eps = 1e-3f32;
+        let orig = m.b()[1];
+        m.b_mut()[1] = orig + eps;
+        let lp = m.loss(&x, &y);
+        m.b_mut()[1] = orig - eps;
+        let lm = m.loss(&x, &y);
+        m.b_mut()[1] = orig;
+        let num = (lp - lm) / (2.0 * eps);
+        assert!((num - g.db[1]).abs() < 1e-3);
+    }
+
+    #[test]
+    fn grad_rows_sum_to_zero() {
+        // Columns of delta sum to 0 across classes ⇒ Σ_c db_c = 0.
+        let (x, y) = toy_batch();
+        let m = SoftmaxRegression::init(3, 3, 7);
+        let (_, g) = m.loss_and_grad(&x, &y);
+        let s: f32 = g.db.iter().sum();
+        assert!(s.abs() < 1e-6);
+    }
+
+    #[test]
+    fn sgd_descends_and_learns_toy_problem() {
+        let (x, y) = toy_batch();
+        let mut m = SoftmaxRegression::zeros(3, 3);
+        let mut prev = f32::INFINITY;
+        for _ in 0..200 {
+            let (loss, g) = m.loss_and_grad(&x, &y);
+            assert!(loss <= prev + 1e-4, "loss must not increase: {prev} -> {loss}");
+            prev = loss;
+            m.w_mut().axpy(-0.5, &g.dw);
+            for (b, d) in m.b_mut().iter_mut().zip(&g.db) {
+                *b -= 0.5 * d;
+            }
+        }
+        assert_eq!(m.predict(&x), y);
+        assert!(prev < 0.2);
+    }
+
+    #[test]
+    fn param_count_eq22() {
+        let m = SoftmaxRegression::zeros(10, 2 * 1024 * 4);
+        assert_eq!(m.param_count(), 10 * (2 * 1024 * 4 + 1));
+    }
+
+    #[test]
+    fn init_deterministic() {
+        let a = SoftmaxRegression::init(3, 5, 9);
+        let b = SoftmaxRegression::init(3, 5, 9);
+        assert_eq!(a.w().data(), b.w().data());
+        let c = SoftmaxRegression::init(3, 5, 10);
+        assert_ne!(a.w().data(), c.w().data());
+    }
+}

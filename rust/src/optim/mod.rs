@@ -1,0 +1,6 @@
+//! Optimizers: SGD (paper Eq. 21) with optional momentum and gradient
+//! clipping — the knobs the paper's DL framework exposes (§6).
+
+pub mod sgd;
+
+pub use sgd::{Sgd, SgdConfig};

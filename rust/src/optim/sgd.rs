@@ -1,0 +1,162 @@
+//! Stochastic Gradient Descent: `w_{t+1} = w_t − γ·∇g_{c_t}(w_t)`
+//! (paper Eq. 21), with optional classical momentum and global-norm
+//! gradient clipping (features of the paper's framework, §6).
+
+use crate::linalg::Matrix;
+use crate::model::softmax_reg::{Gradients, SoftmaxRegression};
+
+/// SGD hyper-parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SgdConfig {
+    /// Learning rate γ.
+    pub lr: f32,
+    /// Momentum coefficient (0 = plain SGD, the paper's setting).
+    pub momentum: f32,
+    /// Global-norm clip threshold (`None` = no clipping).
+    pub clip: Option<f32>,
+}
+
+impl Default for SgdConfig {
+    fn default() -> Self {
+        SgdConfig { lr: 0.001, momentum: 0.0, clip: None }
+    }
+}
+
+/// SGD state (velocity buffers allocated lazily on first step).
+#[derive(Debug)]
+pub struct Sgd {
+    cfg: SgdConfig,
+    vw: Option<Matrix>,
+    vb: Option<Vec<f32>>,
+    steps: u64,
+}
+
+impl Sgd {
+    pub fn new(cfg: SgdConfig) -> Sgd {
+        assert!(cfg.lr > 0.0, "learning rate must be positive");
+        assert!((0.0..1.0).contains(&cfg.momentum), "momentum in [0,1)");
+        Sgd { cfg, vw: None, vb: None, steps: 0 }
+    }
+
+    pub fn config(&self) -> SgdConfig {
+        self.cfg
+    }
+
+    /// Steps taken so far.
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Global gradient norm (over W and b jointly).
+    pub fn grad_norm(g: &Gradients) -> f32 {
+        let sw: f64 = g.dw.data().iter().map(|v| (*v as f64).powi(2)).sum();
+        let sb: f64 = g.db.iter().map(|v| (*v as f64).powi(2)).sum();
+        (sw + sb).sqrt() as f32
+    }
+
+    /// Apply one update to `model` from gradients `g`.
+    pub fn step(&mut self, model: &mut SoftmaxRegression, g: &Gradients) {
+        let mut scale = 1.0f32;
+        if let Some(c) = self.cfg.clip {
+            let n = Self::grad_norm(g);
+            if n > c {
+                scale = c / n;
+            }
+        }
+        let lr = self.cfg.lr;
+        let mu = self.cfg.momentum;
+        if mu == 0.0 {
+            model.w_mut().axpy(-lr * scale, &g.dw);
+            for (b, d) in model.b_mut().iter_mut().zip(&g.db) {
+                *b -= lr * scale * d;
+            }
+        } else {
+            let vw = self
+                .vw
+                .get_or_insert_with(|| Matrix::zeros(g.dw.rows(), g.dw.cols()));
+            let vb = self.vb.get_or_insert_with(|| vec![0.0; g.db.len()]);
+            for (v, d) in vw.data_mut().iter_mut().zip(g.dw.data()) {
+                *v = mu * *v + scale * d;
+            }
+            for (v, d) in vb.iter_mut().zip(&g.db) {
+                *v = mu * *v + scale * d;
+            }
+            model.w_mut().axpy(-lr, vw);
+            for (b, v) in model.b_mut().iter_mut().zip(vb.iter()) {
+                *b -= lr * v;
+            }
+        }
+        self.steps += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+
+    fn grad(val: f32, classes: usize, feats: usize) -> Gradients {
+        Gradients {
+            dw: Matrix::from_fn(classes, feats, |_, _| val),
+            db: vec![val; classes],
+        }
+    }
+
+    #[test]
+    fn plain_sgd_update_rule() {
+        let mut m = SoftmaxRegression::zeros(2, 3);
+        let mut opt = Sgd::new(SgdConfig { lr: 0.1, momentum: 0.0, clip: None });
+        opt.step(&mut m, &grad(1.0, 2, 3));
+        assert!(m.w().data().iter().all(|&v| (v + 0.1).abs() < 1e-7));
+        assert!(m.b().iter().all(|&v| (v + 0.1).abs() < 1e-7));
+        assert_eq!(opt.steps(), 1);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut m = SoftmaxRegression::zeros(1, 1);
+        let mut opt = Sgd::new(SgdConfig { lr: 1.0, momentum: 0.5, clip: None });
+        opt.step(&mut m, &grad(1.0, 1, 1)); // v=1, w=-1
+        opt.step(&mut m, &grad(1.0, 1, 1)); // v=1.5, w=-2.5
+        assert!((m.w()[(0, 0)] + 2.5).abs() < 1e-6, "{}", m.w()[(0, 0)]);
+    }
+
+    #[test]
+    fn clipping_bounds_update() {
+        let mut m = SoftmaxRegression::zeros(1, 4);
+        let mut opt = Sgd::new(SgdConfig { lr: 1.0, momentum: 0.0, clip: Some(1.0) });
+        // gradient norm = sqrt(5·100) > 1 → scaled to unit norm
+        opt.step(&mut m, &grad(10.0, 1, 4));
+        let norm: f32 = m
+            .w()
+            .data()
+            .iter()
+            .chain(m.b())
+            .map(|v| v * v)
+            .sum::<f32>()
+            .sqrt();
+        assert!((norm - 1.0).abs() < 1e-5, "update norm {norm}");
+    }
+
+    #[test]
+    fn small_gradients_not_clipped() {
+        let g = grad(0.01, 2, 2);
+        assert!(Sgd::grad_norm(&g) < 1.0);
+        let mut m = SoftmaxRegression::zeros(2, 2);
+        let mut opt = Sgd::new(SgdConfig { lr: 1.0, momentum: 0.0, clip: Some(1.0) });
+        opt.step(&mut m, &g);
+        assert!((m.w()[(0, 0)] + 0.01).abs() < 1e-7);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_lr_rejected() {
+        Sgd::new(SgdConfig { lr: 0.0, momentum: 0.0, clip: None });
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_momentum_rejected() {
+        Sgd::new(SgdConfig { lr: 0.1, momentum: 1.0, clip: None });
+    }
+}

@@ -1,0 +1,204 @@
+//! Property-based testing mini-framework (proptest/quickcheck are
+//! unreachable offline).
+//!
+//! Deterministic by construction: cases are generated from the hash
+//! RNG, so failures reproduce exactly. On failure the framework
+//! *shrinks* the failing input by re-running the property on smaller
+//! derived cases before reporting.
+//!
+//! ```
+//! use mckernel::proplite::{self, Gen};
+//! proplite::check("addition commutes", 100, |g| {
+//!     let a = g.f32_in(-10.0, 10.0);
+//!     let b = g.f32_in(-10.0, 10.0);
+//!     proplite::prop(a + b == b + a, format!("{a} {b}"))
+//! });
+//! ```
+
+use crate::hash::HashRng;
+
+/// Outcome of one property evaluation.
+#[derive(Debug, Clone)]
+pub enum Outcome {
+    Pass,
+    /// Failure with a human-readable description of the case.
+    Fail(String),
+    /// Case rejected (precondition unmet) — does not count.
+    Discard,
+}
+
+/// Helper: build an [`Outcome`] from a boolean.
+pub fn prop(ok: bool, case: impl Into<String>) -> Outcome {
+    if ok {
+        Outcome::Pass
+    } else {
+        Outcome::Fail(case.into())
+    }
+}
+
+/// Case generator handed to properties; wraps the hash RNG with a
+/// *size* parameter that grows over the run (small cases first, so
+/// minimal counterexamples surface early — generation-time shrinking).
+pub struct Gen {
+    rng: HashRng,
+    /// Current size hint in `1..=max_size`.
+    pub size: usize,
+}
+
+impl Gen {
+    /// Uniform usize in `[lo, hi]` (inclusive).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.next_below((hi - lo + 1) as u64) as usize
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.next_f32() * (hi - lo)
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    /// Random bool.
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// 64 random bits.
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    /// A power of two `2^k` with `k ∈ [lo_log2, hi_log2]`, scaled by
+    /// the current size (small sizes early in the run).
+    pub fn pow2(&mut self, lo_log2: u32, hi_log2: u32) -> usize {
+        let hi_scaled = lo_log2 + ((hi_log2 - lo_log2) as usize * self.size / self.max_size()) as u32;
+        1usize << self.usize_in(lo_log2 as usize, hi_scaled.max(lo_log2) as usize)
+    }
+
+    /// Vector of uniform f32s in `[lo, hi)`, length ∝ size.
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    fn max_size(&self) -> usize {
+        64
+    }
+}
+
+/// Run `property` on `cases` generated cases. Panics (with the seed and
+/// shrunk case description) on the first failure.
+pub fn check<F>(name: &str, cases: usize, mut property: F)
+where
+    F: FnMut(&mut Gen) -> Outcome,
+{
+    // Env-overridable seed so failures replay: PROPLITE_SEED=<n>.
+    let seed = std::env::var("PROPLITE_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x9e3779b97f4a7c15u64);
+    let mut executed = 0usize;
+    let mut attempts = 0usize;
+    while executed < cases {
+        attempts += 1;
+        assert!(
+            attempts < cases * 10 + 100,
+            "property '{name}': too many discards ({executed}/{cases} ran)"
+        );
+        // size ramps from 1 to 64 across the run
+        let size = 1 + (executed * 63) / cases.max(1);
+        let mut g = Gen { rng: HashRng::new(seed, attempts as u64), size };
+        match property(&mut g) {
+            Outcome::Pass => executed += 1,
+            Outcome::Discard => continue,
+            Outcome::Fail(case) => {
+                // Shrink: retry nearby smaller sizes to find a simpler case.
+                let mut simplest = case;
+                for s in 1..size {
+                    let mut g2 = Gen { rng: HashRng::new(seed, attempts as u64), size: s };
+                    if let Outcome::Fail(c2) = property(&mut g2) {
+                        simplest = c2;
+                        break;
+                    }
+                }
+                panic!(
+                    "property '{name}' failed (seed={seed}, attempt={attempts}):\n  case: {simplest}"
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("tautology", 50, |g| {
+            count += 1;
+            let _ = g.u64();
+            Outcome::Pass
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails' failed")]
+    fn failing_property_panics_with_case() {
+        check("always fails", 10, |g| {
+            let v = g.usize_in(0, 100);
+            prop(false, format!("v={v}"))
+        });
+    }
+
+    #[test]
+    fn discards_do_not_count() {
+        let mut passes = 0;
+        check("half discard", 20, |g| {
+            if g.bool() {
+                Outcome::Discard
+            } else {
+                passes += 1;
+                Outcome::Pass
+            }
+        });
+        assert_eq!(passes, 20);
+    }
+
+    #[test]
+    #[should_panic(expected = "too many discards")]
+    fn all_discards_detected() {
+        check("discard everything", 10, |_| Outcome::Discard);
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        check("bounds", 100, |g| {
+            let u = g.usize_in(3, 7);
+            let f = g.f32_in(-1.0, 1.0);
+            let p = g.pow2(2, 10);
+            prop(
+                (3..=7).contains(&u) && (-1.0..1.0).contains(&f) && p.is_power_of_two() && (4..=1024).contains(&p),
+                format!("u={u} f={f} p={p}"),
+            )
+        });
+    }
+
+    #[test]
+    fn sizes_ramp() {
+        let mut max_seen = 0;
+        let mut min_seen = usize::MAX;
+        check("ramp", 64, |g| {
+            max_seen = max_seen.max(g.size);
+            min_seen = min_seen.min(g.size);
+            Outcome::Pass
+        });
+        assert_eq!(min_seen, 1);
+        assert!(max_seen >= 32);
+    }
+}

@@ -1,0 +1,111 @@
+//! Uniform sampling on the n-sphere and in the n-ball (paper §6.1,
+//! Eq. 14), used to draw the RBF Matérn calibration entries.
+//!
+//! The paper's algorithm: draw `X ~ N(0, I_n)`, project to the sphere
+//! `Y = X / ‖X‖`, then scale by `r · U^{1/n}` with `U ~ U(0,1)` to get
+//! a uniform draw in the radius-`r` ball (`Z = r U^{1/n} X/‖X‖`).
+
+use super::box_muller::BoxMuller;
+
+/// Uniform sample on the surface of the unit (n-1)-sphere in ℝⁿ.
+pub fn sample_sphere(n: usize, bm: &mut BoxMuller) -> Vec<f64> {
+    assert!(n > 0);
+    loop {
+        let x: Vec<f64> = (0..n).map(|_| bm.next()).collect();
+        let norm = x.iter().map(|v| v * v).sum::<f64>().sqrt();
+        // Astronomically unlikely, but regenerate rather than divide by ~0.
+        if norm > 1e-12 {
+            return x.into_iter().map(|v| v / norm).collect();
+        }
+    }
+}
+
+/// Uniform sample in the radius-`r` n-ball (paper Eq. 14:
+/// `Z = r U^{1/n} X/‖X‖`). `u` must be an independent U(0,1) draw.
+pub fn sample_ball(n: usize, r: f64, u: f64, bm: &mut BoxMuller) -> Vec<f64> {
+    let radius = r * u.powf(1.0 / n as f64);
+    sample_sphere(n, bm).into_iter().map(|v| v * radius).collect()
+}
+
+/// Euclidean norm helper.
+pub fn norm(x: &[f64]) -> f64 {
+    x.iter().map(|v| v * v).sum::<f64>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::HashRng;
+
+    fn bm(seed: u64) -> BoxMuller {
+        BoxMuller::new(HashRng::new(seed, 0xBA11))
+    }
+
+    #[test]
+    fn sphere_samples_have_unit_norm() {
+        let mut g = bm(1);
+        for n in [1usize, 2, 3, 10, 100] {
+            let y = sample_sphere(n, &mut g);
+            assert_eq!(y.len(), n);
+            assert!((norm(&y) - 1.0).abs() < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn sphere_mean_is_origin() {
+        let mut g = bm(2);
+        let n = 5;
+        let trials = 20_000;
+        let mut acc = vec![0.0; n];
+        for _ in 0..trials {
+            let y = sample_sphere(n, &mut g);
+            for (a, v) in acc.iter_mut().zip(y) {
+                *a += v;
+            }
+        }
+        for a in acc {
+            assert!((a / trials as f64).abs() < 0.02);
+        }
+    }
+
+    #[test]
+    fn ball_samples_inside_radius() {
+        let mut g = bm(3);
+        let mut u = HashRng::new(3, 1);
+        for _ in 0..1000 {
+            let z = sample_ball(8, 2.5, u.next_f64(), &mut g);
+            assert!(norm(&z) <= 2.5 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn ball_radius_distribution() {
+        // P(R ≤ r) = r^n for the unit ball; median radius = (1/2)^{1/n}.
+        let mut g = bm(4);
+        let mut u = HashRng::new(4, 1);
+        let n = 3usize;
+        let trials = 40_000;
+        let med = 0.5f64.powf(1.0 / n as f64);
+        let below = (0..trials)
+            .filter(|_| norm(&sample_ball(n, 1.0, u.next_f64(), &mut g)) <= med)
+            .count() as f64
+            / trials as f64;
+        assert!((below - 0.5).abs() < 0.02, "below={below}");
+    }
+
+    #[test]
+    fn ball_nearly_uniform_octants_2d() {
+        let mut g = bm(5);
+        let mut u = HashRng::new(5, 1);
+        let mut quad = [0u32; 4];
+        let trials = 40_000;
+        for _ in 0..trials {
+            let z = sample_ball(2, 1.0, u.next_f64(), &mut g);
+            let q = (z[0] >= 0.0) as usize * 2 + (z[1] >= 0.0) as usize;
+            quad[q] += 1;
+        }
+        for &q in &quad {
+            assert!((q as f64 - trials as f64 / 4.0).abs() < trials as f64 * 0.02);
+        }
+    }
+}

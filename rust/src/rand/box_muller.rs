@@ -1,0 +1,135 @@
+//! Box–Muller transform [Box and Muller 1958] — the paper's §3 choice
+//! for generating the Gaussian diagonal `G`, "while substituting the
+//! generator of random numbers by calls to the function of hashing".
+//!
+//! Both a sequential sampler and a *random-access* form are provided;
+//! the random-access form derives the k-th Gaussian purely from the
+//! hash stream, so diagonal entries can be regenerated in any order.
+
+use crate::hash::HashRng;
+
+/// Sequential standard-normal sampler (caches the second variate of
+/// each Box–Muller pair).
+#[derive(Debug, Clone)]
+pub struct BoxMuller {
+    rng: HashRng,
+    spare: Option<f64>,
+}
+
+impl BoxMuller {
+    pub fn new(rng: HashRng) -> Self {
+        BoxMuller { rng, spare: None }
+    }
+
+    /// Next N(0,1) variate.
+    pub fn next(&mut self) -> f64 {
+        if let Some(z) = self.spare.take() {
+            return z;
+        }
+        let (z0, z1) = Self::pair(self.rng.next_f64(), self.rng.next_f64());
+        self.spare = Some(z1);
+        z0
+    }
+
+    /// Next N(mu, sigma²) variate.
+    pub fn next_scaled(&mut self, mu: f64, sigma: f64) -> f64 {
+        mu + sigma * self.next()
+    }
+
+    /// Fill a slice with i.i.d. N(0,1) f32s.
+    pub fn fill(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.next() as f32;
+        }
+    }
+
+    /// The Box–Muller map: two U(0,1) variates → two N(0,1) variates.
+    ///
+    /// `u0` is clamped away from zero so `ln` stays finite.
+    #[inline]
+    pub fn pair(u0: f64, u1: f64) -> (f64, f64) {
+        let u0 = if u0 <= f64::MIN_POSITIVE { f64::MIN_POSITIVE } else { u0 };
+        let r = (-2.0 * u0.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u1;
+        (r * theta.cos(), r * theta.sin())
+    }
+
+    /// Random-access: the k-th N(0,1) variate of stream `rng`,
+    /// independent of sequential state (uses hash words `2k`, `2k+1`).
+    #[inline]
+    pub fn at(rng: &HashRng, k: u64) -> f64 {
+        Self::pair(rng.at_f64(2 * k), rng.at_f64(2 * k + 1)).0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::hash_rng::streams;
+
+    fn sampler(seed: u64) -> BoxMuller {
+        BoxMuller::new(HashRng::new(seed, streams::GAUSS))
+    }
+
+    #[test]
+    fn mean_and_variance() {
+        let mut bm = sampler(1398239763);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| bm.next()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn third_moment_near_zero() {
+        let mut bm = sampler(7);
+        let n = 200_000;
+        let skew = (0..n).map(|_| bm.next().powi(3)).sum::<f64>() / n as f64;
+        assert!(skew.abs() < 0.05, "skew {skew}");
+    }
+
+    #[test]
+    fn tail_mass_sane() {
+        // P(|Z| > 3) ≈ 0.0027
+        let mut bm = sampler(3);
+        let n = 100_000;
+        let tail = (0..n).filter(|_| bm.next().abs() > 3.0).count() as f64 / n as f64;
+        assert!(tail < 0.006, "tail {tail}");
+        assert!(tail > 0.0005, "tail {tail}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut a = sampler(5);
+        let mut b = sampler(5);
+        for _ in 0..100 {
+            assert_eq!(a.next(), b.next());
+        }
+    }
+
+    #[test]
+    fn random_access_matches_itself_and_distribution() {
+        let rng = HashRng::new(11, streams::GAUSS);
+        assert_eq!(BoxMuller::at(&rng, 5), BoxMuller::at(&rng, 5));
+        let n = 100_000u64;
+        let mean: f64 = (0..n).map(|k| BoxMuller::at(&rng, k)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn pair_is_finite_even_at_zero() {
+        let (a, b) = BoxMuller::pair(0.0, 0.25);
+        assert!(a.is_finite() && b.is_finite());
+    }
+
+    #[test]
+    fn scaled_moments() {
+        let mut bm = sampler(13);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| bm.next_scaled(3.0, 2.0)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        assert!((mean - 3.0).abs() < 0.05, "mean {mean}");
+    }
+}

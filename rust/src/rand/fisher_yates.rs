@@ -1,0 +1,145 @@
+//! Fisher–Yates shuffle with hash-derived draws (paper §3, operator Π).
+//!
+//! "We generate a random permutation using the FISHER-YATES shuffle …
+//! to obtain a deterministic mapping, replace the generator of random
+//! numbers with calls to the function of hashing." Runs in `O(n)` time
+//! and the permutation is stored in `O(n)` space as an index vector.
+
+use crate::hash::HashRng;
+
+/// A uniformly random permutation of `{0, …, n-1}` drawn from `rng`
+/// (modern inside-out Fisher–Yates). `perm[i]` is the source index of
+/// output position `i`: `y[i] = x[perm[i]]`.
+pub fn random_permutation(n: usize, rng: &mut HashRng) -> Vec<u32> {
+    assert!(n <= u32::MAX as usize, "permutation too large for u32 indices");
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    // classic Fisher–Yates: for i from n-1 down to 1, swap i with j ≤ i
+    for i in (1..n).rev() {
+        let j = rng.next_below((i + 1) as u64) as usize;
+        perm.swap(i, j);
+    }
+    perm
+}
+
+/// Apply `perm` out-of-place: `out[i] = x[perm[i]]`.
+pub fn apply_permutation(x: &[f32], perm: &[u32], out: &mut [f32]) {
+    assert_eq!(x.len(), perm.len());
+    assert_eq!(x.len(), out.len());
+    for (o, &p) in out.iter_mut().zip(perm.iter()) {
+        *o = x[p as usize];
+    }
+}
+
+/// Inverse permutation: `inv[perm[i]] = i`.
+pub fn invert_permutation(perm: &[u32]) -> Vec<u32> {
+    let mut inv = vec![0u32; perm.len()];
+    for (i, &p) in perm.iter().enumerate() {
+        inv[p as usize] = i as u32;
+    }
+    inv
+}
+
+/// Check that `perm` is a valid permutation of `0..n`.
+pub fn is_permutation(perm: &[u32]) -> bool {
+    let n = perm.len();
+    let mut seen = vec![false; n];
+    for &p in perm {
+        let p = p as usize;
+        if p >= n || seen[p] {
+            return false;
+        }
+        seen[p] = true;
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::hash_rng::streams;
+
+    fn rng(seed: u64) -> HashRng {
+        HashRng::new(seed, streams::PERMUTATION)
+    }
+
+    #[test]
+    fn is_valid_permutation() {
+        for n in [0usize, 1, 2, 3, 17, 256, 1024] {
+            let p = random_permutation(n, &mut rng(42));
+            assert!(is_permutation(&p), "n={n}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = random_permutation(1000, &mut rng(1));
+        let b = random_permutation(1000, &mut rng(1));
+        assert_eq!(a, b);
+        let c = random_permutation(1000, &mut rng(2));
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let p = random_permutation(512, &mut rng(7));
+        let inv = invert_permutation(&p);
+        let x: Vec<f32> = (0..512).map(|i| i as f32).collect();
+        let mut y = vec![0.0; 512];
+        let mut z = vec![0.0; 512];
+        apply_permutation(&x, &p, &mut y);
+        apply_permutation(&y, &inv, &mut z);
+        assert_eq!(x, z);
+    }
+
+    #[test]
+    fn apply_moves_values_not_mass() {
+        let p = random_permutation(64, &mut rng(3));
+        let x: Vec<f32> = (0..64).map(|i| (i * i) as f32).collect();
+        let mut y = vec![0.0; 64];
+        apply_permutation(&x, &p, &mut y);
+        let mut xs = x.clone();
+        let mut ys = y.clone();
+        xs.sort_by(f32::total_cmp);
+        ys.sort_by(f32::total_cmp);
+        assert_eq!(xs, ys);
+    }
+
+    #[test]
+    fn uniformity_chi_square_small_n() {
+        // n=4 has 24 permutations; draw many and check rough uniformity.
+        let mut counts = std::collections::HashMap::new();
+        let mut r = rng(99);
+        let trials = 24_000;
+        for _ in 0..trials {
+            let p = random_permutation(4, &mut r);
+            *counts.entry(p).or_insert(0u32) += 1;
+        }
+        assert_eq!(counts.len(), 24);
+        let expect = trials as f64 / 24.0;
+        for (_, &c) in counts.iter() {
+            assert!((c as f64 - expect).abs() < expect * 0.2, "count {c} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn fixed_points_rare_for_large_n() {
+        // Expected number of fixed points of a uniform permutation is 1.
+        let p = random_permutation(10_000, &mut rng(5));
+        let fixed = p.iter().enumerate().filter(|(i, &v)| *i == v as usize).count();
+        assert!(fixed < 10, "suspiciously many fixed points: {fixed}");
+    }
+
+    #[test]
+    fn invert_detects_identity() {
+        let id: Vec<u32> = (0..100).collect();
+        assert_eq!(invert_permutation(&id), id);
+    }
+
+    #[test]
+    fn non_permutation_rejected() {
+        assert!(!is_permutation(&[0, 0, 2]));
+        assert!(!is_permutation(&[0, 3]));
+        assert!(is_permutation(&[1, 0]));
+        assert!(is_permutation(&[]));
+    }
+}

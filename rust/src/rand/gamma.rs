@@ -1,0 +1,118 @@
+//! Gamma and chi variates (Marsaglia–Tsang squeeze method).
+//!
+//! The RBF calibration diagonal `C` (paper §3: "a random scaling
+//! operator whose behavior depends on the type of kernel chosen")
+//! needs radii distributed like the row norms of a Gaussian matrix,
+//! i.e. chi with `n` degrees of freedom: `chi_n = √(2·Gamma(n/2, 1))`.
+
+use super::box_muller::BoxMuller;
+use crate::hash::HashRng;
+
+/// One Gamma(shape, 1) variate via Marsaglia–Tsang (2000).
+///
+/// Valid for any `shape > 0`; shapes below 1 use the boosting identity
+/// `Gamma(a) = Gamma(a+1) · U^{1/a}`.
+pub fn gamma(shape: f64, bm: &mut BoxMuller, uni: &mut HashRng) -> f64 {
+    assert!(shape > 0.0, "gamma shape must be positive");
+    if shape < 1.0 {
+        let boosted = gamma(shape + 1.0, bm, uni);
+        let u = uni.next_f64().max(f64::MIN_POSITIVE);
+        return boosted * u.powf(1.0 / shape);
+    }
+    let d = shape - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x = bm.next();
+        let v = 1.0 + c * x;
+        if v <= 0.0 {
+            continue;
+        }
+        let v3 = v * v * v;
+        let u = uni.next_f64();
+        // squeeze test, then full acceptance test
+        if u < 1.0 - 0.0331 * x * x * x * x {
+            return d * v3;
+        }
+        if u > 0.0 && u.ln() < 0.5 * x * x + d * (1.0 - v3 + v3.ln()) {
+            return d * v3;
+        }
+    }
+}
+
+/// One chi_k variate (the Euclidean norm of k i.i.d. standard
+/// normals): `√(2·Gamma(k/2))`.
+pub fn chi(k: f64, bm: &mut BoxMuller, uni: &mut HashRng) -> f64 {
+    assert!(k > 0.0);
+    (2.0 * gamma(k / 2.0, bm, uni)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn samplers(seed: u64) -> (BoxMuller, HashRng) {
+        (
+            BoxMuller::new(HashRng::new(seed, 0x6AAA)),
+            HashRng::new(seed, 0x0111),
+        )
+    }
+
+    #[test]
+    fn gamma_mean_and_variance() {
+        // Gamma(a,1): mean a, var a.
+        for &a in &[0.5f64, 1.0, 2.5, 8.0] {
+            let (mut bm, mut u) = samplers(42);
+            let n = 60_000;
+            let xs: Vec<f64> = (0..n).map(|_| gamma(a, &mut bm, &mut u)).collect();
+            let mean = xs.iter().sum::<f64>() / n as f64;
+            let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+            assert!((mean - a).abs() < 0.05 * a.max(1.0), "a={a} mean={mean}");
+            assert!((var - a).abs() < 0.1 * a.max(1.0), "a={a} var={var}");
+        }
+    }
+
+    #[test]
+    fn gamma_positive() {
+        let (mut bm, mut u) = samplers(7);
+        for _ in 0..10_000 {
+            assert!(gamma(0.3, &mut bm, &mut u) > 0.0);
+        }
+    }
+
+    #[test]
+    fn chi_matches_gaussian_norm() {
+        // chi_k mean ≈ √k·(1 − 1/(4k)); check against direct norm of k
+        // gaussians for k = 16.
+        let k = 16usize;
+        let (mut bm, mut u) = samplers(3);
+        let n = 30_000;
+        let mean_chi: f64 = (0..n).map(|_| chi(k as f64, &mut bm, &mut u)).sum::<f64>() / n as f64;
+        let (mut bm2, _) = samplers(4);
+        let mean_norm: f64 = (0..n)
+            .map(|_| {
+                (0..k).map(|_| bm2.next().powi(2)).sum::<f64>().sqrt()
+            })
+            .sum::<f64>()
+            / n as f64;
+        assert!(
+            (mean_chi - mean_norm).abs() < 0.02 * mean_norm,
+            "chi {mean_chi} vs norm {mean_norm}"
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let (mut b1, mut u1) = samplers(5);
+        let (mut b2, mut u2) = samplers(5);
+        for _ in 0..50 {
+            assert_eq!(gamma(2.0, &mut b1, &mut u1), gamma(2.0, &mut b2, &mut u2));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_shape_rejected() {
+        let (mut bm, mut u) = samplers(1);
+        gamma(0.0, &mut bm, &mut u);
+    }
+}

@@ -1,0 +1,15 @@
+//! Random variate generation on top of the hash RNG.
+//!
+//! Everything here is *re-computable*: given `(seed, stream)` the same
+//! variates are produced on every call, which is how the paper avoids
+//! storing the random matrices of the feature map (§3, §7).
+
+pub mod ball;
+pub mod box_muller;
+pub mod fisher_yates;
+pub mod gamma;
+
+pub use ball::{sample_ball, sample_sphere};
+pub use box_muller::BoxMuller;
+pub use fisher_yates::{apply_permutation, invert_permutation, random_permutation};
+pub use gamma::{chi, gamma};

@@ -1,0 +1,88 @@
+//! PJRT client wrapper: compile HLO-text artifacts, build literals.
+
+use super::manifest::{ArtifactEntry, Manifest};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A PJRT CPU client plus the artifact manifest it serves.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+}
+
+impl Runtime {
+    /// Start a CPU PJRT client over an artifact directory.
+    pub fn new<P: AsRef<Path>>(artifact_dir: P) -> Result<Runtime> {
+        let manifest = Manifest::load(&artifact_dir)?;
+        manifest.validate()?;
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        Ok(Runtime { client, manifest })
+    }
+
+    /// Platform string (e.g. "cpu") — for logs.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// The manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Underlying PJRT client (advanced use: custom executables).
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Load + compile one artifact (HLO text → PJRT executable).
+    pub fn compile(&self, entry: &ArtifactEntry) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.manifest.path_of(entry);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not UTF-8")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("XLA compile {}", entry.name))
+    }
+}
+
+/// Build an f32 literal of the given dims from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let expect: i64 = dims.iter().product();
+    anyhow::ensure!(expect as usize == data.len(), "literal shape mismatch");
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Build an i32 literal of the given dims from a flat slice.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let expect: i64 = dims.iter().product();
+    anyhow::ensure!(expect as usize == data.len(), "literal shape mismatch");
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Scalar f32 literal.
+pub fn literal_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_builders_check_shapes() {
+        assert!(literal_f32(&[1.0, 2.0], &[2]).is_ok());
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(literal_i32(&[1, 2, 3, 4], &[2, 2]).is_ok());
+        assert!(literal_i32(&[1], &[2]).is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+    }
+}

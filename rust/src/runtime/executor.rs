@@ -1,0 +1,246 @@
+//! Typed executors over the compiled artifacts.
+//!
+//! Each executor owns its `PjRtLoadedExecutable` plus the feature-map
+//! coefficient literals (stacked `(E, n)` tensors built once from the
+//! Rust-side [`McKernel`] — hash-derived, so they are *inputs*, not
+//! weights, and one HLO artifact serves every seed).
+
+use super::client::{literal_f32, literal_i32, literal_scalar, Runtime};
+use super::manifest::ArtifactEntry;
+use crate::linalg::Matrix;
+use crate::mckernel::McKernel;
+use crate::model::SoftmaxRegression;
+use anyhow::{ensure, Context, Result};
+
+/// Stacked Fastfood coefficients as XLA literals.
+pub struct FeatureLiterals {
+    pub b_diag: xla::Literal,
+    pub g_diag: xla::Literal,
+    pub scale: xla::Literal,
+    pub perm: xla::Literal,
+    pub expansions: usize,
+    pub n: usize,
+}
+
+impl FeatureLiterals {
+    /// Build the `(E, n)` stacked literals from a materialized map.
+    pub fn from_mckernel(map: &McKernel) -> Result<FeatureLiterals> {
+        let n = map.padded_dim();
+        let e = map.expansions();
+        let mut b = Vec::with_capacity(e * n);
+        let mut g = Vec::with_capacity(e * n);
+        let mut s = Vec::with_capacity(e * n);
+        let mut p = Vec::with_capacity(e * n);
+        for blk in map.blocks() {
+            b.extend_from_slice(blk.b());
+            g.extend_from_slice(blk.g());
+            s.extend_from_slice(blk.scale());
+            p.extend(blk.perm().iter().map(|&i| i as i32));
+        }
+        let dims = [e as i64, n as i64];
+        Ok(FeatureLiterals {
+            b_diag: literal_f32(&b, &dims)?,
+            g_diag: literal_f32(&g, &dims)?,
+            scale: literal_f32(&s, &dims)?,
+            perm: literal_i32(&p, &dims)?,
+            expansions: e,
+            n,
+        })
+    }
+}
+
+/// Pad a `(rows, d)` batch to `(batch, n)` row-major f32 (zero-fill).
+fn pad_batch(x: &Matrix, batch: usize, n: usize) -> Result<Vec<f32>> {
+    ensure!(x.rows() <= batch, "batch overflow: {} > {}", x.rows(), batch);
+    ensure!(x.cols() <= n, "width overflow: {} > {}", x.cols(), n);
+    let mut flat = vec![0.0f32; batch * n];
+    for r in 0..x.rows() {
+        flat[r * n..r * n + x.cols()].copy_from_slice(x.row(r));
+    }
+    Ok(flat)
+}
+
+/// Run one executable and pull the root literal back to host.
+fn run(exe: &xla::PjRtLoadedExecutable, args: &[&xla::Literal]) -> Result<xla::Literal> {
+    let outs = exe.execute::<&xla::Literal>(args).context("PJRT execute")?;
+    outs[0][0].to_literal_sync().context("fetch result")
+}
+
+/// Compiled SGD train step (`(W,b,x,y,lr[,coeffs]) → (W',b',loss)`).
+pub struct TrainStep {
+    exe: xla::PjRtLoadedExecutable,
+    entry: ArtifactEntry,
+    features: Option<FeatureLiterals>,
+    /// Device-format parameters, kept as literals between steps.
+    w: xla::Literal,
+    bias: xla::Literal,
+    steps: u64,
+}
+
+impl TrainStep {
+    /// Compile the train artifact for `featurizer` ∈ {"mckernel",
+    /// "identity"}; `map` must be given iff featurizer is mckernel.
+    pub fn new(rt: &Runtime, featurizer: &str, map: Option<&McKernel>) -> Result<TrainStep> {
+        let expansions = map.map_or(0, |m| m.expansions());
+        let entry = rt.manifest().find("train", featurizer, expansions)?.clone();
+        if let Some(m) = map {
+            ensure!(m.padded_dim() == entry.n, "map n {} != artifact n {}", m.padded_dim(), entry.n);
+        }
+        let exe = rt.compile(&entry)?;
+        let features = map.map(FeatureLiterals::from_mckernel).transpose()?;
+        let classes = entry.classes;
+        let fd = entry.feature_dim;
+        let w = literal_f32(&vec![0.0; classes * fd], &[classes as i64, fd as i64])?;
+        let bias = literal_f32(&vec![0.0; classes], &[classes as i64])?;
+        Ok(TrainStep { exe, entry, features, w, bias, steps: 0 })
+    }
+
+    /// The artifact metadata (batch size the graph expects, etc.).
+    pub fn entry(&self) -> &ArtifactEntry {
+        &self.entry
+    }
+
+    /// Steps taken.
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Reset parameters to zeros.
+    pub fn reset(&mut self) -> Result<()> {
+        let classes = self.entry.classes;
+        let fd = self.entry.feature_dim;
+        self.w = literal_f32(&vec![0.0; classes * fd], &[classes as i64, fd as i64])?;
+        self.bias = literal_f32(&vec![0.0; classes], &[classes as i64])?;
+        self.steps = 0;
+        Ok(())
+    }
+
+    /// One SGD step on a `(rows ≤ batch, d)` mini-batch. Ragged final
+    /// batches are zero-padded with label 0 and a compensating lr
+    /// rescale (`lr · rows/batch` keeps the gradient magnitude of the
+    /// true rows identical up to the padded rows' uniform-softmax
+    /// pull; exact for full batches).
+    pub fn step(&mut self, x: &Matrix, y: &[u8], lr: f32) -> Result<f32> {
+        let batch = self.entry.batch;
+        let n = self.entry.n;
+        ensure!(x.rows() == y.len(), "batch/labels mismatch");
+        ensure!(x.rows() == batch, "graph expects batch {batch}, got {} (use exact batches)", x.rows());
+        let flat = pad_batch(x, batch, n)?;
+        let xl = literal_f32(&flat, &[batch as i64, n as i64])?;
+        let yl = literal_i32(
+            &y.iter().map(|&v| v as i32).collect::<Vec<_>>(),
+            &[batch as i64],
+        )?;
+        let lrl = literal_scalar(lr);
+        let mut args: Vec<&xla::Literal> = vec![&self.w, &self.bias, &xl, &yl, &lrl];
+        if let Some(f) = &self.features {
+            args.extend([&f.b_diag, &f.g_diag, &f.scale, &f.perm]);
+        }
+        let out = run(&self.exe, &args)?;
+        let (w, bias, loss) = out.to_tuple3().context("train tuple")?;
+        self.w = w;
+        self.bias = bias;
+        self.steps += 1;
+        Ok(loss.get_first_element::<f32>()?)
+    }
+
+    /// Copy the current parameters into a host-side model.
+    pub fn export_model(&self) -> Result<SoftmaxRegression> {
+        let classes = self.entry.classes;
+        let fd = self.entry.feature_dim;
+        let mut m = SoftmaxRegression::zeros(classes, fd);
+        m.w_mut().data_mut().copy_from_slice(&self.w.to_vec::<f32>()?);
+        m.b_mut().copy_from_slice(&self.bias.to_vec::<f32>()?);
+        Ok(m)
+    }
+
+    /// Load parameters from a host-side model (resume training).
+    pub fn import_model(&mut self, m: &SoftmaxRegression) -> Result<()> {
+        ensure!(m.classes() == self.entry.classes && m.features() == self.entry.feature_dim);
+        self.w = literal_f32(
+            m.w().data(),
+            &[m.classes() as i64, m.features() as i64],
+        )?;
+        self.bias = literal_f32(m.b(), &[m.classes() as i64])?;
+        Ok(())
+    }
+}
+
+/// Compiled predictor (`(W,b,x[,coeffs]) → preds`).
+pub struct Predictor {
+    exe: xla::PjRtLoadedExecutable,
+    entry: ArtifactEntry,
+    features: Option<FeatureLiterals>,
+}
+
+impl Predictor {
+    pub fn new(rt: &Runtime, featurizer: &str, map: Option<&McKernel>) -> Result<Predictor> {
+        let expansions = map.map_or(0, |m| m.expansions());
+        let entry = rt.manifest().find("predict", featurizer, expansions)?.clone();
+        let exe = rt.compile(&entry)?;
+        let features = map.map(FeatureLiterals::from_mckernel).transpose()?;
+        Ok(Predictor { exe, entry, features })
+    }
+
+    pub fn entry(&self) -> &ArtifactEntry {
+        &self.entry
+    }
+
+    /// Predict classes for up to `entry.batch` rows (padded rows are
+    /// discarded from the output).
+    pub fn predict(&self, model: &SoftmaxRegression, x: &Matrix) -> Result<Vec<u8>> {
+        let batch = self.entry.batch;
+        let n = self.entry.n;
+        ensure!(x.rows() <= batch, "batch overflow");
+        let wl = literal_f32(
+            model.w().data(),
+            &[model.classes() as i64, model.features() as i64],
+        )?;
+        let bl = literal_f32(model.b(), &[model.classes() as i64])?;
+        let flat = pad_batch(x, batch, n)?;
+        let xl = literal_f32(&flat, &[batch as i64, n as i64])?;
+        let mut args: Vec<&xla::Literal> = vec![&wl, &bl, &xl];
+        if let Some(f) = &self.features {
+            args.extend([&f.b_diag, &f.g_diag, &f.scale, &f.perm]);
+        }
+        let out = run(&self.exe, &args)?;
+        let preds = out.to_tuple1().context("predict tuple")?;
+        Ok(preds.to_vec::<i32>()?[..x.rows()].iter().map(|&v| v as u8).collect())
+    }
+}
+
+/// Compiled feature generator (`(x, coeffs) → φ(x)`), the paper's
+/// "drop-in generator of features for linear methods".
+pub struct FeatureOp {
+    exe: xla::PjRtLoadedExecutable,
+    entry: ArtifactEntry,
+    features: FeatureLiterals,
+}
+
+impl FeatureOp {
+    pub fn new(rt: &Runtime, map: &McKernel) -> Result<FeatureOp> {
+        let entry = rt.manifest().find("features", "mckernel", map.expansions())?.clone();
+        let exe = rt.compile(&entry)?;
+        let features = FeatureLiterals::from_mckernel(map)?;
+        Ok(FeatureOp { exe, entry, features })
+    }
+
+    pub fn entry(&self) -> &ArtifactEntry {
+        &self.entry
+    }
+
+    /// φ(x) for up to `entry.batch` rows → `(rows, feature_dim)`.
+    pub fn transform(&self, x: &Matrix) -> Result<Matrix> {
+        let batch = self.entry.batch;
+        let n = self.entry.n;
+        ensure!(x.rows() <= batch, "batch overflow");
+        let flat = pad_batch(x, batch, n)?;
+        let xl = literal_f32(&flat, &[batch as i64, n as i64])?;
+        let f = &self.features;
+        let out = run(&self.exe, &[&xl, &f.b_diag, &f.g_diag, &f.scale, &f.perm])?;
+        let feats = out.to_tuple1().context("features tuple")?;
+        let fd = self.entry.feature_dim;
+        let full = feats.to_vec::<f32>()?;
+        Ok(Matrix::from_vec(x.rows(), fd, full[..x.rows() * fd].to_vec()))
+    }
+}

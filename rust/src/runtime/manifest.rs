@@ -1,0 +1,204 @@
+//! Artifact manifest: the contract between `python/compile/aot.py`
+//! and the Rust runtime. Parsed with the in-tree JSON parser.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One exported HLO artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    /// "train" | "predict" | "features".
+    pub kind: String,
+    /// "mckernel" | "identity".
+    pub featurizer: String,
+    pub batch: usize,
+    /// Padded input width the graph expects.
+    pub n: usize,
+    /// Kernel expansions E (0 for the LR baseline).
+    pub expansions: usize,
+    pub classes: usize,
+    pub feature_dim: usize,
+    /// Output names in tuple order.
+    pub outputs: Vec<String>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Directory the manifest was loaded from (artifact files live here).
+    pub dir: PathBuf,
+    pub n: usize,
+    pub pixels: usize,
+    pub classes: usize,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .with_context(|| format!("manifest: missing/invalid '{key}'"))
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String> {
+    Ok(j.get(key)
+        .and_then(Json::as_str)
+        .with_context(|| format!("manifest: missing/invalid '{key}'"))?
+        .to_string())
+}
+
+impl Manifest {
+    /// Parse manifest JSON text (`dir` is where artifacts live).
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let root = Json::parse(text).context("manifest JSON")?;
+        let entries_json = root
+            .get("entries")
+            .and_then(Json::as_arr)
+            .context("manifest: 'entries' array")?;
+        let mut entries = Vec::with_capacity(entries_json.len());
+        for e in entries_json {
+            let outputs = e
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .context("entry outputs")?
+                .iter()
+                .map(|o| o.as_str().map(str::to_string).context("output name"))
+                .collect::<Result<Vec<_>>>()?;
+            entries.push(ArtifactEntry {
+                name: req_str(e, "name")?,
+                file: req_str(e, "file")?,
+                kind: req_str(e, "kind")?,
+                featurizer: req_str(e, "featurizer")?,
+                batch: req_usize(e, "batch")?,
+                n: req_usize(e, "n")?,
+                expansions: req_usize(e, "expansions")?,
+                classes: req_usize(e, "classes")?,
+                feature_dim: req_usize(e, "feature_dim")?,
+                outputs,
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            n: req_usize(&root, "n")?,
+            pixels: req_usize(&root, "pixels")?,
+            classes: req_usize(&root, "classes")?,
+            entries,
+        })
+    }
+
+    /// Load `manifest.json` from an artifact directory.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Manifest> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts` first)", path.display()))?;
+        Manifest::parse(&text, dir)
+    }
+
+    /// Find an entry by `(kind, featurizer, expansions)`.
+    pub fn find(&self, kind: &str, featurizer: &str, expansions: usize) -> Result<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == kind && e.featurizer == featurizer && e.expansions == expansions)
+            .with_context(|| {
+                format!(
+                    "no artifact kind={kind} featurizer={featurizer} E={expansions}; available: {}",
+                    self.entries
+                        .iter()
+                        .map(|e| e.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+
+    /// Find an entry by exact name.
+    pub fn by_name(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .with_context(|| format!("no artifact named {name}"))
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn path_of(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// Validate basic coherence (shapes consistent with header).
+    pub fn validate(&self) -> Result<()> {
+        for e in &self.entries {
+            if e.featurizer == "mckernel" {
+                if e.expansions == 0 {
+                    bail!("{}: mckernel artifact with E=0", e.name);
+                }
+                if e.feature_dim != 2 * e.n * e.expansions {
+                    bail!(
+                        "{}: feature_dim {} != 2·{}·{}",
+                        e.name,
+                        e.feature_dim,
+                        e.n,
+                        e.expansions
+                    );
+                }
+            }
+            if e.kind == "train" && e.outputs != ["w", "bias", "loss"] {
+                bail!("{}: train artifact with outputs {:?}", e.name, e.outputs);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "classes": 10, "n": 1024, "pixels": 784,
+      "entries": [
+        {"name": "train_mck_b10_e2", "file": "train_mck_b10_e2.hlo.txt",
+         "kind": "train", "featurizer": "mckernel", "batch": 10, "n": 1024,
+         "expansions": 2, "classes": 10, "feature_dim": 4096,
+         "outputs": ["w", "bias", "loss"], "inputs": []},
+        {"name": "predict_lr_b256", "file": "predict_lr_b256.hlo.txt",
+         "kind": "predict", "featurizer": "identity", "batch": 256, "n": 784,
+         "expansions": 0, "classes": 10, "feature_dim": 784,
+         "outputs": ["preds"], "inputs": []}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.classes, 10);
+        assert_eq!(m.entries.len(), 2);
+        m.validate().unwrap();
+        let e = m.find("train", "mckernel", 2).unwrap();
+        assert_eq!(e.batch, 10);
+        assert_eq!(m.path_of(e), PathBuf::from("/tmp/a/train_mck_b10_e2.hlo.txt"));
+    }
+
+    #[test]
+    fn find_missing_is_error() {
+        let m = Manifest::parse(SAMPLE, Path::new(".")).unwrap();
+        assert!(m.find("train", "mckernel", 8).is_err());
+        assert!(m.by_name("nope").is_err());
+        assert!(m.by_name("predict_lr_b256").is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_bad_feature_dim() {
+        let bad = SAMPLE.replace("\"feature_dim\": 4096", "\"feature_dim\": 17");
+        let m = Manifest::parse(&bad, Path::new(".")).unwrap();
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_json() {
+        assert!(Manifest::parse("{", Path::new(".")).is_err());
+        assert!(Manifest::parse("{\"n\": 1}", Path::new(".")).is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them from Rust — Python is
+//! never on this path.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` (shapes, kinds).
+//! * [`client`] — thin wrapper over `xla::PjRtClient` (CPU PJRT).
+//! * [`executor`] — typed drivers: [`executor::TrainStep`],
+//!   [`executor::Predictor`], [`executor::FeatureOp`], holding their
+//!   compiled executables and the feature-map coefficient literals.
+
+pub mod client;
+pub mod executor;
+pub mod manifest;
+
+pub use client::Runtime;
+pub use executor::{FeatureOp, Predictor, TrainStep};
+pub use manifest::{ArtifactEntry, Manifest};

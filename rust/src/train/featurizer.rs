@@ -1,0 +1,133 @@
+//! Featurizer abstraction: identity (the LR baseline feeds raw
+//! pixels), the native McKernel map, or a parallel McKernel map over
+//! the thread pool — the paper's two curves in Figures 3–5 differ
+//! only in this choice.
+
+use crate::linalg::Matrix;
+use crate::mckernel::McKernel;
+use crate::util::ThreadPool;
+use std::sync::Arc;
+
+/// Maps a `(batch, pixels)` matrix to the classifier's input space.
+pub enum Featurizer {
+    /// Raw input (logistic-regression baseline: `softmax(Wx + b)`).
+    Identity,
+    /// McKernel features, single-threaded (`softmax(W·mckernel(x)+b)`).
+    McKernel(Arc<McKernel>),
+    /// McKernel features computed across a thread pool (rows are
+    /// independent — embarrassingly parallel).
+    McKernelParallel(Arc<McKernel>, Arc<ThreadPool>),
+}
+
+impl Featurizer {
+    /// Output width.
+    pub fn feature_dim(&self, input_dim: usize) -> usize {
+        match self {
+            Featurizer::Identity => input_dim,
+            Featurizer::McKernel(m) | Featurizer::McKernelParallel(m, _) => m.feature_dim(),
+        }
+    }
+
+    /// Short name for logs.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Featurizer::Identity => "identity",
+            Featurizer::McKernel(_) => "mckernel",
+            Featurizer::McKernelParallel(..) => "mckernel-par",
+        }
+    }
+
+    /// Apply to a batch.
+    pub fn apply(&self, x: &Matrix) -> Matrix {
+        match self {
+            Featurizer::Identity => x.clone(),
+            Featurizer::McKernel(m) => m.transform_batch(x),
+            Featurizer::McKernelParallel(m, pool) => {
+                let rows = x.rows();
+                let fd = m.feature_dim();
+                let mut out = Matrix::zeros(rows, fd);
+                // Hand each worker a disjoint slice of output rows.
+                let out_ptr = SendPtr(out.data_mut().as_mut_ptr());
+                let x = Arc::new(x.clone());
+                let m2 = Arc::clone(m);
+                let chunk = rows.div_ceil(pool.size()).max(1);
+                let tasks = rows.div_ceil(chunk);
+                pool.scope_for_each(tasks, move |t| {
+                    // force whole-struct capture (edition-2021 would
+                    // otherwise capture the raw-pointer field, which
+                    // is not Send)
+                    let out_ptr = out_ptr;
+                    let lo = t * chunk;
+                    let hi = ((t + 1) * chunk).min(rows);
+                    let mut scratch = m2.make_scratch();
+                    for r in lo..hi {
+                        // SAFETY: rows are disjoint per task; the
+                        // buffer outlives scope_for_each (it blocks).
+                        let seg = unsafe {
+                            std::slice::from_raw_parts_mut(out_ptr.0.add(r * fd), fd)
+                        };
+                        m2.transform_into(x.row(r), seg, &mut scratch);
+                    }
+                });
+                out
+            }
+        }
+    }
+}
+
+/// Raw pointer wrapper so the closure is Send (disjoint-write safety
+/// is argued at the use site).
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mckernel::McKernelFactory;
+
+    fn map() -> Arc<McKernel> {
+        Arc::new(McKernelFactory::new(12).expansions(2).seed(3).build())
+    }
+
+    fn batch() -> Matrix {
+        Matrix::from_fn(9, 12, |r, c| ((r * 13 + c) % 7) as f32 * 0.1)
+    }
+
+    #[test]
+    fn identity_passthrough() {
+        let x = batch();
+        let f = Featurizer::Identity;
+        assert_eq!(f.apply(&x), x);
+        assert_eq!(f.feature_dim(12), 12);
+    }
+
+    #[test]
+    fn mckernel_dims() {
+        let f = Featurizer::McKernel(map());
+        assert_eq!(f.feature_dim(12), 2 * 16 * 2);
+        let out = f.apply(&batch());
+        assert_eq!(out.shape(), (9, 64));
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let m = map();
+        let x = batch();
+        let serial = Featurizer::McKernel(Arc::clone(&m)).apply(&x);
+        let pool = Arc::new(ThreadPool::new(4));
+        let par = Featurizer::McKernelParallel(m, pool).apply(&x);
+        assert_eq!(serial.data(), par.data());
+    }
+
+    #[test]
+    fn parallel_single_row() {
+        let m = map();
+        let x = Matrix::from_fn(1, 12, |_, c| c as f32);
+        let pool = Arc::new(ThreadPool::new(8));
+        let serial = Featurizer::McKernel(Arc::clone(&m)).apply(&x);
+        let par = Featurizer::McKernelParallel(m, pool).apply(&x);
+        assert_eq!(serial.data(), par.data());
+    }
+}

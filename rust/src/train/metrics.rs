@@ -1,0 +1,101 @@
+//! Evaluation metrics: accuracy, confusion matrix, per-epoch records
+//! (the series plotted in Figures 3–5).
+
+/// Fraction of correct predictions.
+pub fn accuracy(pred: &[u8], truth: &[u8]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let hits = pred.iter().zip(truth).filter(|(a, b)| a == b).count();
+    hits as f64 / pred.len() as f64
+}
+
+/// `classes × classes` confusion matrix: `m[truth][pred]` counts.
+pub fn confusion_matrix(pred: &[u8], truth: &[u8], classes: usize) -> Vec<Vec<u32>> {
+    assert_eq!(pred.len(), truth.len());
+    let mut m = vec![vec![0u32; classes]; classes];
+    for (&p, &t) in pred.iter().zip(truth) {
+        m[t as usize][p as usize] += 1;
+    }
+    m
+}
+
+/// One epoch's summary (one point of a Figure 3/4/5 curve).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    pub train_loss: f64,
+    pub train_accuracy: f64,
+    pub test_accuracy: f64,
+    /// Wall-clock seconds spent in this epoch.
+    pub seconds: f64,
+}
+
+impl EpochRecord {
+    /// CSV header matching [`EpochRecord::to_csv_row`].
+    pub fn csv_header() -> &'static str {
+        "epoch,train_loss,train_accuracy,test_accuracy,seconds"
+    }
+
+    /// One CSV row.
+    pub fn to_csv_row(&self) -> String {
+        format!(
+            "{},{:.6},{:.6},{:.6},{:.3}",
+            self.epoch, self.train_loss, self.train_accuracy, self.test_accuracy, self.seconds
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[1, 2, 3], &[1, 2, 0]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+        assert_eq!(accuracy(&[5], &[5]), 1.0);
+    }
+
+    #[test]
+    fn confusion_layout() {
+        let m = confusion_matrix(&[0, 1, 1, 2], &[0, 1, 2, 2], 3);
+        assert_eq!(m[0][0], 1); // truth 0 predicted 0
+        assert_eq!(m[1][1], 1);
+        assert_eq!(m[2][1], 1); // truth 2 predicted 1
+        assert_eq!(m[2][2], 1);
+        // diagonal sum = correct count
+        let diag: u32 = (0..3).map(|i| m[i][i]).sum();
+        assert_eq!(diag, 3);
+    }
+
+    #[test]
+    fn confusion_row_sums_are_class_counts() {
+        let truth = [0u8, 0, 1, 1, 1, 2];
+        let pred = [0u8, 1, 1, 1, 0, 2];
+        let m = confusion_matrix(&pred, &truth, 3);
+        assert_eq!(m[0].iter().sum::<u32>(), 2);
+        assert_eq!(m[1].iter().sum::<u32>(), 3);
+        assert_eq!(m[2].iter().sum::<u32>(), 1);
+    }
+
+    #[test]
+    fn csv_row_format() {
+        let r = EpochRecord {
+            epoch: 3,
+            train_loss: 0.5,
+            train_accuracy: 0.9,
+            test_accuracy: 0.85,
+            seconds: 1.25,
+        };
+        assert_eq!(r.to_csv_row(), "3,0.500000,0.900000,0.850000,1.250");
+        assert!(EpochRecord::csv_header().starts_with("epoch,"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn length_mismatch_rejected() {
+        accuracy(&[1], &[1, 2]);
+    }
+}

@@ -1,0 +1,11 @@
+//! The training stack: featurizers, metrics, and the epoch-loop
+//! trainer that reproduces the paper's mini-batch SGD experiments
+//! (§7, §9).
+
+pub mod featurizer;
+pub mod metrics;
+pub mod trainer;
+
+pub use featurizer::Featurizer;
+pub use metrics::{accuracy, confusion_matrix, EpochRecord};
+pub use trainer::{TrainConfig, Trainer, TrainReport};

@@ -1,0 +1,10 @@
+//! Small shared utilities: power-of-two helpers, a minimal JSON
+//! parser/writer (for the artifact manifest — no serde offline), and a
+//! thread pool (no tokio offline).
+
+pub mod json;
+pub mod pow2;
+pub mod threadpool;
+
+pub use pow2::{is_pow2, log2_exact, next_pow2};
+pub use threadpool::ThreadPool;

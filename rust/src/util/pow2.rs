@@ -1,0 +1,80 @@
+//! Power-of-two helpers. The paper's operator `[·]₂` (Eq. 22) pads the
+//! input dimension to the next power of two, which is [`next_pow2`].
+
+/// The next power of two ≥ `n` (the paper's `[n]₂`). `next_pow2(0) == 1`.
+pub fn next_pow2(n: usize) -> usize {
+    n.max(1).next_power_of_two()
+}
+
+/// Whether `n` is a power of two (0 is not).
+pub fn is_pow2(n: usize) -> bool {
+    n != 0 && n & (n - 1) == 0
+}
+
+/// `log₂ n` for exact powers of two.
+///
+/// # Panics
+/// If `n` is not a power of two.
+pub fn log2_exact(n: usize) -> u32 {
+    assert!(is_pow2(n), "{n} is not a power of two");
+    n.trailing_zeros()
+}
+
+/// Zero-pad `x` to the next power of two (paper Figure 1: "the original
+/// image is padded in form of long vector to the nearest power of 2").
+pub fn pad_pow2(x: &[f32]) -> Vec<f32> {
+    let n = next_pow2(x.len());
+    let mut out = vec![0.0f32; n];
+    out[..x.len()].copy_from_slice(x);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn next_pow2_values() {
+        assert_eq!(next_pow2(0), 1);
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(2), 2);
+        assert_eq!(next_pow2(3), 4);
+        assert_eq!(next_pow2(784), 1024); // MNIST image
+        assert_eq!(next_pow2(1024), 1024);
+        assert_eq!(next_pow2(1025), 2048);
+    }
+
+    #[test]
+    fn is_pow2_values() {
+        assert!(!is_pow2(0));
+        assert!(is_pow2(1));
+        assert!(is_pow2(4096));
+        assert!(!is_pow2(4097));
+        assert!(!is_pow2(usize::MAX));
+    }
+
+    #[test]
+    fn log2_exact_values() {
+        assert_eq!(log2_exact(1), 0);
+        assert_eq!(log2_exact(1024), 10);
+        assert_eq!(log2_exact(1 << 20), 20);
+    }
+
+    #[test]
+    #[should_panic]
+    fn log2_rejects_non_pow2() {
+        log2_exact(12);
+    }
+
+    #[test]
+    fn pad_preserves_prefix_and_zeroes_tail() {
+        let x = [1.0f32, 2.0, 3.0];
+        let p = pad_pow2(&x);
+        assert_eq!(p.len(), 4);
+        assert_eq!(&p[..3], &x);
+        assert_eq!(p[3], 0.0);
+        // already a power of two → unchanged
+        let y = [1.0f32, 2.0];
+        assert_eq!(pad_pow2(&y), vec![1.0, 2.0]);
+    }
+}

@@ -1,0 +1,151 @@
+//! Fixed-size thread pool over `std::sync::mpsc` — the execution
+//! substrate for the coordinator's prefetch pipeline and the parallel
+//! feature generator (offline build: no tokio/rayon).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed pool of worker threads executing boxed jobs FIFO.
+pub struct ThreadPool {
+    sender: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `size` workers (`size ≥ 1`).
+    pub fn new(size: usize) -> ThreadPool {
+        assert!(size > 0, "pool must have at least one worker");
+        let (sender, receiver) = mpsc::channel::<Job>();
+        let receiver = Arc::new(Mutex::new(receiver));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&receiver);
+                thread::Builder::new()
+                    .name(format!("mckernel-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                    .expect("failed to spawn worker thread")
+            })
+            .collect();
+        ThreadPool { sender: Some(sender), workers }
+    }
+
+    /// A pool sized to the machine (`available_parallelism`, min 1).
+    pub fn with_default_size() -> ThreadPool {
+        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        ThreadPool::new(n)
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.sender
+            .as_ref()
+            .expect("pool is shut down")
+            .send(Box::new(f))
+            .expect("worker channel closed");
+    }
+
+    /// Run `f(i)` for `i ∈ 0..n` across the pool and wait for all.
+    pub fn scope_for_each<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let (done_tx, done_rx) = mpsc::channel();
+        for i in 0..n {
+            let f = Arc::clone(&f);
+            let done = done_tx.clone();
+            self.execute(move || {
+                f(i);
+                let _ = done.send(());
+            });
+        }
+        drop(done_tx);
+        for _ in 0..n {
+            done_rx.recv().expect("worker panicked");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        // Close the channel, then join every worker.
+        self.sender.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                tx.send(()).unwrap();
+            });
+        }
+        for _ in 0..100 {
+            rx.recv().unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn scope_for_each_covers_range() {
+        let pool = ThreadPool::new(3);
+        let hits: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..50).map(|_| AtomicUsize::new(0)).collect());
+        let h = Arc::clone(&hits);
+        pool.scope_for_each(50, move |i| {
+            h[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, a) in hits.iter().enumerate() {
+            assert_eq!(a.load(Ordering::SeqCst), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        });
+        drop(pool); // must not hang or panic
+    }
+
+    #[test]
+    fn size_reported() {
+        assert_eq!(ThreadPool::new(5).size(), 5);
+        assert!(ThreadPool::with_default_size().size() >= 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_workers_rejected() {
+        ThreadPool::new(0);
+    }
+}

@@ -1,0 +1,99 @@
+//! CLI integration: drive the subcommand layer end to end (gen-data →
+//! train → checkpoint → predict), using the library-level entrypoint.
+
+use mckernel::cli::{commands, Args};
+
+fn run(argv: &[&str]) -> anyhow::Result<()> {
+    commands::run(Args::parse(argv.iter().copied()).unwrap())
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join("mckernel_cli_it");
+    std::fs::create_dir_all(&d).unwrap();
+    d.join(name)
+}
+
+#[test]
+fn help_runs() {
+    run(&[]).unwrap();
+    run(&["help"]).unwrap();
+}
+
+#[test]
+fn unknown_command_fails() {
+    assert!(run(&["bogus"]).is_err());
+    assert!(run(&["train", "--backend", "quantum"]).is_err());
+}
+
+#[test]
+fn features_command() {
+    run(&["features", "--train-size", "5", "--test-size", "5", "--expansions", "2"]).unwrap();
+}
+
+#[test]
+fn fwht_command_all_engines() {
+    for e in ["naive", "spiral", "iterative", "mckernel"] {
+        run(&["fwht", "--log-n", "8", "--engine", e]).unwrap();
+    }
+    assert!(run(&["fwht", "--engine", "fft"]).is_err());
+}
+
+#[test]
+fn train_checkpoint_predict_roundtrip() {
+    let ck = tmp("cli_model.mck");
+    let csv = tmp("cli_history.csv");
+    run(&[
+        "train",
+        "--train-size", "80", "--test-size", "30",
+        "--epochs", "2", "--expansions", "1", "--quiet",
+        "--checkpoint", ck.to_str().unwrap(),
+        "--csv", csv.to_str().unwrap(),
+    ])
+    .unwrap();
+    assert!(ck.exists());
+    let history = std::fs::read_to_string(&csv).unwrap();
+    assert_eq!(history.lines().count(), 3); // header + 2 epochs
+    run(&[
+        "predict",
+        "--checkpoint", ck.to_str().unwrap(),
+        "--train-size", "5", "--test-size", "30",
+    ])
+    .unwrap();
+}
+
+#[test]
+fn lr_baseline_via_flag() {
+    run(&[
+        "train", "--featurizer", "identity", "--train-size", "50", "--test-size", "20",
+        "--epochs", "1", "--lr", "0.05", "--quiet",
+    ])
+    .unwrap();
+}
+
+#[test]
+fn gen_data_writes_idx_pair() {
+    let out = tmp("gen");
+    run(&[
+        "gen-data", "--out", out.to_str().unwrap(),
+        "--train-size", "12", "--test-size", "6", "--dataset", "fashion",
+    ])
+    .unwrap();
+    assert!(out.join("train-images-idx3-ubyte").exists());
+    assert!(out.join("t10k-labels-idx1-ubyte").exists());
+    // and they load back
+    let d = mckernel::data::Dataset::from_idx_files(
+        out.join("train-images-idx3-ubyte"),
+        out.join("train-labels-idx1-ubyte"),
+    )
+    .unwrap();
+    assert_eq!(d.len(), 12);
+}
+
+#[test]
+fn serve_demo_small() {
+    run(&[
+        "serve", "--train-size", "16", "--test-size", "1", "--expansions", "1",
+        "--requests", "32", "--clients", "4", "--max-batch", "8",
+    ])
+    .unwrap();
+}

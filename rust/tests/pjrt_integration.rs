@@ -1,0 +1,161 @@
+//! Cross-layer integration: the Rust-native feature map and the
+//! AOT-compiled JAX/Pallas artifacts must agree numerically, and the
+//! full PJRT train/predict path must work end to end.
+//!
+//! Requires `make artifacts` (skipped with a notice otherwise).
+
+use mckernel::data::{Dataset, SyntheticSpec};
+use mckernel::linalg::Matrix;
+use mckernel::mckernel::McKernelFactory;
+use mckernel::model::SoftmaxRegression;
+use mckernel::runtime::{FeatureOp, Predictor, Runtime, TrainStep};
+use std::sync::Arc;
+
+fn artifact_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts/ (run `make artifacts`)");
+        None
+    }
+}
+
+fn runtime() -> Option<Runtime> {
+    artifact_dir().map(|d| Runtime::new(d).expect("runtime"))
+}
+
+#[test]
+fn manifest_loads_and_validates() {
+    let Some(rt) = runtime() else { return };
+    assert_eq!(rt.manifest().classes, 10);
+    assert_eq!(rt.manifest().n, 1024);
+    assert!(rt.manifest().entries.len() >= 11);
+    assert_eq!(rt.platform(), "cpu");
+}
+
+/// THE cross-layer consistency check: identical coefficients through
+/// the Pallas/XLA path and the Rust-native path give identical
+/// features (up to f32 noise).
+#[test]
+fn pjrt_features_match_native_features() {
+    let Some(rt) = runtime() else { return };
+    for e in [1usize, 2] {
+        let map = Arc::new(
+            McKernelFactory::new(784)
+                .expansions(e)
+                .sigma(1.0)
+                .rbf_matern(40)
+                .seed(1398239763)
+                .build(),
+        );
+        let op = FeatureOp::new(&rt, &map).expect("feature op");
+        let data = Dataset::synthetic(3, &SyntheticSpec::mnist(), "train", 8);
+        let native = map.transform_batch(data.images());
+        let pjrt = op.transform(data.images()).expect("pjrt transform");
+        assert_eq!(native.shape(), pjrt.shape());
+        let mut max_err = 0.0f32;
+        for (a, b) in native.data().iter().zip(pjrt.data()) {
+            max_err = max_err.max((a - b).abs());
+        }
+        assert!(max_err < 1e-3, "E={e}: native vs pjrt max err {max_err}");
+    }
+}
+
+#[test]
+fn pjrt_train_step_decreases_loss() {
+    let Some(rt) = runtime() else { return };
+    let map = Arc::new(
+        McKernelFactory::new(784).expansions(1).sigma(8.0).rbf().seed(7).build(),
+    );
+    let mut step = TrainStep::new(&rt, "mckernel", Some(&map)).expect("train step");
+    assert_eq!(step.entry().batch, 10);
+    let data = Dataset::synthetic(9, &SyntheticSpec::mnist(), "train", 10);
+    let x = data.images().clone();
+    let y = data.labels().to_vec();
+    let first = step.step(&x, &y, 0.01).unwrap();
+    assert!((first - 10.0f32.ln()).abs() < 0.05, "zero-init loss ≈ ln10, got {first}");
+    let mut last = first;
+    for _ in 0..30 {
+        last = step.step(&x, &y, 0.01).unwrap();
+    }
+    assert!(last < first * 0.8, "loss {first} -> {last}");
+    assert_eq!(step.steps(), 31);
+}
+
+#[test]
+fn pjrt_lr_baseline_step_matches_native_math() {
+    let Some(rt) = runtime() else { return };
+    let mut step = TrainStep::new(&rt, "identity", None).expect("lr step");
+    let data = Dataset::synthetic(11, &SyntheticSpec::mnist(), "train", 10);
+    let x = data.images().clone();
+    let y = data.labels().to_vec();
+    let loss = step.step(&x, &y, 0.05).unwrap();
+
+    // native reference: same zero-init model, same batch
+    let model = SoftmaxRegression::zeros(10, 784);
+    let (native_loss, native_grads) = model.loss_and_grad(&x, &y);
+    assert!((loss - native_loss).abs() < 1e-4, "loss {loss} vs {native_loss}");
+
+    let updated = step.export_model().unwrap();
+    for (idx, (got, want)) in updated
+        .w()
+        .data()
+        .iter()
+        .zip(native_grads.dw.data().iter().map(|g| -0.05 * g))
+        .enumerate()
+    {
+        assert!((got - want).abs() < 1e-5, "w[{idx}]: {got} vs {want}");
+    }
+}
+
+#[test]
+fn pjrt_predictor_matches_native_argmax() {
+    let Some(rt) = runtime() else { return };
+    let predictor = Predictor::new(&rt, "identity", None).expect("predictor");
+    let data = Dataset::synthetic(13, &SyntheticSpec::mnist(), "test", 50);
+    let model = SoftmaxRegression::init(10, 784, 21);
+    let preds = predictor.predict(&model, data.images()).unwrap();
+    let native = model.predict(data.images());
+    assert_eq!(preds, native);
+}
+
+#[test]
+fn pjrt_mckernel_predictor_consistent_with_feature_op() {
+    let Some(rt) = runtime() else { return };
+    let map = Arc::new(
+        McKernelFactory::new(784).expansions(1).sigma(1.0).rbf_matern(40).seed(5).build(),
+    );
+    let predictor = Predictor::new(&rt, "mckernel", Some(&map)).unwrap();
+    let data = Dataset::synthetic(15, &SyntheticSpec::mnist(), "test", 20);
+    let model = SoftmaxRegression::init(10, map.feature_dim(), 3);
+    let preds = predictor.predict(&model, data.images()).unwrap();
+    // native: featurize then argmax
+    let feats = map.transform_batch(data.images());
+    let native = model.predict(&feats);
+    assert_eq!(preds, native);
+}
+
+#[test]
+fn train_step_import_export_roundtrip() {
+    let Some(rt) = runtime() else { return };
+    let mut step = TrainStep::new(&rt, "identity", None).unwrap();
+    let mut m = SoftmaxRegression::zeros(10, 784);
+    m.w_mut()[(3, 100)] = 1.5;
+    m.b_mut()[2] = -0.5;
+    step.import_model(&m).unwrap();
+    let back = step.export_model().unwrap();
+    assert_eq!(back.w().data(), m.w().data());
+    assert_eq!(back.b(), m.b());
+}
+
+#[test]
+fn ragged_eval_batch_handled() {
+    let Some(rt) = runtime() else { return };
+    let predictor = Predictor::new(&rt, "identity", None).unwrap();
+    let model = SoftmaxRegression::init(10, 784, 1);
+    // 7 rows ≪ eval batch 256: padded internally, 7 results back
+    let x = Matrix::from_fn(7, 784, |r, c| ((r + c) % 9) as f32 / 9.0);
+    let preds = predictor.predict(&model, &x).unwrap();
+    assert_eq!(preds.len(), 7);
+}

@@ -1,0 +1,194 @@
+//! Property-based invariants (proplite) over the core substrates: the
+//! FWHT engines, the hash RNG, permutations, the feature map and the
+//! classifier gradients.
+
+use mckernel::fwht::{self, Engine};
+use mckernel::hash::HashRng;
+use mckernel::linalg::Matrix;
+use mckernel::mckernel::{Kernel, McKernelFactory};
+use mckernel::model::SoftmaxRegression;
+use mckernel::proplite::{self, prop, Outcome};
+use mckernel::rand::fisher_yates::{invert_permutation, is_permutation, random_permutation};
+use mckernel::util::pow2::{next_pow2, pad_pow2};
+
+fn rand_vec(g: &mut proplite::Gen, n: usize) -> Vec<f32> {
+    g.vec_f32(n, -4.0, 4.0)
+}
+
+#[test]
+fn prop_all_fwht_engines_agree() {
+    proplite::check("engines agree", 60, |g| {
+        let n = g.pow2(0, 10);
+        let x = rand_vec(g, n);
+        let mut want = x.clone();
+        fwht::naive::fwht(&mut want);
+        for eng in [Engine::Recursive, Engine::Iterative, Engine::Optimized] {
+            let mut got = x.clone();
+            eng.run(&mut got);
+            for (a, b) in got.iter().zip(want.iter()) {
+                if (a - b).abs() > 1e-2 * b.abs().max(1.0) {
+                    return prop(false, format!("{} n={n}: {a} vs {b}", eng.name()));
+                }
+            }
+        }
+        Outcome::Pass
+    });
+}
+
+#[test]
+fn prop_fwht_involution_and_parseval() {
+    proplite::check("H(Hx)=n*x and |Hx|^2=n|x|^2", 60, |g| {
+        let n = g.pow2(0, 12);
+        let x = rand_vec(g, n);
+        let e0: f64 = x.iter().map(|v| (*v as f64).powi(2)).sum();
+        let mut y = x.clone();
+        fwht::fwht(&mut y);
+        let e1: f64 = y.iter().map(|v| (*v as f64).powi(2)).sum();
+        if e0 > 1e-9 && (e1 / (n as f64 * e0) - 1.0).abs() > 1e-3 {
+            return prop(false, format!("parseval n={n}: {e1} vs {}", n as f64 * e0));
+        }
+        fwht::fwht(&mut y);
+        for (a, b) in y.iter().zip(x.iter()) {
+            if (a / n as f32 - b).abs() > 1e-2 {
+                return prop(false, format!("involution n={n}"));
+            }
+        }
+        Outcome::Pass
+    });
+}
+
+#[test]
+fn prop_permutations_valid_and_invertible() {
+    proplite::check("Fisher-Yates validity", 80, |g| {
+        let n = g.usize_in(0, 2000);
+        let mut rng = HashRng::new(g.u64(), 0x91);
+        let p = random_permutation(n, &mut rng);
+        if !is_permutation(&p) {
+            return prop(false, format!("invalid perm n={n}"));
+        }
+        let inv = invert_permutation(&p);
+        let ok = p.iter().enumerate().all(|(i, &v)| inv[v as usize] == i as u32);
+        prop(ok, format!("inverse wrong n={n}"))
+    });
+}
+
+#[test]
+fn prop_hash_rng_random_access_consistent() {
+    proplite::check("random access stable", 60, |g| {
+        let seed = g.u64();
+        let stream = g.u64();
+        let k = g.usize_in(0, 100) as u64;
+        let rng = HashRng::new(seed, stream);
+        let direct = rng.at(k);
+        let again = rng.at(k);
+        prop(direct == again, format!("at({k}) unstable"))
+    });
+}
+
+#[test]
+fn prop_feature_map_bounds_and_determinism() {
+    proplite::check("phi in [-1,1], deterministic, correct dim", 25, |g| {
+        let input_dim = g.usize_in(2, 200);
+        let e = g.usize_in(1, 3);
+        let sigma = g.f64_in(0.3, 8.0);
+        let seed = g.u64();
+        let kernel_rbf = g.bool();
+        let mut f = McKernelFactory::new(input_dim).expansions(e).sigma(sigma).seed(seed);
+        f = if kernel_rbf { f.rbf() } else { f.rbf_matern(5) };
+        let map = f.build();
+        let n = next_pow2(input_dim);
+        if map.feature_dim() != 2 * n * e {
+            return prop(false, format!("dim {} != {}", map.feature_dim(), 2 * n * e));
+        }
+        let x = g.vec_f32(input_dim, -2.0, 2.0);
+        let f1 = map.transform(&x);
+        if !f1.iter().all(|v| (-1.0..=1.0).contains(v) && v.is_finite()) {
+            return prop(false, "feature out of unit box".to_string());
+        }
+        let f2 = map.transform(&x);
+        prop(f1 == f2, "nondeterministic transform".to_string())
+    });
+}
+
+#[test]
+fn prop_feature_map_padding_invariance() {
+    proplite::check("zero-padding does not change phi", 25, |g| {
+        let input_dim = g.usize_in(2, 100);
+        let map = McKernelFactory::new(input_dim)
+            .expansions(1)
+            .seed(g.u64())
+            .build();
+        let x = g.vec_f32(input_dim, -1.0, 1.0);
+        let padded = pad_pow2(&x);
+        prop(
+            map.transform(&x) == map.transform(&padded),
+            format!("padding changed features (d={input_dim})"),
+        )
+    });
+}
+
+#[test]
+fn prop_kernel_estimate_unbiased_on_self() {
+    proplite::check("<phi(x),phi(x)> = 1", 20, |g| {
+        let d = g.usize_in(2, 64);
+        let map = McKernelFactory::new(d)
+            .expansions(g.usize_in(1, 4))
+            .sigma(g.f64_in(0.5, 4.0))
+            .seed(g.u64())
+            .build();
+        let x = g.vec_f32(d, -1.0, 1.0);
+        let f = map.transform_normalized(&x);
+        let dot: f64 = f.iter().map(|v| (*v as f64).powi(2)).sum();
+        prop((dot - 1.0).abs() < 1e-3, format!("self-sim {dot}"))
+    });
+}
+
+#[test]
+fn prop_softmax_grad_is_descent_direction() {
+    proplite::check("loss decreases along -grad", 25, |g| {
+        let classes = g.usize_in(2, 5);
+        let feats = g.usize_in(2, 20);
+        let batch = g.usize_in(1, 8);
+        let mut model = SoftmaxRegression::init(classes, feats, g.u64());
+        let x = Matrix::from_fn(batch, feats, |_, _| g.f32_in(-1.0, 1.0));
+        let y: Vec<u8> = (0..batch).map(|_| g.usize_in(0, classes - 1) as u8).collect();
+        let (l0, grads) = model.loss_and_grad(&x, &y);
+        model.w_mut().axpy(-0.01, &grads.dw);
+        for (b, d) in model.b_mut().iter_mut().zip(&grads.db) {
+            *b -= 0.01 * d;
+        }
+        let l1 = model.loss(&x, &y);
+        prop(
+            l1 <= l0 + 1e-6,
+            format!("ascent: {l0} -> {l1} (c={classes} f={feats} b={batch})"),
+        )
+    });
+}
+
+#[test]
+fn prop_exact_rbf_kernel_bounds() {
+    proplite::check("0 < k(x,y) <= 1, k(x,x)=1", 50, |g| {
+        let d = g.usize_in(1, 30);
+        let x = g.vec_f32(d, -3.0, 3.0);
+        let y = g.vec_f32(d, -3.0, 3.0);
+        let sigma = g.f64_in(0.1, 10.0);
+        let kxy = Kernel::Rbf.exact(&x, &y, sigma);
+        let kxx = Kernel::Rbf.exact(&x, &x, sigma);
+        prop(
+            kxy > 0.0 && kxy <= 1.0 + 1e-12 && (kxx - 1.0).abs() < 1e-9,
+            format!("kxy={kxy} kxx={kxx}"),
+        )
+    });
+}
+
+#[test]
+fn prop_next_pow2_properties() {
+    proplite::check("next_pow2 minimal upper power", 100, |g| {
+        let n = g.usize_in(1, 1 << 20);
+        let p = next_pow2(n);
+        prop(
+            p.is_power_of_two() && p >= n && (p == 1 || p / 2 < n),
+            format!("n={n} p={p}"),
+        )
+    });
+}

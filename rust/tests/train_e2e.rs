@@ -1,0 +1,145 @@
+//! End-to-end learning behaviour on the synthetic datasets: the
+//! qualitative claims behind Figures 3-5 at test-sized scale.
+//!
+//! * McKernel features match/beat the LR baseline on this data.
+//! * Accuracy does not degrade with more expansions E.
+//! * Checkpoint round-trip preserves evaluation exactly.
+
+use mckernel::data::{Dataset, SyntheticSpec};
+use mckernel::mckernel::McKernelFactory;
+use mckernel::model::checkpoint::Checkpoint;
+use mckernel::optim::SgdConfig;
+use mckernel::train::{Featurizer, TrainConfig, Trainer};
+use std::sync::Arc;
+
+fn datasets(train_n: usize, test_n: usize, spec: &SyntheticSpec) -> (Dataset, Dataset) {
+    (
+        Dataset::synthetic(1398239763, spec, "train", train_n),
+        Dataset::synthetic(1398239763, spec, "test", test_n),
+    )
+}
+
+fn config(epochs: usize, lr: f32) -> TrainConfig {
+    TrainConfig {
+        epochs,
+        batch_size: 10,
+        sgd: SgdConfig { lr, momentum: 0.0, clip: None },
+        seed: 1398239763,
+        eval_every_epoch: false,
+        verbose: false,
+    }
+}
+
+fn kernel_featurizer(e: usize) -> Featurizer {
+    // Matérn t=40 sigma=1 — the paper's Figure 3-5 configuration.
+    Featurizer::McKernel(Arc::new(
+        McKernelFactory::new(784)
+            .expansions(e)
+            .sigma(1.0)
+            .rbf_matern(40)
+            .seed(1398239763)
+            .build(),
+    ))
+}
+
+#[test]
+fn mckernel_beats_lr_on_nonlinear_data() {
+    let (train, test) = datasets(600, 200, &SyntheticSpec::mnist());
+    let (_, lr_report) = Trainer::new(config(6, 0.01), Featurizer::Identity).fit(&train, &test);
+    let (_, mk_report) = Trainer::new(config(6, 0.001), kernel_featurizer(2)).fit(&train, &test);
+    assert!(
+        mk_report.final_test_accuracy >= lr_report.final_test_accuracy - 0.02,
+        "kernel {:.3} should match/beat LR {:.3}",
+        mk_report.final_test_accuracy,
+        lr_report.final_test_accuracy
+    );
+    assert!(mk_report.final_test_accuracy > 0.5);
+}
+
+#[test]
+fn accuracy_improves_with_expansions() {
+    // The Figure 3/4/5 x-axis claim, at small scale: E=4 >= E=1 - noise.
+    let (train, test) = datasets(400, 150, &SyntheticSpec::mnist());
+    let (_, e1) = Trainer::new(config(5, 0.001), kernel_featurizer(1)).fit(&train, &test);
+    let (_, e4) = Trainer::new(config(5, 0.001), kernel_featurizer(4)).fit(&train, &test);
+    assert!(
+        e4.final_test_accuracy >= e1.final_test_accuracy - 0.03,
+        "E=4 {:.3} vs E=1 {:.3}",
+        e4.final_test_accuracy,
+        e1.final_test_accuracy
+    );
+}
+
+#[test]
+fn fashion_is_harder_than_mnist() {
+    let cfg = config(5, 0.01);
+    let (m_train, m_test) = datasets(400, 150, &SyntheticSpec::mnist());
+    let (f_train, f_test) = datasets(400, 150, &SyntheticSpec::fashion());
+    let (_, m_rep) = Trainer::new(cfg.clone(), Featurizer::Identity).fit(&m_train, &m_test);
+    let (_, f_rep) = Trainer::new(cfg, Featurizer::Identity).fit(&f_train, &f_test);
+    assert!(
+        f_rep.final_test_accuracy < m_rep.final_test_accuracy + 0.02,
+        "fashion {:.3} should be <= mnist {:.3}",
+        f_rep.final_test_accuracy,
+        m_rep.final_test_accuracy
+    );
+}
+
+#[test]
+fn parameter_count_follows_eq22() {
+    let (train, test) = datasets(50, 20, &SyntheticSpec::mnist());
+    for e in [1usize, 2] {
+        let (_, rep) = Trainer::new(config(1, 0.001), kernel_featurizer(e)).fit(&train, &test);
+        assert_eq!(rep.param_count, 10 * (2 * 1024 * e + 1), "E={e}");
+    }
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_eval() {
+    let (train, test) = datasets(200, 80, &SyntheticSpec::mnist());
+    let trainer = Trainer::new(config(3, 0.001), kernel_featurizer(1));
+    let (model, rep) = trainer.fit(&train, &test);
+
+    let map_cfg = match &trainer.featurizer {
+        Featurizer::McKernel(m) => m.config().clone(),
+        _ => unreachable!(),
+    };
+    let dir = std::env::temp_dir().join("mckernel_e2e_ckpt");
+    let path = dir.join("m.mck");
+    Checkpoint {
+        feature_config: Some(map_cfg),
+        model,
+        meta: Default::default(),
+    }
+    .save(&path)
+    .unwrap();
+
+    let ck = Checkpoint::load(&path).unwrap();
+    let featurizer = Featurizer::McKernel(Arc::new(mckernel::mckernel::McKernel::new(
+        ck.feature_config.clone().unwrap(),
+    )));
+    let eval_trainer = Trainer::new(config(1, 0.001), featurizer);
+    let acc = eval_trainer.evaluate(&ck.model, &test);
+    assert!(
+        (acc - rep.final_test_accuracy).abs() < 1e-9,
+        "restored {acc} vs trained {}",
+        rep.final_test_accuracy
+    );
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn momentum_and_clip_paths_run() {
+    let (train, test) = datasets(100, 40, &SyntheticSpec::mnist());
+    let cfg = TrainConfig {
+        epochs: 2,
+        batch_size: 10,
+        sgd: SgdConfig { lr: 0.01, momentum: 0.9, clip: Some(5.0) },
+        seed: 3,
+        eval_every_epoch: true,
+        verbose: false,
+    };
+    let (_, rep) = Trainer::new(cfg, Featurizer::Identity).fit(&train, &test);
+    assert_eq!(rep.history.len(), 2);
+    assert!(rep.history.iter().all(|r| r.train_loss.is_finite()));
+}
