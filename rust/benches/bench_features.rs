@@ -1,12 +1,15 @@
 //! Feature-map throughput: native Rust pipeline vs its FWHT-only
 //! lower bound, across expansions — quantifies the paper's claim that
-//! the transform is the bottleneck and everything else is O(n).
+//! the transform is the bottleneck and everything else is O(n) — plus
+//! the per-row vs batch-vectorized pipeline comparison (the PR-gating
+//! speedup number; see EXPERIMENTS.md).
 //!
 //! Usage: cargo bench --bench bench_features [-- --quick]
 
-use mckernel::benchkit::{bench, BenchConfig, Report};
+use mckernel::benchkit::{bench, compare_feature_paths, BenchConfig, Report};
 use mckernel::fwht::optimized;
 use mckernel::hash::HashRng;
+use mckernel::linalg::Matrix;
 use mckernel::mckernel::McKernelFactory;
 
 fn main() {
@@ -55,5 +58,20 @@ fn main() {
         "E=4 throughput: {:.0} samples/s  ({:.1} MB/s of features)",
         rfull.throughput(1.0),
         rfull.throughput(1.0) * (map.feature_dim() * 4) as f64 / 1e6
+    );
+
+    // ---- batched pipeline vs per-row oracle (the PR-gating number) ---
+    let batch = 64usize;
+    let mut rb = HashRng::new(9, 9);
+    let xb = Matrix::from_fn(batch, input_dim, |_, _| rb.next_f32() - 0.5);
+    let cmp = compare_feature_paths(&map, &xb, &cfg);
+    println!(
+        "batch={batch}, n=1024, E=4: per-row {:.3} ms/batch  batched {:.3} ms/batch  \
+         speedup {:.2}x  ({:.0} rows/s, max |err| {:.2e})",
+        cmp.per_row.median_ms(),
+        cmp.batched.median_ms(),
+        cmp.speedup(),
+        cmp.rows_per_s(),
+        cmp.max_abs_err
     );
 }

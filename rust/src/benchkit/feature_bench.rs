@@ -1,0 +1,73 @@
+//! Shared per-row vs batched feature-pipeline comparison, used by the
+//! `bench_features` binary and the `mckernel bench` CLI subcommand so
+//! the printed table and the machine-readable JSON snapshot can never
+//! diverge.
+
+use super::runner::{bench, BenchConfig, BenchResult};
+use crate::linalg::Matrix;
+use crate::mckernel::McKernel;
+
+/// Timings + output deviation of the two feature paths on one batch.
+pub struct FeatureComparison {
+    /// Per-row `transform_into` loop (the libm oracle).
+    pub per_row: BenchResult,
+    /// Batched `transform_batch_into` pipeline.
+    pub batched: BenchResult,
+    /// Max |per-row − batched| over all features (trig-kernel budget).
+    pub max_abs_err: f32,
+    /// Rows in the timed batch.
+    pub rows: usize,
+}
+
+impl FeatureComparison {
+    /// Median-over-median speedup of the batched path.
+    pub fn speedup(&self) -> f64 {
+        self.per_row.stats.median / self.batched.stats.median
+    }
+
+    /// Batched throughput in rows per second.
+    pub fn rows_per_s(&self) -> f64 {
+        self.rows as f64 / self.batched.stats.median
+    }
+}
+
+/// Time the per-row oracle vs the batched pipeline on the same batch
+/// and report the max output deviation between them.
+pub fn compare_feature_paths(map: &McKernel, x: &Matrix, cfg: &BenchConfig) -> FeatureComparison {
+    let rows = x.rows();
+    let mut out_rows = Matrix::zeros(rows, map.feature_dim());
+    let mut scratch_row = map.make_scratch();
+    let per_row = bench("features/per-row", cfg, |_| {
+        for r in 0..rows {
+            map.transform_into(x.row(r), out_rows.row_mut(r), &mut scratch_row);
+        }
+    });
+    let mut out_batch = Matrix::zeros(rows, map.feature_dim());
+    let mut scratch = map.make_batch_scratch();
+    let batched = bench("features/batched", cfg, |_| {
+        map.transform_batch_into(x, &mut out_batch, &mut scratch)
+    });
+    let max_abs_err = out_rows
+        .data()
+        .iter()
+        .zip(out_batch.data())
+        .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()));
+    FeatureComparison { per_row, batched, max_abs_err, rows }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mckernel::McKernelFactory;
+
+    #[test]
+    fn comparison_outputs_stay_within_budget() {
+        let map = McKernelFactory::new(16).expansions(1).seed(2).build();
+        let x = Matrix::from_fn(4, 16, |r, c| (r + c) as f32 * 0.1);
+        let cmp = compare_feature_paths(&map, &x, &BenchConfig::quick());
+        assert!(cmp.max_abs_err < 1e-5, "err {}", cmp.max_abs_err);
+        assert!(cmp.speedup() > 0.0);
+        assert!(cmp.rows_per_s() > 0.0);
+        assert_eq!(cmp.rows, 4);
+    }
+}

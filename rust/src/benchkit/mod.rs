@@ -4,10 +4,12 @@
 //! (min / median / mean / p95), table and CSV reporting — enough to
 //! regenerate the paper's Table 1 / Figure 2 and the ablation benches.
 
+pub mod feature_bench;
 pub mod report;
 pub mod runner;
 pub mod stats;
 
+pub use feature_bench::{compare_feature_paths, FeatureComparison};
 pub use report::Report;
 pub use runner::{bench, BenchConfig, BenchResult};
 pub use stats::Stats;

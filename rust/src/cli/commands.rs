@@ -22,6 +22,7 @@ COMMANDS:
   predict    evaluate a saved checkpoint on a dataset split
   features   featurize one synthetic sample and print stats
   fwht       run one FWHT and report timing
+  bench      write BENCH_*.json perf snapshots (per-row vs batched)
   gen-data   write a synthetic dataset as IDX files
   info       list AOT artifacts (requires `make artifacts`)
   serve      run the dynamic-batching feature server demo
@@ -229,6 +230,109 @@ pub fn cmd_fwht(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `mckernel bench` — machine-readable perf snapshot for cross-PR
+/// tracking: per-row oracle vs batched feature pipeline and FWHT,
+/// written as `BENCH_features.json` / `BENCH_fwht.json` in `--out-dir`
+/// (default: the current directory, i.e. the repo root in CI).
+pub fn cmd_bench(args: &Args) -> Result<()> {
+    use crate::benchkit::{bench, compare_feature_paths, BenchConfig};
+    use crate::linalg::Matrix;
+
+    let cfg = if args.flag("quick") { BenchConfig::quick() } else { BenchConfig::default() };
+    let out_dir = args.get_or("out-dir", ".");
+    let batch: usize = args.parse_or("batch", 64usize)?;
+    let e: usize = args.parse_or("expansions", 4usize)?;
+    let input_dim: usize = args.parse_or("input-dim", 784usize)?;
+
+    let map = McKernelFactory::new(input_dim)
+        .expansions(e)
+        .sigma(1.0)
+        .rbf_matern(40)
+        .seed(1)
+        .build();
+    let n = map.padded_dim();
+    let mut rng = crate::hash::HashRng::new(7, 0xBE);
+    let x = Matrix::from_fn(batch, input_dim, |_, _| rng.next_f32() - 0.5);
+
+    // per-row oracle vs batched pipeline on the same batch (shared
+    // harness with bench_features so table and JSON can't diverge)
+    let cmp = compare_feature_paths(&map, &x, &cfg);
+    println!(
+        "features (batch={batch}, n={n}, E={e}): per-row {:.3} ms  batched {:.3} ms  \
+         speedup {:.2}x  max |err| {:.2e}",
+        cmp.per_row.median_ms(),
+        cmp.batched.median_ms(),
+        cmp.speedup(),
+        cmp.max_abs_err
+    );
+    write_bench_json(
+        &format!("{out_dir}/BENCH_features.json"),
+        &[
+            ("bench", Json::Str("features".into())),
+            ("batch", Json::Num(batch as f64)),
+            ("input_dim", Json::Num(input_dim as f64)),
+            ("n", Json::Num(n as f64)),
+            ("expansions", Json::Num(e as f64)),
+            ("per_row_ms", Json::Num(cmp.per_row.median_ms())),
+            ("batched_ms", Json::Num(cmp.batched.median_ms())),
+            ("speedup", Json::Num(cmp.speedup())),
+            ("rows_per_s", Json::Num(cmp.rows_per_s())),
+            ("max_abs_err", Json::Num(cmp.max_abs_err as f64)),
+        ],
+    )?;
+
+    // FWHT per-row loop vs batched tile engine on the same shape. The
+    // transform is unnormalized (each pass scales magnitudes by ~n),
+    // so fold a 1/n rescale into both timed closures — identical
+    // overhead on both sides — to keep the buffers finite across the
+    // runner's thousands of iterations.
+    let inv_n = 1.0f32 / n as f32;
+    let mut rows_buf: Vec<f32> = (0..batch * n).map(|i| (i % 13) as f32 - 6.0).collect();
+    let fwht_rows = bench("fwht/per-row", &cfg, |_| {
+        for row in rows_buf.chunks_exact_mut(n) {
+            crate::fwht::fwht(row);
+            for v in row.iter_mut() {
+                *v *= inv_n;
+            }
+        }
+    });
+    let mut batch_buf: Vec<f32> = (0..batch * n).map(|i| (i % 13) as f32 - 6.0).collect();
+    let fwht_batched = bench("fwht/batched", &cfg, |_| {
+        crate::fwht::fwht_batch(&mut batch_buf, batch, n);
+        for v in batch_buf.iter_mut() {
+            *v *= inv_n;
+        }
+    });
+    let fwht_speedup = fwht_rows.stats.median / fwht_batched.stats.median;
+    println!(
+        "fwht (rows={batch}, n={n}): per-row {:.3} ms  batched {:.3} ms  speedup {:.2}x",
+        fwht_rows.median_ms(),
+        fwht_batched.median_ms(),
+        fwht_speedup
+    );
+    write_bench_json(
+        &format!("{out_dir}/BENCH_fwht.json"),
+        &[
+            ("bench", Json::Str("fwht".into())),
+            ("rows", Json::Num(batch as f64)),
+            ("n", Json::Num(n as f64)),
+            ("per_row_ms", Json::Num(fwht_rows.median_ms())),
+            ("batched_ms", Json::Num(fwht_batched.median_ms())),
+            ("speedup", Json::Num(fwht_speedup)),
+            ("transforms_per_s", Json::Num(batch as f64 / fwht_batched.stats.median)),
+        ],
+    )?;
+    Ok(())
+}
+
+fn write_bench_json(path: &str, fields: &[(&str, Json)]) -> Result<()> {
+    let obj: BTreeMap<String, Json> =
+        fields.iter().map(|(k, v)| (k.to_string(), v.clone())).collect();
+    std::fs::write(path, Json::Obj(obj).to_string())?;
+    println!("wrote {path}");
+    Ok(())
+}
+
 /// `mckernel gen-data`.
 pub fn cmd_gen_data(args: &Args) -> Result<()> {
     let out: String = args.require("out")?;
@@ -321,6 +425,7 @@ pub fn run(args: Args) -> Result<()> {
                 "predict" => cmd_predict(&rest),
                 "features" => cmd_features(&rest),
                 "fwht" => cmd_fwht(&rest),
+                "bench" => cmd_bench(&rest),
                 "gen-data" => cmd_gen_data(&rest),
                 "info" => cmd_info(&rest),
                 "serve" => cmd_serve(&rest),
@@ -378,6 +483,28 @@ mod tests {
     #[test]
     fn unknown_command_is_error() {
         assert!(run(args(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn bench_writes_machine_readable_json() {
+        // per-process dir, wiped first: stale files from a previous
+        // run must not be able to mask a broken write
+        let dir = std::env::temp_dir()
+            .join(format!("mckernel_bench_cmd_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let a = args(&[
+            "--quick", "--batch", "4", "--expansions", "1", "--input-dim", "16",
+            "--out-dir", dir.to_str().unwrap(),
+        ]);
+        cmd_bench(&a).unwrap();
+        for name in ["BENCH_features.json", "BENCH_fwht.json"] {
+            let text = std::fs::read_to_string(dir.join(name)).unwrap();
+            let json = Json::parse(&text).unwrap();
+            assert!(json.get("speedup").and_then(Json::as_f64).is_some(), "{name}");
+            assert!(json.get("n").and_then(Json::as_f64).is_some(), "{name}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

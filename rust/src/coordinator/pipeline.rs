@@ -50,15 +50,14 @@ impl Prefetcher {
                 if drop_last {
                     batcher = batcher.drop_last();
                 }
-                let scratch = map.as_ref().map(|m| m.make_scratch());
-                let mut scratch = scratch;
+                let mut scratch = map.as_ref().map(|m| m.make_batch_scratch());
                 for batch in batcher.epoch(&data, epoch) {
                     let features = match (&map, &mut scratch) {
                         (Some(m), Some(s)) => {
+                            // whole mini-batch through the batched
+                            // pipeline in one call
                             let mut out = Matrix::zeros(batch.images.rows(), m.feature_dim());
-                            for r in 0..batch.images.rows() {
-                                m.transform_into(batch.images.row(r), out.row_mut(r), s);
-                            }
+                            m.transform_batch_into(&batch.images, &mut out, s);
                             out
                         }
                         _ => batch.images,

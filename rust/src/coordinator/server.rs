@@ -5,6 +5,7 @@
 //! deadline-triggered), featurizes once per batch, and scatters the
 //! rows back to the callers.
 
+use crate::linalg::Matrix;
 use crate::mckernel::McKernel;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -81,7 +82,7 @@ impl FeatureServer {
         max_wait: Duration,
         stats: Arc<ServerStats>,
     ) {
-        let mut scratch = map.make_scratch();
+        let mut scratch = map.make_batch_scratch();
         let mut shutting_down = false;
         loop {
             // Block for the first request of a batch.
@@ -111,13 +112,20 @@ impl FeatureServer {
             stats
                 .batched_rows
                 .fetch_add(pending.len() as u64, Ordering::Relaxed);
-            // Featurize the coalesced batch row by row (shared scratch:
-            // the win is amortized dispatch + warm caches).
-            for req in pending {
-                let mut out = vec![0.0f32; map.feature_dim()];
-                map.transform_into(&req.x, &mut out, &mut scratch);
+            // Featurize the coalesced batch in ONE batched pass — this
+            // is where coalescing pays: the tile-vectorized pipeline
+            // turns every butterfly, gather and trig evaluation into a
+            // wide stream across the whole batch.
+            let rows = pending.len();
+            let mut xb = Matrix::zeros(rows, map.input_dim());
+            for (r, req) in pending.iter().enumerate() {
+                xb.row_mut(r).copy_from_slice(&req.x);
+            }
+            let mut feats = Matrix::zeros(rows, map.feature_dim());
+            map.transform_batch_into(&xb, &mut feats, &mut scratch);
+            for (r, req) in pending.into_iter().enumerate() {
                 stats.requests.fetch_add(1, Ordering::Relaxed);
-                let _ = req.reply.send(out); // client may have left
+                let _ = req.reply.send(feats.row(r).to_vec()); // client may have left
             }
             if shutting_down {
                 return;
@@ -217,9 +225,11 @@ mod tests {
         let x: Vec<f32> = (0..16).map(|i| i as f32 * 0.1).collect();
         let f = s.transform(x.clone()).unwrap();
         assert_eq!(f.len(), s.feature_dim());
-        // must equal the direct map output
+        // must equal the direct batched map output (tile grouping is
+        // irrelevant: lanes never interact)
         let map = McKernelFactory::new(16).expansions(1).seed(4).build();
-        assert_eq!(f, map.transform(&x));
+        let want = map.transform_batch(&Matrix::from_vec(1, 16, x));
+        assert_eq!(&f[..], want.row(0));
         s.shutdown();
     }
 
@@ -235,7 +245,8 @@ mod tests {
                 std::thread::spawn(move || {
                     let x: Vec<f32> = (0..16).map(|i| (i + k) as f32 * 0.3).collect();
                     let got = c.transform(x.clone()).unwrap();
-                    assert_eq!(got, m.transform(&x), "client {k}");
+                    let want = m.transform_batch(&Matrix::from_vec(1, 16, x));
+                    assert_eq!(&got[..], want.row(0), "client {k}");
                 })
             })
             .collect();

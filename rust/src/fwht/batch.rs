@@ -1,0 +1,189 @@
+//! Batch-axis vectorized FWHT — the engine behind the batched feature
+//! pipeline.
+//!
+//! The per-row engines ([`super::optimized`]) are latency-bound at the
+//! small strides: stage `h` touches pairs `(j, j+h)`, and the serial
+//! dependency chain between stages leaves the SIMD units idle when `h`
+//! is below the vector width. Here a tile of `T` rows is transposed
+//! into a column-major `(n, T)` layout — lane `l` of coefficient `j`
+//! sits at `tile[j*T + l]`, so the batch dimension is innermost — and
+//! a butterfly between coefficients `j` and `j+h` becomes an
+//! elementwise op over two contiguous `T`-float runs *no matter how
+//! small `h` is*. The stage loop is then literally the scalar engine
+//! with every stride scaled by `T`, so the fused radix-4 passes apply
+//! unchanged and the arithmetic DAG per lane is exactly the per-row
+//! DAG: results are bit-identical to [`super::fwht`] applied row by
+//! row (lanes never interact).
+//!
+//! `T` is capped so a tile stays L1/L2-resident (see [`tile_lanes`]);
+//! row-major callers stream whole tiles through transpose-in /
+//! stages / transpose-out, and the feature pipeline fuses its
+//! diagonals and gathers into those transposes.
+
+use super::optimized::{self, radix2_pass, radix4_pass};
+
+/// Tile footprint budget in f32 elements (128 KiB — L2-resident with
+/// headroom for the gather/trig scratch of the feature pipeline).
+const TILE_FLOATS: usize = 1 << 15;
+
+/// Batch lanes per tile for transform size `n`: as many rows as fit
+/// the footprint budget, clamped to `1..=64`.
+pub fn tile_lanes(n: usize) -> usize {
+    (TILE_FLOATS / n.max(1)).clamp(1, 64)
+}
+
+/// Run all `log₂ n` butterfly stages over a column-major `(n, lanes)`
+/// tile in place, batch dimension innermost. Equivalent to an
+/// independent FWHT of each lane; bit-identical to the per-row
+/// optimized engine (same stage order, same arithmetic per lane).
+pub fn fwht_colmajor(tile: &mut [f32], n: usize, lanes: usize) {
+    assert!(n.is_power_of_two(), "FWHT length must be a power of two");
+    assert_eq!(tile.len(), n * lanes, "tile shape mismatch");
+    if n <= 1 || lanes == 0 {
+        return;
+    }
+    // Stage stride in elements = coefficient stride × lane count; the
+    // pass kernels are shared with the scalar engine.
+    let stages = n.trailing_zeros();
+    let mut h = lanes;
+    if stages % 2 == 1 {
+        radix2_pass(tile, h);
+        h *= 2;
+    }
+    while h < n * lanes {
+        radix4_pass(tile, h);
+        h *= 4;
+    }
+}
+
+/// Gather `lanes` rows of a row-major `(lanes, n)` slice into a
+/// column-major tile.
+fn load_tile(rows: &[f32], n: usize, lanes: usize, tile: &mut [f32]) {
+    for (l, row) in rows.chunks_exact(n).enumerate() {
+        for (j, &v) in row.iter().enumerate() {
+            tile[j * lanes + l] = v;
+        }
+    }
+}
+
+/// Scatter a column-major tile back into row-major rows.
+fn store_tile(tile: &[f32], n: usize, lanes: usize, rows: &mut [f32]) {
+    for (l, row) in rows.chunks_exact_mut(n).enumerate() {
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = tile[j * lanes + l];
+        }
+    }
+}
+
+/// FWHT of every row of a row-major `(rows, n)` matrix, vectorized
+/// across the batch dimension. Bit-identical to [`super::fwht`]
+/// applied per row.
+pub fn fwht_batch(data: &mut [f32], rows: usize, n: usize) {
+    assert!(n.is_power_of_two(), "row length must be a power of two");
+    assert_eq!(data.len(), rows * n, "buffer shape mismatch");
+    let lanes_max = tile_lanes(n);
+    if lanes_max <= 1 {
+        // Transform too large to tile: the per-row engine's own
+        // cache-blocked streaming is already the right shape.
+        for row in data.chunks_exact_mut(n) {
+            optimized::fwht(row);
+        }
+        return;
+    }
+    let mut tile = vec![0.0f32; n * lanes_max];
+    let mut base = 0;
+    while base < rows {
+        let lanes = lanes_max.min(rows - base);
+        let rows_slice = &mut data[base * n..(base + lanes) * n];
+        let tile = &mut tile[..n * lanes];
+        load_tile(rows_slice, n, lanes, tile);
+        fwht_colmajor(tile, n, lanes);
+        store_tile(tile, n, lanes, rows_slice);
+        base += lanes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fwht;
+    use crate::hash::HashRng;
+
+    fn random_rows(rows: usize, n: usize, seed: u64) -> Vec<f32> {
+        let mut r = HashRng::new(seed, 0xB7);
+        (0..rows * n).map(|_| r.next_f32() * 2.0 - 1.0).collect()
+    }
+
+    fn check_exact(rows: usize, n: usize, seed: u64) {
+        let flat = random_rows(rows, n, seed);
+        let mut batch = flat.clone();
+        fwht_batch(&mut batch, rows, n);
+        for r in 0..rows {
+            let mut row = flat[r * n..(r + 1) * n].to_vec();
+            fwht::fwht(&mut row);
+            assert_eq!(
+                &batch[r * n..(r + 1) * n],
+                &row[..],
+                "rows={rows} n={n} r={r}"
+            );
+        }
+    }
+
+    #[test]
+    fn matches_per_row_exactly() {
+        for n in [1usize, 2, 4, 8, 64, 256, 1024] {
+            for rows in [1usize, 3, 7, 33] {
+                check_exact(rows, n, (rows * 1000 + n) as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn tail_tile_smaller_than_lane_count() {
+        // tile_lanes(1024) = 32: one full tile plus a 1-row tail.
+        check_exact(33, 1024, 42);
+        // and a tail that is most of a tile
+        check_exact(63, 1024, 43);
+    }
+
+    #[test]
+    fn single_lane_colmajor_is_plain_fwht() {
+        let n = 512;
+        let x = random_rows(1, n, 7);
+        let mut a = x.clone();
+        let mut b = x;
+        fwht_colmajor(&mut a, n, 1);
+        fwht::fwht(&mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn tile_lanes_bounds() {
+        assert_eq!(tile_lanes(1024), 32);
+        assert_eq!(tile_lanes(1 << 20), 1);
+        assert_eq!(tile_lanes(1), 64);
+        for n in [2usize, 16, 256, 4096, 1 << 16] {
+            let t = tile_lanes(n);
+            assert!((1..=64).contains(&t), "n={n} lanes={t}");
+        }
+    }
+
+    #[test]
+    fn batched_involution() {
+        let (rows, n) = (5, 256);
+        let x = random_rows(rows, n, 9);
+        let mut y = x.clone();
+        fwht_batch(&mut y, rows, n);
+        fwht_batch(&mut y, rows, n);
+        for (a, b) in y.iter().zip(x.iter()) {
+            assert!((a / n as f32 - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_pow2_rows_rejected() {
+        let mut x = vec![0.0f32; 3 * 12];
+        fwht_batch(&mut x, 3, 12);
+    }
+}

@@ -8,7 +8,8 @@
 //! ```
 //!
 //! `H·c` factors into `log₂ n` butterfly stages (`paper Eq. 12-13`),
-//! giving `O(n log n)` time. Four engines are provided:
+//! giving `O(n log n)` time. Four per-row engines are provided, plus a
+//! batch-axis vectorized engine:
 //!
 //! * [`naive`] — `O(n²)` by explicit sign computation (test oracle).
 //! * [`recursive`] — plan-based divide-and-conquer in the style of
@@ -18,15 +19,21 @@
 //!   two-phase traversal with unrolled SIMD-friendly codelets
 //!   ("vectorized sums and subtractions … till a small routine Hadamard
 //!   that fits in cache … then doubling on each iteration").
+//! * [`batch`] — `rows` transforms in lockstep on column-major tiles
+//!   (batch dimension innermost), the mini-batch hot path; bit-identical
+//!   to [`optimized`] per row.
 //!
 //! All engines operate **in place** and compute the *unnormalized*
 //! transform (`H x`, not `H x/√n`); [`crate::mckernel`] folds the
 //! `1/(σ√n)` normalization of Eq. 8 into the calibration diagonal.
 
+pub mod batch;
 pub mod iterative;
 pub mod naive;
 pub mod optimized;
 pub mod recursive;
+
+pub use batch::{fwht_batch, fwht_colmajor, tile_lanes};
 
 /// The default engine used by the library hot path.
 pub use optimized::fwht as fwht_fast;
@@ -88,15 +95,6 @@ impl Engine {
 /// If `data.len()` is not a power of two.
 pub fn fwht(data: &mut [f32]) {
     optimized::fwht(data);
-}
-
-/// FWHT of each row of a row-major `(rows, cols)` matrix.
-pub fn fwht_batch(data: &mut [f32], cols: usize) {
-    assert!(cols.is_power_of_two(), "row length must be a power of two");
-    assert_eq!(data.len() % cols, 0);
-    for row in data.chunks_exact_mut(cols) {
-        optimized::fwht(row);
-    }
 }
 
 #[cfg(test)]
@@ -191,7 +189,7 @@ mod tests {
         let rows = 5;
         let flat = random_vec(rows * cols, 3);
         let mut batch = flat.clone();
-        fwht_batch(&mut batch, cols);
+        fwht_batch(&mut batch, rows, cols);
         for r in 0..rows {
             let mut row = flat[r * cols..(r + 1) * cols].to_vec();
             fwht(&mut row);

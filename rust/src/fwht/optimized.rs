@@ -90,9 +90,11 @@ fn fwht_incache(d: &mut [f32]) {
 }
 
 /// One radix-2 butterfly stage at stride `h` (contiguous dual-stream
-/// inner loop; auto-vectorizes).
+/// inner loop; auto-vectorizes). Shared with [`crate::fwht::batch`],
+/// whose column-major tiles are this same pass with `h` scaled by the
+/// lane count.
 #[inline]
-fn radix2_pass(data: &mut [f32], h: usize) {
+pub(crate) fn radix2_pass(data: &mut [f32], h: usize) {
     for pair in data.chunks_exact_mut(2 * h) {
         let (a, b) = pair.split_at_mut(h);
         for i in 0..h {
@@ -105,9 +107,10 @@ fn radix2_pass(data: &mut [f32], h: usize) {
 }
 
 /// Two butterfly stages (strides `h` and `2h`) fused into one sweep:
-/// each element is read and written once instead of twice.
+/// each element is read and written once instead of twice. Shared with
+/// [`crate::fwht::batch`].
 #[inline]
-fn radix4_pass(data: &mut [f32], h: usize) {
+pub(crate) fn radix4_pass(data: &mut [f32], h: usize) {
     for quad in data.chunks_exact_mut(4 * h) {
         let (ab, cd) = quad.split_at_mut(2 * h);
         let (a, b) = ab.split_at_mut(h);

@@ -4,6 +4,7 @@
 use super::diag::{binary_diag, calibration_diag, gauss_diag};
 use super::kernel::Kernel;
 use crate::fwht;
+use crate::fwht::batch::{fwht_colmajor, tile_lanes};
 use crate::hash::hash_rng::streams;
 use crate::hash::HashRng;
 use crate::rand::fisher_yates::random_permutation;
@@ -66,6 +67,112 @@ impl FastfoodBlock {
         // v = (C/(σ√n‖g‖)) v
         for i in 0..n {
             out[i] *= self.scale[i];
+        }
+    }
+
+    /// Apply everything of `Ẑ` except the final calibration diagonal
+    /// to a row-tile of `lanes` inputs, batch-vectorized.
+    ///
+    /// `xs` is a row-major `(lanes, src_cols)` slice with
+    /// `src_cols ≤ n`; rows are zero-padded to `n` as they stream in.
+    /// On return `tout` — column-major `(n, lanes)`, lane `l` of
+    /// coefficient `j` at `tout[j*lanes + l]` — holds `H·G·Π·H·B·x̂`
+    /// per lane; callers fold [`FastfoodBlock::scale`] into their
+    /// consuming pass. `tin` is scratch of at least the same size.
+    ///
+    /// Fusions (each one single pass over the tile):
+    /// * the `B` diagonal rides the transpose-in load (the first and
+    ///   only read of `x`),
+    /// * the `Π` gather and the `G` diagonal share one sweep — in
+    ///   column-major layout `y_j = g_j · v_{π(j)}` is a contiguous
+    ///   `lanes`-float stream copy per coefficient, not a scalar
+    ///   gather.
+    pub fn apply_tile(
+        &self,
+        xs: &[f32],
+        src_cols: usize,
+        lanes: usize,
+        tin: &mut [f32],
+        tout: &mut [f32],
+    ) {
+        let n = self.n;
+        assert!(src_cols <= n, "row width {src_cols} exceeds padded dim {n}");
+        assert_eq!(xs.len(), lanes * src_cols, "tile input length");
+        assert!(
+            tin.len() >= n * lanes && tout.len() >= n * lanes,
+            "tile scratch size"
+        );
+        let tin = &mut tin[..n * lanes];
+        let tout = &mut tout[..n * lanes];
+        // transpose-in with B fused
+        for j in 0..src_cols {
+            let bj = self.b[j];
+            let dst = &mut tin[j * lanes..(j + 1) * lanes];
+            for (l, d) in dst.iter_mut().enumerate() {
+                *d = xs[l * src_cols + j] * bj;
+            }
+        }
+        tin[src_cols * lanes..].fill(0.0);
+        // v = H v, all lanes in lockstep
+        fwht_colmajor(tin, n, lanes);
+        // v = G Π v in one sweep
+        for j in 0..n {
+            let src = &tin[self.perm[j] as usize * lanes..][..lanes];
+            let gj = self.g[j];
+            let dst = &mut tout[j * lanes..(j + 1) * lanes];
+            for (d, s) in dst.iter_mut().zip(src) {
+                *d = *s * gj;
+            }
+        }
+        // v = H v
+        fwht_colmajor(tout, n, lanes);
+    }
+
+    /// Batched [`FastfoodBlock::apply`]: `Ẑ` on `rows` padded inputs
+    /// (row-major `(rows, n)`), tile by tile. Bit-identical to the
+    /// per-row path (lanes never interact).
+    ///
+    /// The feature pipeline does not go through this — it drives
+    /// [`FastfoodBlock::apply_tile`] directly so it can fuse the trig
+    /// map into the transpose-out
+    /// (`McKernel::batch_into_scaled` in `feature_map.rs`, which
+    /// mirrors this tiling loop and the `tile_lanes(n) ≤ 1` per-row
+    /// fallback; keep the two in sync).
+    pub fn apply_batch(&self, xs: &[f32], out: &mut [f32], rows: usize) {
+        let n = self.n;
+        assert_eq!(xs.len(), rows * n, "input shape");
+        assert_eq!(out.len(), rows * n, "output shape");
+        let lanes_max = tile_lanes(n);
+        if lanes_max <= 1 {
+            // Transform too large to tile: the per-row engine's own
+            // cache-blocked bottom phase wins; lane-1 tiles would only
+            // add transpose copies.
+            let mut tmp = vec![0.0f32; n];
+            for r in 0..rows {
+                self.apply(&xs[r * n..(r + 1) * n], &mut out[r * n..(r + 1) * n], &mut tmp);
+            }
+            return;
+        }
+        let mut tin = vec![0.0f32; n * lanes_max];
+        let mut tout = vec![0.0f32; n * lanes_max];
+        let mut base = 0;
+        while base < rows {
+            let lanes = lanes_max.min(rows - base);
+            self.apply_tile(
+                &xs[base * n..(base + lanes) * n],
+                n,
+                lanes,
+                &mut tin,
+                &mut tout,
+            );
+            // calibration diagonal fused into the transpose-out write
+            for l in 0..lanes {
+                let row = &mut out[(base + l) * n..(base + l + 1) * n];
+                for (j, v) in row.iter_mut().enumerate() {
+                    *v = tout[j * lanes + l] * self.scale[j];
+                }
+            }
+            base += lanes;
         }
     }
 
@@ -190,5 +297,47 @@ mod tests {
     #[should_panic]
     fn non_pow2_rejected() {
         FastfoodBlock::new(1, 0, 48, Kernel::Rbf, 1.0);
+    }
+
+    #[test]
+    fn apply_batch_matches_apply_exactly() {
+        let n = 64;
+        let fb = block(4, n);
+        let rows = 7;
+        let mut rng = HashRng::new(11, 7);
+        let xs: Vec<f32> = (0..rows * n).map(|_| rng.next_f32() - 0.5).collect();
+        let mut batch = vec![0.0; rows * n];
+        fb.apply_batch(&xs, &mut batch, rows);
+        let mut out = vec![0.0; n];
+        let mut tmp = vec![0.0; n];
+        for r in 0..rows {
+            fb.apply(&xs[r * n..(r + 1) * n], &mut out, &mut tmp);
+            assert_eq!(&batch[r * n..(r + 1) * n], &out[..], "row {r}");
+        }
+    }
+
+    #[test]
+    fn apply_tile_zero_pads_short_rows() {
+        let n = 32;
+        let src_cols = 10;
+        let lanes = 3;
+        let fb = block(5, n);
+        let mut rng = HashRng::new(12, 8);
+        let xs: Vec<f32> = (0..lanes * src_cols).map(|_| rng.next_f32() - 0.5).collect();
+        let mut tin = vec![0.0; n * lanes];
+        let mut tout = vec![0.0; n * lanes];
+        fb.apply_tile(&xs, src_cols, lanes, &mut tin, &mut tout);
+        // oracle: hand-pad each row, run the per-row chain, undo scale
+        let mut out = vec![0.0; n];
+        let mut tmp = vec![0.0; n];
+        for l in 0..lanes {
+            let mut padded = xs[l * src_cols..(l + 1) * src_cols].to_vec();
+            padded.resize(n, 0.0);
+            fb.apply(&padded, &mut out, &mut tmp);
+            for j in 0..n {
+                let got = tout[j * lanes + l] * fb.scale()[j];
+                assert_eq!(got, out[j], "lane {l} coeff {j}");
+            }
+        }
     }
 }

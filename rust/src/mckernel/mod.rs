@@ -26,5 +26,5 @@ pub mod mmd;
 
 pub use expansion::FastfoodBlock;
 pub use factory::{McKernelConfig, McKernelFactory};
-pub use feature_map::McKernel;
+pub use feature_map::{BatchScratch, McKernel};
 pub use kernel::Kernel;

@@ -146,12 +146,9 @@ impl FeatureRidge {
 }
 
 fn normalized_features(map: &McKernel, x: &Matrix) -> Matrix {
-    let mut phi = map.transform_batch(x);
-    let s = 1.0 / ((map.padded_dim() * map.expansions()) as f32).sqrt();
-    for v in phi.data_mut() {
-        *v *= s;
-    }
-    phi
+    // batched pipeline with the 1/√(n·E) estimator scaling fused into
+    // the feature write — no second pass over Φ
+    map.transform_batch_normalized(x)
 }
 
 #[cfg(test)]

@@ -3,6 +3,7 @@
 //! the thread pool — the paper's two curves in Figures 3–5 differ
 //! only in this choice.
 
+use crate::fwht::batch::tile_lanes;
 use crate::linalg::Matrix;
 use crate::mckernel::McKernel;
 use crate::util::ThreadPool;
@@ -37,37 +38,53 @@ impl Featurizer {
         }
     }
 
-    /// Apply to a batch.
+    /// Apply to a batch through the batch-vectorized pipeline. The
+    /// parallel variant splits whole *row-tiles* — not single rows —
+    /// across the pool, so every worker streams L2-resident tiles
+    /// through the fused Fastfood passes.
     pub fn apply(&self, x: &Matrix) -> Matrix {
         match self {
             Featurizer::Identity => x.clone(),
             Featurizer::McKernel(m) => m.transform_batch(x),
             Featurizer::McKernelParallel(m, pool) => {
                 let rows = x.rows();
+                let d = x.cols();
                 let fd = m.feature_dim();
                 let mut out = Matrix::zeros(rows, fd);
-                // Hand each worker a disjoint slice of output rows.
-                let out_ptr = SendPtr(out.data_mut().as_mut_ptr());
-                let x = Arc::new(x.clone());
-                let m2 = Arc::clone(m);
-                let chunk = rows.div_ceil(pool.size()).max(1);
+                if rows == 0 {
+                    return out;
+                }
+                // Whole tiles per task; tile grouping does not change
+                // results (lanes never interact), so any split agrees
+                // bit-for-bit with the serial batched path.
+                let tile = tile_lanes(m.padded_dim());
+                let tiles = rows.div_ceil(tile);
+                let chunk = tiles.div_ceil(pool.size()).max(1) * tile;
                 let tasks = rows.div_ceil(chunk);
+                let out_ptr = SendPtr(out.data_mut().as_mut_ptr());
+                let in_ptr = SendConstPtr(x.data().as_ptr());
+                let m2 = Arc::clone(m);
                 pool.scope_for_each(tasks, move |t| {
                     // force whole-struct capture (edition-2021 would
-                    // otherwise capture the raw-pointer field, which
-                    // is not Send)
+                    // otherwise capture the raw-pointer fields, which
+                    // are not Send)
                     let out_ptr = out_ptr;
+                    let in_ptr = in_ptr;
                     let lo = t * chunk;
                     let hi = ((t + 1) * chunk).min(rows);
-                    let mut scratch = m2.make_scratch();
-                    for r in lo..hi {
-                        // SAFETY: rows are disjoint per task; the
-                        // buffer outlives scope_for_each (it blocks).
-                        let seg = unsafe {
-                            std::slice::from_raw_parts_mut(out_ptr.0.add(r * fd), fd)
-                        };
-                        m2.transform_into(x.row(r), seg, &mut scratch);
-                    }
+                    let mut scratch = m2.make_batch_scratch();
+                    // SAFETY: tasks own disjoint row ranges, and both
+                    // the input batch and the output buffer outlive
+                    // scope_for_each (it blocks until every task is
+                    // done) — the batch is borrowed for the scope, not
+                    // cloned into an Arc per call.
+                    let xs = unsafe {
+                        std::slice::from_raw_parts(in_ptr.0.add(lo * d), (hi - lo) * d)
+                    };
+                    let seg = unsafe {
+                        std::slice::from_raw_parts_mut(out_ptr.0.add(lo * fd), (hi - lo) * fd)
+                    };
+                    m2.transform_batch_slice_into(xs, hi - lo, d, seg, &mut scratch);
                 });
                 out
             }
@@ -81,6 +98,13 @@ impl Featurizer {
 struct SendPtr(*mut f32);
 unsafe impl Send for SendPtr {}
 unsafe impl Sync for SendPtr {}
+
+/// Shared-read counterpart of [`SendPtr`]: lets workers borrow the
+/// input batch for the blocking scope instead of cloning it.
+#[derive(Clone, Copy)]
+struct SendConstPtr(*const f32);
+unsafe impl Send for SendConstPtr {}
+unsafe impl Sync for SendConstPtr {}
 
 #[cfg(test)]
 mod tests {
@@ -129,5 +153,26 @@ mod tests {
         let serial = Featurizer::McKernel(Arc::clone(&m)).apply(&x);
         let par = Featurizer::McKernelParallel(m, pool).apply(&x);
         assert_eq!(serial.data(), par.data());
+    }
+
+    #[test]
+    fn parallel_many_rows_with_tail_tiles() {
+        // more rows than one tile and not a multiple of the tile
+        // width: tasks get whole tiles plus a ragged tail
+        let m = map();
+        let x = Matrix::from_fn(150, 12, |r, c| ((r * 7 + c) % 13) as f32 * 0.05);
+        let pool = Arc::new(ThreadPool::new(3));
+        let serial = Featurizer::McKernel(Arc::clone(&m)).apply(&x);
+        let par = Featurizer::McKernelParallel(m, pool).apply(&x);
+        assert_eq!(serial.data(), par.data());
+    }
+
+    #[test]
+    fn parallel_empty_batch() {
+        let m = map();
+        let x = Matrix::zeros(0, 12);
+        let pool = Arc::new(ThreadPool::new(2));
+        let out = Featurizer::McKernelParallel(m, pool).apply(&x);
+        assert_eq!(out.shape(), (0, 64));
     }
 }

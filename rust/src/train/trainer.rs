@@ -1,6 +1,8 @@
 //! The epoch-loop trainer: mini-batch SGD over a featurized dataset —
 //! the engine behind Figures 3, 4 and 5. Works with any
-//! [`Featurizer`]; the PJRT-backed path lives in
+//! [`Featurizer`]; every mini-batch goes through the batch-vectorized
+//! McKernel pipeline ([`crate::mckernel::McKernel::transform_batch_into`])
+//! via [`Featurizer::apply`]. The PJRT-backed path lives in
 //! [`crate::coordinator`] (it owns device state).
 
 use super::featurizer::Featurizer;

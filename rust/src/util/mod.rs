@@ -1,7 +1,8 @@
-//! Small shared utilities: power-of-two helpers, a minimal JSON
-//! parser/writer (for the artifact manifest — no serde offline), and a
-//! thread pool (no tokio offline).
+//! Small shared utilities: power-of-two helpers, fast vectorizable
+//! transcendentals, a minimal JSON parser/writer (for the artifact
+//! manifest — no serde offline), and a thread pool (no tokio offline).
 
+pub mod fastmath;
 pub mod json;
 pub mod pow2;
 pub mod threadpool;

@@ -1,0 +1,175 @@
+//! Tier-1 coverage for the batch-vectorized feature pipeline: the
+//! batched path must track the per-row oracle across batch sizes,
+//! tail tiles, non-power-of-two input dims and both kernels; the
+//! batched FWHT must be bit-identical to the per-row engine; and the
+//! fast trig kernel must stay within its accuracy budget vs libm.
+
+use mckernel::fwht;
+use mckernel::hash::HashRng;
+use mckernel::linalg::Matrix;
+use mckernel::mckernel::{Kernel, McKernel, McKernelFactory};
+use mckernel::train::Featurizer;
+use mckernel::util::fastmath;
+use mckernel::util::ThreadPool;
+use std::sync::Arc;
+
+/// Per-row libm reference.
+fn oracle(map: &McKernel, x: &Matrix) -> Matrix {
+    let mut out = Matrix::zeros(x.rows(), map.feature_dim());
+    let mut scratch = map.make_scratch();
+    for r in 0..x.rows() {
+        map.transform_into(x.row(r), out.row_mut(r), &mut scratch);
+    }
+    out
+}
+
+fn max_abs_diff(a: &Matrix, b: &Matrix) -> f32 {
+    assert_eq!(a.shape(), b.shape());
+    a.data()
+        .iter()
+        .zip(b.data())
+        .fold(0.0f32, |m, (x, y)| m.max((x - y).abs()))
+}
+
+#[test]
+fn batched_matches_oracle_across_shapes_and_kernels() {
+    // odd batch sizes × non-power-of-two input dims × both kernels
+    for &(dim, e) in &[(12usize, 1usize), (20, 2)] {
+        for kernel in [Kernel::Rbf, Kernel::RbfMatern { t: 40 }] {
+            let factory = McKernelFactory::new(dim).expansions(e).sigma(1.5).seed(21);
+            let factory = match kernel {
+                Kernel::Rbf => factory.rbf(),
+                Kernel::RbfMatern { t } => factory.rbf_matern(t),
+            };
+            let map = factory.build();
+            for rows in [1usize, 3, 7, 33] {
+                let mut rng = HashRng::new(rows as u64, 5);
+                let x = Matrix::from_fn(rows, dim, |_, _| rng.next_f32() - 0.5);
+                let mut out = Matrix::zeros(rows, map.feature_dim());
+                let mut scratch = map.make_batch_scratch();
+                map.transform_batch_into(&x, &mut out, &mut scratch);
+                let err = max_abs_diff(&out, &oracle(&map, &x));
+                assert!(
+                    err < 1e-5,
+                    "dim={dim} E={e} rows={rows} kernel={kernel:?}: err {err}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn tail_tiles_at_mnist_geometry() {
+    // tile_lanes(1024) = 32 → 33 rows is one full tile + a 1-row tail
+    let map = McKernelFactory::new(784).expansions(1).sigma(8.0).rbf().seed(3).build();
+    let rows = 33;
+    let mut rng = HashRng::new(4, 6);
+    let x = Matrix::from_fn(rows, 784, |_, _| rng.next_f32());
+    let mut out = Matrix::zeros(rows, map.feature_dim());
+    let mut scratch = map.make_batch_scratch();
+    map.transform_batch_into(&x, &mut out, &mut scratch);
+    let err = max_abs_diff(&out, &oracle(&map, &x));
+    assert!(err < 1e-5, "tail-tile err {err}");
+}
+
+#[test]
+fn fwht_batch_matches_per_row_exactly() {
+    let mut rng = HashRng::new(5, 1);
+    for &(rows, n) in &[(1usize, 256usize), (7, 128), (33, 1024), (5, 8)] {
+        let flat: Vec<f32> = (0..rows * n).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        let mut batch = flat.clone();
+        fwht::fwht_batch(&mut batch, rows, n);
+        for r in 0..rows {
+            let mut row = flat[r * n..(r + 1) * n].to_vec();
+            fwht::fwht(&mut row);
+            assert_eq!(
+                &batch[r * n..(r + 1) * n],
+                &row[..],
+                "rows={rows} n={n} r={r}"
+            );
+        }
+    }
+}
+
+#[test]
+fn fastmath_reduced_range_accuracy() {
+    // over the reduced range the only error is the polynomial's
+    let mut rng = HashRng::new(6, 2);
+    let xs: Vec<f32> = (0..20_000)
+        .map(|_| (rng.next_f32() - 0.5) * std::f32::consts::FRAC_PI_2)
+        .collect();
+    let mut s = vec![0.0f32; xs.len()];
+    let mut c = vec![0.0f32; xs.len()];
+    fastmath::sin_cos_batch(&xs, &mut s, &mut c);
+    for (i, &x) in xs.iter().enumerate() {
+        let xd = x as f64;
+        assert!((s[i] as f64 - xd.sin()).abs() < 1e-6, "sin({x})");
+        assert!((c[i] as f64 - xd.cos()).abs() < 1e-6, "cos({x})");
+    }
+}
+
+#[test]
+fn fastmath_post_scale_range_accuracy() {
+    // the |Ẑx| magnitudes the feature map actually feeds the trig map
+    let mut rng = HashRng::new(7, 2);
+    let xs: Vec<f32> = (0..50_000).map(|_| (rng.next_f32() - 0.5) * 600.0).collect();
+    let mut s = vec![0.0f32; xs.len()];
+    let mut c = vec![0.0f32; xs.len()];
+    fastmath::sin_cos_batch(&xs, &mut s, &mut c);
+    for (i, &x) in xs.iter().enumerate() {
+        let xd = x as f64;
+        assert!((s[i] as f64 - xd.sin()).abs() < 1e-5, "sin({x})");
+        assert!((c[i] as f64 - xd.cos()).abs() < 1e-5, "cos({x})");
+    }
+}
+
+#[test]
+fn normalized_batch_matches_normalized_oracle() {
+    let map = McKernelFactory::new(24).expansions(4).sigma(2.0).rbf().seed(7).build();
+    let mut rng = HashRng::new(8, 3);
+    let x = Matrix::from_fn(9, 24, |_, _| rng.next_f32() - 0.5);
+    let batch = map.transform_batch_normalized(&x);
+    for r in 0..9 {
+        let want = map.transform_normalized(x.row(r));
+        for (i, (a, b)) in batch.row(r).iter().zip(&want).enumerate() {
+            assert!((a - b).abs() < 1e-5, "row {r} col {i}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn kernel_approximation_survives_batched_path() {
+    // the paper's core estimator property holds through the batched
+    // normalized pipeline: ⟨φ̄(x), φ̄(y)⟩ ≈ k(x, y)
+    let d = 24;
+    let sigma = 2.0;
+    let map = McKernelFactory::new(d).expansions(16).sigma(sigma).rbf().seed(7).build();
+    let mut rng = HashRng::new(99, 0);
+    let x = Matrix::from_fn(8, d, |_, _| rng.next_f32() - 0.5);
+    let phi = map.transform_batch_normalized(&x);
+    let mut max_err = 0.0f64;
+    for i in 0..8 {
+        for j in 0..8 {
+            let dot: f64 = phi
+                .row(i)
+                .iter()
+                .zip(phi.row(j))
+                .map(|(a, b)| (*a as f64) * (*b as f64))
+                .sum();
+            let exact = Kernel::Rbf.exact(x.row(i), x.row(j), sigma);
+            max_err = max_err.max((dot - exact).abs());
+        }
+    }
+    assert!(max_err < 0.12, "kernel approx err {max_err}");
+}
+
+#[test]
+fn parallel_featurizer_tiles_match_serial() {
+    let map = Arc::new(McKernelFactory::new(30).expansions(2).seed(9).build());
+    let mut rng = HashRng::new(10, 4);
+    let x = Matrix::from_fn(101, 30, |_, _| rng.next_f32());
+    let serial = Featurizer::McKernel(Arc::clone(&map)).apply(&x);
+    let pool = Arc::new(ThreadPool::new(4));
+    let par = Featurizer::McKernelParallel(map, pool).apply(&x);
+    assert_eq!(serial.data(), par.data());
+}
