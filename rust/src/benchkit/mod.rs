@@ -8,8 +8,10 @@ pub mod feature_bench;
 pub mod report;
 pub mod runner;
 pub mod stats;
+pub mod train_bench;
 
 pub use feature_bench::{compare_feature_paths, FeatureComparison};
 pub use report::Report;
 pub use runner::{bench, BenchConfig, BenchResult};
 pub use stats::Stats;
+pub use train_bench::{compare_train_paths, TrainComparison};

@@ -1,0 +1,93 @@
+//! Serial-oracle vs data-parallel trainer comparison, shared by the
+//! `mckernel bench` CLI subcommand (which writes `BENCH_train.json`)
+//! so the printed table and the machine-readable snapshot can never
+//! diverge — the same contract `compare_feature_paths` gives the
+//! feature pipeline.
+
+use super::runner::{bench, BenchConfig, BenchResult};
+use crate::data::{Dataset, SyntheticSpec};
+use crate::optim::SgdConfig;
+use crate::train::{Featurizer, ParallelTrainer, TrainConfig, Trainer};
+
+/// Timings + accuracy deviation of serial vs sharded training on the
+/// same synthetic problem.
+pub struct TrainComparison {
+    /// The single-threaded epoch-loop [`Trainer`] (the oracle).
+    pub serial: BenchResult,
+    /// The N-worker sharded [`ParallelTrainer`].
+    pub parallel: BenchResult,
+    /// Worker threads in the parallel run.
+    pub workers: usize,
+    /// Training rows per timed epoch.
+    pub rows: usize,
+    /// |serial − parallel| final test accuracy (summation-order drift;
+    /// the parallel_train.rs suite bounds this at 1e-5).
+    pub acc_delta: f64,
+}
+
+impl TrainComparison {
+    /// Median-over-median speedup of the sharded trainer.
+    pub fn speedup(&self) -> f64 {
+        self.serial.stats.median / self.parallel.stats.median
+    }
+
+    /// Sharded training throughput in rows per second.
+    pub fn rows_per_s(&self) -> f64 {
+        self.rows as f64 / self.parallel.stats.median
+    }
+}
+
+/// Time one epoch of mini-batch SGD (identity features, so the SGD
+/// step — the part this engine parallelizes — dominates; both timed
+/// regions include the same serial final-epoch evaluation) through
+/// the serial trainer vs the `workers`-sharded trainer, and record
+/// the final-accuracy deviation between the two paths. Both trainers
+/// are deterministic, so the reports captured from the timed runs are
+/// the reports of every run.
+pub fn compare_train_paths(
+    rows: usize,
+    batch: usize,
+    workers: usize,
+    cfg: &BenchConfig,
+) -> TrainComparison {
+    let spec = SyntheticSpec::mnist();
+    let train = Dataset::synthetic(7, &spec, "train", rows);
+    let test = Dataset::synthetic(7, &spec, "test", (rows / 4).max(16));
+    let tc = TrainConfig {
+        epochs: 1,
+        batch_size: batch,
+        sgd: SgdConfig { lr: 0.01, momentum: 0.0, clip: None },
+        seed: 7,
+        eval_every_epoch: false,
+        verbose: false,
+        workers,
+    };
+    let serial_trainer =
+        Trainer::new(TrainConfig { workers: 1, ..tc.clone() }, Featurizer::Identity);
+    let mut serial_acc = f64::NAN;
+    let serial = bench("train/serial", cfg, |_| {
+        serial_acc = serial_trainer.fit(&train, &test).1.final_test_accuracy;
+    });
+    let parallel_trainer = ParallelTrainer::new(tc, Featurizer::Identity);
+    let mut parallel_acc = f64::NAN;
+    let parallel = bench("train/parallel", cfg, |_| {
+        parallel_acc = parallel_trainer.fit(&train, &test).1.final_test_accuracy;
+    });
+    let acc_delta = (serial_acc - parallel_acc).abs();
+    TrainComparison { serial, parallel, workers, rows, acc_delta }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comparison_is_tight_and_positive() {
+        let cmp = compare_train_paths(64, 16, 2, &BenchConfig::quick());
+        assert!(cmp.acc_delta <= 1e-5, "accuracy drift {}", cmp.acc_delta);
+        assert!(cmp.speedup() > 0.0);
+        assert!(cmp.rows_per_s() > 0.0);
+        assert_eq!(cmp.rows, 64);
+        assert_eq!(cmp.workers, 2);
+    }
+}

@@ -6,7 +6,7 @@ use crate::data::{Dataset, SyntheticSpec};
 use crate::mckernel::{Kernel, McKernelFactory};
 use crate::model::checkpoint::Checkpoint;
 use crate::optim::SgdConfig;
-use crate::train::{Featurizer, TrainConfig, Trainer};
+use crate::train::{Featurizer, ParallelTrainer, TrainConfig, Trainer};
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -36,6 +36,7 @@ COMMON OPTIONS:
   --expansions E            kernel expansions  [4]
   --sigma S                 bandwidth          [1.0]
   --epochs N --batch-size B --lr G
+  --workers N               data-parallel SGD shards (native) [1]
   --backend native|pjrt     execution backend  [native]
   --artifacts DIR           artifact directory [artifacts]
   --checkpoint PATH         model file to write/read
@@ -97,7 +98,7 @@ pub fn build_map(args: &Args, input_dim: usize) -> Result<Option<Arc<crate::mcke
 pub fn train_config(args: &Args, default_lr: f32) -> Result<TrainConfig> {
     Ok(TrainConfig {
         epochs: args.parse_or("epochs", 20usize)?,
-        batch_size: args.parse_or("batch-size", 10usize)?,
+        batch_size: args.positive_or("batch-size", 10)?,
         sgd: SgdConfig {
             lr: args.parse_or("lr", default_lr)?,
             momentum: args.parse_or("momentum", 0.0f32)?,
@@ -106,6 +107,7 @@ pub fn train_config(args: &Args, default_lr: f32) -> Result<TrainConfig> {
         seed: args.parse_or("seed", crate::PAPER_SEED)?,
         eval_every_epoch: !args.flag("final-eval-only"),
         verbose: !args.flag("quiet"),
+        workers: args.positive_or("workers", 1)?,
     })
 }
 
@@ -120,14 +122,24 @@ pub fn cmd_train(args: &Args) -> Result<()> {
     let report = match backend.as_str() {
         "native" => {
             let featurizer = match &map {
+                // Sharded training parallelizes featurization inside
+                // the worker shards — a second default-size pool
+                // would just sit parked during the epoch loop.
+                Some(m) if config.workers > 1 => Featurizer::McKernel(Arc::clone(m)),
                 Some(m) => Featurizer::McKernelParallel(
                     Arc::clone(m),
                     Arc::new(crate::util::ThreadPool::with_default_size()),
                 ),
                 None => Featurizer::Identity,
             };
-            let trainer = Trainer::new(config, featurizer);
-            let (model, report) = trainer.fit(&train, &test);
+            // workers == 1 keeps the serial epoch-loop oracle; > 1
+            // runs the sharded data-parallel engine (deterministic
+            // fixed-order gradient reduction — see train::trainer).
+            let (model, report) = if config.workers > 1 {
+                ParallelTrainer::new(config, featurizer).fit(&train, &test)
+            } else {
+                Trainer::new(config, featurizer).fit(&train, &test)
+            };
             maybe_save(args, &map, &model, &report)?;
             report
         }
@@ -163,11 +175,13 @@ fn maybe_save(
         let mut meta = BTreeMap::new();
         meta.insert("final_test_accuracy".into(), Json::Num(report.final_test_accuracy));
         meta.insert("featurizer".into(), Json::Str(report.featurizer.into()));
+        let completed = report.history.last().map(|r| r.epoch + 1).unwrap_or(0);
         Checkpoint {
             feature_config: map.as_ref().map(|m| m.config().clone()),
             model: model.clone(),
             meta,
         }
+        .with_epoch(completed)
         .save(path)?;
         println!("wrote checkpoint {path}");
     }
@@ -231,18 +245,21 @@ pub fn cmd_fwht(args: &Args) -> Result<()> {
 }
 
 /// `mckernel bench` — machine-readable perf snapshot for cross-PR
-/// tracking: per-row oracle vs batched feature pipeline and FWHT,
-/// written as `BENCH_features.json` / `BENCH_fwht.json` in `--out-dir`
-/// (default: the current directory, i.e. the repo root in CI).
+/// tracking: per-row oracle vs batched feature pipeline, FWHT, and
+/// serial vs data-parallel training, written as
+/// `BENCH_features.json` / `BENCH_fwht.json` / `BENCH_train.json` in
+/// `--out-dir` (default: the current directory, i.e. the repo root
+/// in CI).
 pub fn cmd_bench(args: &Args) -> Result<()> {
-    use crate::benchkit::{bench, compare_feature_paths, BenchConfig};
+    use crate::benchkit::{bench, compare_feature_paths, compare_train_paths, BenchConfig};
     use crate::linalg::Matrix;
 
     let cfg = if args.flag("quick") { BenchConfig::quick() } else { BenchConfig::default() };
     let out_dir = args.get_or("out-dir", ".");
-    let batch: usize = args.parse_or("batch", 64usize)?;
+    let batch: usize = args.positive_or("batch", 64)?;
     let e: usize = args.parse_or("expansions", 4usize)?;
     let input_dim: usize = args.parse_or("input-dim", 784usize)?;
+    let workers: usize = args.positive_or("workers", 4)?;
 
     let map = McKernelFactory::new(input_dim)
         .expansions(e)
@@ -320,6 +337,34 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
             ("batched_ms", Json::Num(fwht_batched.median_ms())),
             ("speedup", Json::Num(fwht_speedup)),
             ("transforms_per_s", Json::Num(batch as f64 / fwht_batched.stats.median)),
+        ],
+    )?;
+
+    // serial epoch-loop oracle vs the sharded data-parallel trainer
+    // on one epoch of mini-batch SGD (identity features: the SGD step
+    // is the part the shard engine parallelizes)
+    let train_rows = if args.flag("quick") { 128 } else { 1024 };
+    let tcmp = compare_train_paths(train_rows, batch, workers, &cfg);
+    println!(
+        "train (rows={train_rows}, batch={batch}, workers={workers}): serial {:.3} ms  \
+         sharded {:.3} ms  speedup {:.2}x  |Δacc| {:.2e}",
+        tcmp.serial.median_ms(),
+        tcmp.parallel.median_ms(),
+        tcmp.speedup(),
+        tcmp.acc_delta
+    );
+    write_bench_json(
+        &format!("{out_dir}/BENCH_train.json"),
+        &[
+            ("bench", Json::Str("train".into())),
+            ("rows", Json::Num(train_rows as f64)),
+            ("batch", Json::Num(batch as f64)),
+            ("workers", Json::Num(workers as f64)),
+            ("serial_ms", Json::Num(tcmp.serial.median_ms())),
+            ("parallel_ms", Json::Num(tcmp.parallel.median_ms())),
+            ("speedup", Json::Num(tcmp.speedup())),
+            ("rows_per_s", Json::Num(tcmp.rows_per_s())),
+            ("acc_delta", Json::Num(tcmp.acc_delta)),
         ],
     )?;
     Ok(())
@@ -478,6 +523,15 @@ mod tests {
         assert_eq!(c.batch_size, 10);
         assert_eq!(c.sgd.lr, 0.001);
         assert_eq!(c.seed, 1398239763);
+        assert_eq!(c.workers, 1, "serial oracle by default");
+    }
+
+    #[test]
+    fn workers_flag_parses_and_rejects_zero() {
+        let a = args(&["--workers", "4"]);
+        assert_eq!(train_config(&a, 0.01).unwrap().workers, 4);
+        let bad = args(&["--workers", "0"]);
+        assert!(train_config(&bad, 0.01).is_err());
     }
 
     #[test]
@@ -495,15 +549,23 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let a = args(&[
             "--quick", "--batch", "4", "--expansions", "1", "--input-dim", "16",
-            "--out-dir", dir.to_str().unwrap(),
+            "--workers", "2", "--out-dir", dir.to_str().unwrap(),
         ]);
         cmd_bench(&a).unwrap();
-        for name in ["BENCH_features.json", "BENCH_fwht.json"] {
+        for name in ["BENCH_features.json", "BENCH_fwht.json", "BENCH_train.json"] {
             let text = std::fs::read_to_string(dir.join(name)).unwrap();
             let json = Json::parse(&text).unwrap();
             assert!(json.get("speedup").and_then(Json::as_f64).is_some(), "{name}");
+        }
+        for name in ["BENCH_features.json", "BENCH_fwht.json"] {
+            let text = std::fs::read_to_string(dir.join(name)).unwrap();
+            let json = Json::parse(&text).unwrap();
             assert!(json.get("n").and_then(Json::as_f64).is_some(), "{name}");
         }
+        let train = Json::parse(&std::fs::read_to_string(dir.join("BENCH_train.json")).unwrap())
+            .unwrap();
+        assert_eq!(train.get("workers").and_then(Json::as_f64), Some(2.0));
+        assert!(train.get("acc_delta").and_then(Json::as_f64).is_some());
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -512,6 +574,15 @@ mod tests {
         let a = args(&[
             "train", "--train-size", "40", "--test-size", "20", "--epochs", "1",
             "--expansions", "1", "--quiet", "--batch-size", "10",
+        ]);
+        run(a).unwrap();
+    }
+
+    #[test]
+    fn tiny_sharded_train_runs() {
+        let a = args(&[
+            "train", "--train-size", "40", "--test-size", "20", "--epochs", "1",
+            "--expansions", "1", "--quiet", "--batch-size", "10", "--workers", "3",
         ]);
         run(a).unwrap();
     }

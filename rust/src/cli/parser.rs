@@ -131,6 +131,16 @@ impl Args {
         }
     }
 
+    /// `usize` option with default that must be ≥ 1 (worker/shard
+    /// counts, batch sizes — zero is never a valid cardinality).
+    pub fn positive_or(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        let v: usize = self.parse_or(key, default)?;
+        if v == 0 {
+            return Err(CliError(format!("--{key}: must be ≥ 1")));
+        }
+        Ok(v)
+    }
+
     /// Required typed option.
     pub fn require<T: std::str::FromStr>(&self, key: &str) -> Result<T, CliError> {
         let v = self
@@ -206,6 +216,14 @@ mod tests {
         assert!(a.require::<usize>("n").is_ok());
         assert!(a.require::<usize>("absent").is_err());
         assert!(a.parse_or("x", 0usize).is_err()); // 1.5 not usize
+    }
+
+    #[test]
+    fn positive_rejects_zero() {
+        let a = parse(&["--workers", "0", "--shards", "3"]);
+        assert!(a.positive_or("workers", 1).is_err());
+        assert_eq!(a.positive_or("shards", 1).unwrap(), 3);
+        assert_eq!(a.positive_or("absent", 4).unwrap(), 4);
     }
 
     #[test]

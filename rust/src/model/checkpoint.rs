@@ -119,6 +119,19 @@ impl Checkpoint {
         Ok(Checkpoint { feature_config, model, meta })
     }
 
+    /// Record the number of completed epochs in the metadata — the
+    /// resume cursor read back by [`Checkpoint::epoch`] and passed to
+    /// `ParallelTrainer::fit_resume`.
+    pub fn with_epoch(mut self, epoch: usize) -> Checkpoint {
+        self.meta.insert("epoch".into(), Json::Num(epoch as f64));
+        self
+    }
+
+    /// Completed-epoch resume cursor, if recorded.
+    pub fn epoch(&self) -> Option<usize> {
+        self.meta.get("epoch").and_then(Json::as_usize)
+    }
+
     /// Save to a file.
     pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
         if let Some(parent) = path.as_ref().parent() {
@@ -197,6 +210,17 @@ mod tests {
         let back = Checkpoint::read_from(&buf[..]).unwrap();
         assert!(back.feature_config.is_none());
         assert_eq!(back.model.features(), 784);
+    }
+
+    #[test]
+    fn epoch_cursor_roundtrips() {
+        let ck = sample().with_epoch(7);
+        assert_eq!(ck.epoch(), Some(7));
+        let mut buf = Vec::new();
+        ck.write_to(&mut buf).unwrap();
+        let back = Checkpoint::read_from(&buf[..]).unwrap();
+        assert_eq!(back.epoch(), Some(7));
+        assert_eq!(sample().epoch(), None);
     }
 
     #[test]

@@ -8,4 +8,4 @@ pub mod krr;
 pub mod softmax_reg;
 
 pub use krr::{FeatureRidge, KernelRidge};
-pub use softmax_reg::SoftmaxRegression;
+pub use softmax_reg::{Gradients, SoftmaxRegression};

@@ -16,10 +16,47 @@ pub struct SoftmaxRegression {
 }
 
 /// Gradients of the loss w.r.t. `(W, b)`.
+///
+/// Doubles as the data-parallel trainer's per-shard accumulator:
+/// workers fill disjoint `Gradients` with per-shard *sums* via
+/// [`SoftmaxRegression::shard_loss_grad_sums`], the combiner folds
+/// them together with [`Gradients::merge`] in a fixed order, and a
+/// single [`Gradients::scale`] converts the merged sum to the batch
+/// mean before the optimizer step.
 #[derive(Debug, Clone)]
 pub struct Gradients {
     pub dw: Matrix,
     pub db: Vec<f32>,
+}
+
+impl Gradients {
+    /// Zero gradients shaped for a `(classes, features)` model.
+    pub fn zeros(classes: usize, features: usize) -> Gradients {
+        Gradients { dw: Matrix::zeros(classes, features), db: vec![0.0; classes] }
+    }
+
+    /// Reset to zero in place (shard buffers are reused every step —
+    /// no allocation in the step loop).
+    pub fn reset(&mut self) {
+        self.dw.data_mut().fill(0.0);
+        self.db.fill(0.0);
+    }
+
+    /// `self += other`, elementwise — the shard-combine primitive.
+    pub fn merge(&mut self, other: &Gradients) {
+        self.dw.axpy(1.0, &other.dw);
+        for (a, b) in self.db.iter_mut().zip(&other.db) {
+            *a += b;
+        }
+    }
+
+    /// Multiply both components by `s` (sum→mean conversion).
+    pub fn scale(&mut self, s: f32) {
+        self.dw.scale(s);
+        for v in self.db.iter_mut() {
+            *v *= s;
+        }
+    }
 }
 
 impl SoftmaxRegression {
@@ -136,6 +173,63 @@ impl SoftmaxRegression {
         (loss as f32, Gradients { dw, db })
     }
 
+    /// Per-shard backward pass for the data-parallel trainer:
+    /// accumulate gradient *sums* (not divided by the batch size —
+    /// the combiner scales the merged total once per step) over
+    /// `rows` pre-featurized rows into `g`, returning the summed
+    /// loss and the argmax hit count.
+    ///
+    /// `feats` is `(rows, features)` row-major; `delta` is
+    /// caller-owned scratch of at least `rows × classes`. The row
+    /// math matches [`SoftmaxRegression::loss_and_grad`] — logits via
+    /// the same [`dot`](crate::linalg::ops::dot) kernel, loss via the
+    /// same log-sum-exp — so any shard split agrees with the
+    /// full-batch oracle up to summation order.
+    pub fn shard_loss_grad_sums(
+        &self,
+        feats: &[f32],
+        rows: usize,
+        labels: &[u8],
+        delta: &mut [f32],
+        g: &mut Gradients,
+    ) -> (f64, usize) {
+        let classes = self.classes();
+        let fdim = self.features();
+        assert_eq!(feats.len(), rows * fdim, "shard feature length");
+        assert_eq!(labels.len(), rows, "shard label count");
+        assert!(delta.len() >= rows * classes, "delta scratch too small");
+        assert_eq!(g.dw.shape(), (classes, fdim), "gradient shape");
+        let mut loss_sum = 0.0f64;
+        let mut hits = 0usize;
+        for r in 0..rows {
+            let xrow = &feats[r * fdim..(r + 1) * fdim];
+            let drow = &mut delta[r * classes..(r + 1) * classes];
+            for (c, dv) in drow.iter_mut().enumerate() {
+                *dv = crate::linalg::ops::dot(self.w.row(c), xrow) + self.b[c];
+            }
+            let label = labels[r] as usize;
+            hits += usize::from(crate::linalg::argmax(drow) == label);
+            let lse = crate::linalg::logsumexp(drow);
+            loss_sum += (lse - drow[label]) as f64;
+            // softmax through the same log-sum-exp (lse ≥ max ⇒ the
+            // exponent is ≤ 0: no overflow)
+            for v in drow.iter_mut() {
+                *v = (*v - lse).exp();
+            }
+            drow[label] -= 1.0;
+            for (c, &dv) in drow.iter().enumerate() {
+                g.db[c] += dv;
+                if dv != 0.0 {
+                    let wrow = g.dw.row_mut(c);
+                    for (o, &xv) in wrow.iter_mut().zip(xrow) {
+                        *o += dv * xv;
+                    }
+                }
+            }
+        }
+        (loss_sum, hits)
+    }
+
     /// Numerical-gradient check helper (tests): loss only.
     pub fn loss(&self, x: &Matrix, labels: &[u8]) -> f32 {
         let mut l = self.logits(x);
@@ -240,6 +334,52 @@ mod tests {
         }
         assert_eq!(m.predict(&x), y);
         assert!(prev < 0.2);
+    }
+
+    #[test]
+    fn gradients_merge_scale_reset() {
+        let mut a = Gradients::zeros(2, 3);
+        let mut b = Gradients::zeros(2, 3);
+        a.dw[(0, 1)] = 2.0;
+        a.db[1] = 4.0;
+        b.dw[(0, 1)] = 1.0;
+        b.db[1] = -1.0;
+        a.merge(&b);
+        assert_eq!(a.dw[(0, 1)], 3.0);
+        assert_eq!(a.db[1], 3.0);
+        a.scale(0.5);
+        assert_eq!(a.dw[(0, 1)], 1.5);
+        assert_eq!(a.db[1], 1.5);
+        a.reset();
+        assert!(a.dw.data().iter().all(|&v| v == 0.0));
+        assert!(a.db.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn shard_sums_match_full_batch_up_to_scaling() {
+        let (x, y) = toy_batch();
+        let m = SoftmaxRegression::init(3, 3, 42);
+        let (loss, g_full) = m.loss_and_grad(&x, &y);
+        // two shards: rows 0..2 and 2..4
+        let mut g = Gradients::zeros(3, 3);
+        let mut delta = vec![0.0f32; 4 * 3];
+        let (l0, h0) = m.shard_loss_grad_sums(&x.data()[..2 * 3], 2, &y[..2], &mut delta, &mut g);
+        let (l1, h1) = m.shard_loss_grad_sums(&x.data()[2 * 3..], 2, &y[2..], &mut delta, &mut g);
+        g.scale(1.0 / 4.0);
+        let shard_loss = ((l0 + l1) / 4.0) as f32;
+        // 1e-5: the shard path rounds differently (f32 exp(v−lse),
+        // sum-then-scale) from the f64-softmax pre-scaled oracle
+        assert!((shard_loss - loss).abs() < 1e-5, "{shard_loss} vs {loss}");
+        for (a, b) in g.dw.data().iter().zip(g_full.dw.data()) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+        for (a, b) in g.db.iter().zip(&g_full.db) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+        // hit counts come from the same argmax as predict()
+        let preds = m.predict(&x);
+        let want: usize = preds.iter().zip(&y).filter(|(p, t)| p == t).count();
+        assert_eq!(h0 + h1, want);
     }
 
     #[test]

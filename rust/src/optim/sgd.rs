@@ -54,15 +54,28 @@ impl Sgd {
         (sw + sb).sqrt() as f32
     }
 
-    /// Apply one update to `model` from gradients `g`.
-    pub fn step(&mut self, model: &mut SoftmaxRegression, g: &Gradients) {
-        let mut scale = 1.0f32;
-        if let Some(c) = self.cfg.clip {
-            let n = Self::grad_norm(g);
-            if n > c {
-                scale = c / n;
+    /// Scale factor global-norm clipping applies to `g` (`1` =
+    /// untouched): `min(1, clip/‖g‖)`. Exposed so the property tests
+    /// can check the clipping contract without reading weights back.
+    pub fn clip_factor(&self, g: &Gradients) -> f32 {
+        match self.cfg.clip {
+            Some(c) => {
+                let n = Self::grad_norm(g);
+                if n > c {
+                    c / n
+                } else {
+                    1.0
+                }
             }
+            None => 1.0,
         }
+    }
+
+    /// Apply one update to `model` from gradients `g`. In the
+    /// data-parallel trainer this runs exactly once per step, on the
+    /// tree-merged (and sum→mean scaled) gradients.
+    pub fn step(&mut self, model: &mut SoftmaxRegression, g: &Gradients) {
+        let scale = self.clip_factor(g);
         let lr = self.cfg.lr;
         let mu = self.cfg.momentum;
         if mu == 0.0 {
@@ -147,6 +160,85 @@ mod tests {
         opt.step(&mut m, &g);
         assert!((m.w()[(0, 0)] + 0.01).abs() < 1e-7);
     }
+
+    fn gen_gradients(g: &mut crate::proplite::Gen, classes: usize, feats: usize) -> Gradients {
+        let dw = g.vec_f32(classes * feats, -3.0, 3.0);
+        let db = g.vec_f32(classes, -3.0, 3.0);
+        Gradients { dw: Matrix::from_vec(classes, feats, dw), db }
+    }
+
+    #[test]
+    fn prop_zero_gradient_is_fixed_point() {
+        crate::proplite::check("zero gradient is a fixed point", 40, |g| {
+            let classes = g.usize_in(1, 4);
+            let feats = g.usize_in(1, 6);
+            let lr = g.f32_in(1e-4, 1.0);
+            let momentum = if g.bool() { g.f32_in(0.0, 0.95) } else { 0.0 };
+            let clip = if g.bool() { Some(g.f32_in(0.1, 5.0)) } else { None };
+            let mut m = SoftmaxRegression::init(classes, feats, g.u64());
+            let w0 = m.w().data().to_vec();
+            let b0 = m.b().to_vec();
+            let mut opt = Sgd::new(SgdConfig { lr, momentum, clip });
+            for _ in 0..3 {
+                opt.step(&mut m, &Gradients::zeros(classes, feats));
+            }
+            crate::proplite::prop(
+                m.w().data() == &w0[..] && m.b() == &b0[..],
+                format!("weights moved under zero gradient (lr={lr}, momentum={momentum})"),
+            )
+        });
+    }
+
+    #[test]
+    fn prop_momentum_zero_matches_closed_form() {
+        crate::proplite::check("momentum=0 matches w' = w − lr·g", 40, |g| {
+            let classes = g.usize_in(1, 4);
+            let feats = g.usize_in(1, 6);
+            let lr = g.f32_in(1e-4, 0.5);
+            let mut m = SoftmaxRegression::init(classes, feats, g.u64());
+            let w0 = m.w().data().to_vec();
+            let b0 = m.b().to_vec();
+            let grads = gen_gradients(g, classes, feats);
+            let mut opt = Sgd::new(SgdConfig { lr, momentum: 0.0, clip: None });
+            opt.step(&mut m, &grads);
+            for (k, (w, w_before)) in m.w().data().iter().zip(&w0).enumerate() {
+                let want = w_before + (-lr) * grads.dw.data()[k];
+                if (w - want).abs() > 1e-7 * (1.0 + want.abs()) {
+                    return crate::proplite::prop(false, format!("w[{k}] = {w}, want {want}"));
+                }
+            }
+            for (c, (b, b_before)) in m.b().iter().zip(&b0).enumerate() {
+                let want = b_before + (-lr) * grads.db[c];
+                if (b - want).abs() > 1e-7 * (1.0 + want.abs()) {
+                    return crate::proplite::prop(false, format!("b[{c}] = {b}, want {want}"));
+                }
+            }
+            Outcome::Pass
+        });
+    }
+
+    #[test]
+    fn prop_clip_never_increases_gradient_norm() {
+        crate::proplite::check("clip factor bounds the applied norm", 60, |g| {
+            let classes = g.usize_in(1, 4);
+            let feats = g.usize_in(1, 8);
+            let clip = g.f32_in(0.05, 4.0);
+            let grads = gen_gradients(g, classes, feats);
+            let norm = Sgd::grad_norm(&grads);
+            let opt = Sgd::new(SgdConfig { lr: 0.1, momentum: 0.0, clip: Some(clip) });
+            let factor = opt.clip_factor(&grads);
+            let applied = factor * norm;
+            let ok = factor <= 1.0
+                && applied <= norm * (1.0 + 1e-6)
+                && applied <= clip.min(norm) * (1.0 + 1e-5);
+            crate::proplite::prop(
+                ok,
+                format!("norm {norm}, clip {clip}, factor {factor}, applied {applied}"),
+            )
+        });
+    }
+
+    use crate::proplite::Outcome;
 
     #[test]
     #[should_panic]

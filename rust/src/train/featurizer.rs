@@ -5,9 +5,13 @@
 
 use crate::fwht::batch::tile_lanes;
 use crate::linalg::Matrix;
-use crate::mckernel::McKernel;
+use crate::mckernel::{BatchScratch, McKernel};
 use crate::util::ThreadPool;
 use std::sync::Arc;
+
+/// Per-worker featurization scratch for the shard-parallel trainer
+/// (`None` for identity — raw pixels need no work buffers).
+pub struct ShardScratch(Option<BatchScratch>);
 
 /// Maps a `(batch, pixels)` matrix to the classifier's input space.
 pub enum Featurizer {
@@ -35,6 +39,45 @@ impl Featurizer {
             Featurizer::Identity => "identity",
             Featurizer::McKernel(_) => "mckernel",
             Featurizer::McKernelParallel(..) => "mckernel-par",
+        }
+    }
+
+    /// Scratch for [`Featurizer::apply_shard`], one per worker.
+    pub fn make_shard_scratch(&self) -> ShardScratch {
+        match self {
+            Featurizer::Identity => ShardScratch(None),
+            Featurizer::McKernel(m) | Featurizer::McKernelParallel(m, _) => {
+                ShardScratch(Some(m.make_batch_scratch()))
+            }
+        }
+    }
+
+    /// Shard-aware apply: featurize `rows` raw rows (`xs`, row-major,
+    /// width `d`) into the preallocated `out` (`rows × feature_dim`)
+    /// without allocating — the data-parallel trainer calls this from
+    /// every worker on its own shard with its own scratch. Same math
+    /// as [`Featurizer::apply`]: the batched McKernel pipeline is
+    /// invariant to how rows are grouped into tiles, so shard splits
+    /// agree bit-for-bit with the full-batch path.
+    pub fn apply_shard(
+        &self,
+        xs: &[f32],
+        rows: usize,
+        d: usize,
+        out: &mut [f32],
+        scratch: &mut ShardScratch,
+    ) {
+        assert_eq!(xs.len(), rows * d, "shard input length");
+        assert_eq!(out.len(), rows * self.feature_dim(d), "shard output length");
+        match self {
+            Featurizer::Identity => out.copy_from_slice(xs),
+            Featurizer::McKernel(m) | Featurizer::McKernelParallel(m, _) => {
+                let scratch = scratch
+                    .0
+                    .as_mut()
+                    .expect("shard scratch built for a different featurizer");
+                m.transform_batch_slice_into(xs, rows, d, out, scratch);
+            }
         }
     }
 
@@ -165,6 +208,39 @@ mod tests {
         let serial = Featurizer::McKernel(Arc::clone(&m)).apply(&x);
         let par = Featurizer::McKernelParallel(m, pool).apply(&x);
         assert_eq!(serial.data(), par.data());
+    }
+
+    #[test]
+    fn shard_apply_matches_full_batch() {
+        let m = map();
+        let x = batch();
+        let f = Featurizer::McKernel(Arc::clone(&m));
+        let full = f.apply(&x);
+        let fd = f.feature_dim(12);
+        // ragged shard split (4 + 3 + 2 rows): must agree bit-for-bit
+        let mut out = vec![0.0f32; 9 * fd];
+        let mut scratch = f.make_shard_scratch();
+        for (lo, hi) in [(0usize, 4usize), (4, 7), (7, 9)] {
+            f.apply_shard(
+                &x.data()[lo * 12..hi * 12],
+                hi - lo,
+                12,
+                &mut out[lo * fd..hi * fd],
+                &mut scratch,
+            );
+        }
+        assert_eq!(full.data(), &out[..]);
+    }
+
+    #[test]
+    fn shard_apply_identity_copies() {
+        let x = batch();
+        let f = Featurizer::Identity;
+        let mut out = vec![0.0f32; 2 * 12];
+        let mut scratch = f.make_shard_scratch();
+        f.apply_shard(&x.data()[3 * 12..5 * 12], 2, 12, &mut out, &mut scratch);
+        assert_eq!(&out[..12], x.row(3));
+        assert_eq!(&out[12..], x.row(4));
     }
 
     #[test]

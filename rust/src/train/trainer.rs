@@ -5,11 +5,12 @@
 //! via [`Featurizer::apply`]. The PJRT-backed path lives in
 //! [`crate::coordinator`] (it owns device state).
 
-use super::featurizer::Featurizer;
+use super::featurizer::{Featurizer, ShardScratch};
 use super::metrics::{accuracy, EpochRecord};
 use crate::data::{Batcher, Dataset};
-use crate::model::SoftmaxRegression;
+use crate::model::{Gradients, SoftmaxRegression};
 use crate::optim::{Sgd, SgdConfig};
+use crate::util::{tree_reduce_with, ThreadPool};
 use std::time::Instant;
 
 /// Trainer configuration (defaults = the paper's Figure 4/5 settings
@@ -24,6 +25,10 @@ pub struct TrainConfig {
     pub eval_every_epoch: bool,
     /// Print progress lines.
     pub verbose: bool,
+    /// Data-parallel worker threads for [`ParallelTrainer`] (≥ 1).
+    /// The serial [`Trainer`] ignores this — it is the 1-worker
+    /// correctness oracle.
+    pub workers: usize,
 }
 
 impl Default for TrainConfig {
@@ -35,6 +40,7 @@ impl Default for TrainConfig {
             seed: crate::PAPER_SEED,
             eval_every_epoch: true,
             verbose: false,
+            workers: 1,
         }
     }
 }
@@ -142,13 +148,222 @@ impl Trainer {
 
     /// Accuracy of `model` on `data` (featurized in eval batches).
     pub fn evaluate(&self, model: &SoftmaxRegression, data: &Dataset) -> f64 {
-        let batcher = Batcher::new(256, 0).sequential();
-        let mut preds = Vec::with_capacity(data.len());
-        for batch in batcher.epoch(data, 0) {
-            let feats = self.featurizer.apply(&batch.images);
-            preds.extend(model.predict(&feats));
+        evaluate_with(&self.featurizer, model, data)
+    }
+}
+
+/// Accuracy of `model` on `data`, featurized in sequential eval
+/// batches — shared by the serial and data-parallel trainers.
+pub fn evaluate_with(featurizer: &Featurizer, model: &SoftmaxRegression, data: &Dataset) -> f64 {
+    let batcher = Batcher::new(256, 0).sequential();
+    let mut preds = Vec::with_capacity(data.len());
+    for batch in batcher.epoch(data, 0) {
+        let feats = featurizer.apply(&batch.images);
+        preds.extend(model.predict(&feats));
+    }
+    accuracy(&preds, data.labels())
+}
+
+/// Per-worker step state for the data-parallel trainer: featurization
+/// output + scratch, the softmax delta buffer, and the gradient-sum
+/// accumulator — allocated once per `fit`, reused every step (the
+/// step loop itself never allocates).
+struct WorkerSlot {
+    /// Row range of the current batch owned by this worker.
+    lo: usize,
+    hi: usize,
+    feats: Vec<f32>,
+    delta: Vec<f32>,
+    grads: Gradients,
+    feat_scratch: ShardScratch,
+    loss_sum: f64,
+    hits: usize,
+}
+
+/// Data-parallel mini-batch SGD trainer (the paper's Eq. 21 step at
+/// scale): every mini-batch is sharded across a fixed thread pool,
+/// workers compute per-shard gradient *sums* into their own
+/// [`WorkerSlot`]s, and the main thread combines them with a
+/// fixed-order pairwise tree reduction before a single optimizer
+/// step. Shard boundaries depend only on `(batch rows, workers)` and
+/// the reduction order only on the shard count, so an N-worker run is
+/// bit-identical across repeated runs regardless of thread
+/// scheduling — and matches the serial [`Trainer`] oracle within a
+/// tight tolerance (the only difference is summation order).
+pub struct ParallelTrainer {
+    pub config: TrainConfig,
+    pub featurizer: Featurizer,
+    pool: ThreadPool,
+}
+
+impl ParallelTrainer {
+    /// Build a trainer with a pool of `config.workers` threads.
+    pub fn new(config: TrainConfig, featurizer: Featurizer) -> ParallelTrainer {
+        assert!(config.workers >= 1, "workers must be ≥ 1");
+        let pool = ThreadPool::new(config.workers);
+        ParallelTrainer { config, featurizer, pool }
+    }
+
+    /// Train a fresh model on `train`, evaluating on `test`.
+    pub fn fit(&self, train: &Dataset, test: &Dataset) -> (SoftmaxRegression, TrainReport) {
+        let fdim = self.featurizer.feature_dim(train.dim());
+        let model = SoftmaxRegression::zeros(train.classes(), fdim);
+        self.fit_resume(model, 0, train, test)
+    }
+
+    /// Continue training `model` over epochs `start_epoch..config.epochs`
+    /// — the checkpoint-resume path. Each epoch's shuffle is keyed by
+    /// its absolute epoch index, so (with momentum 0, which carries no
+    /// optimizer state across the restart) a resumed run replays
+    /// exactly what the uninterrupted run would have done.
+    pub fn fit_resume(
+        &self,
+        mut model: SoftmaxRegression,
+        start_epoch: usize,
+        train: &Dataset,
+        test: &Dataset,
+    ) -> (SoftmaxRegression, TrainReport) {
+        let fdim = self.featurizer.feature_dim(train.dim());
+        assert_eq!(model.features(), fdim, "model width vs featurizer");
+        // Optimizer velocity is not checkpointed, so a mid-training
+        // restart can only replay the uninterrupted run when the
+        // optimizer is stateless.
+        assert!(
+            start_epoch == 0 || self.config.sgd.momentum == 0.0,
+            "resume requires momentum 0 (velocity is not checkpointed)"
+        );
+        // (start_epoch == 0 with epochs == 0 mirrors the serial
+        // trainer's empty-run behaviour; an actual resume cursor at or
+        // past the end would silently yield an empty history + NaN.)
+        assert!(
+            start_epoch == 0 || start_epoch < self.config.epochs,
+            "resume cursor {start_epoch} is at/past config.epochs {}",
+            self.config.epochs
+        );
+        let classes = model.classes();
+        let workers = self.config.workers;
+        let mut opt = Sgd::new(self.config.sgd);
+        let batcher = Batcher::new(self.config.batch_size, self.config.seed);
+        let max_shard = self.config.batch_size.div_ceil(workers);
+        let mut slots: Vec<WorkerSlot> = (0..workers)
+            .map(|_| WorkerSlot {
+                lo: 0,
+                hi: 0,
+                feats: vec![0.0; max_shard * fdim],
+                delta: vec![0.0; max_shard * classes],
+                grads: Gradients::zeros(classes, fdim),
+                feat_scratch: self.featurizer.make_shard_scratch(),
+                loss_sum: 0.0,
+                hits: 0,
+            })
+            .collect();
+        let total_epochs = self.config.epochs;
+        let mut history = Vec::with_capacity(total_epochs.saturating_sub(start_epoch));
+        for epoch in start_epoch..total_epochs {
+            let t0 = Instant::now();
+            let mut loss_sum = 0.0f64;
+            let mut loss_batches = 0usize;
+            let mut train_hits = 0usize;
+            let mut train_count = 0usize;
+            for batch in batcher.epoch(train, epoch) {
+                let rows = batch.images.rows();
+                let d = batch.images.cols();
+                // Deterministic shard boundaries: a function of
+                // (rows, workers) only — the first `rows % shards`
+                // shards take one extra row.
+                let shards = workers.min(rows).max(1);
+                let base = rows / shards;
+                let rem = rows % shards;
+                let mut lo = 0;
+                for (s, slot) in slots[..shards].iter_mut().enumerate() {
+                    let len = base + usize::from(s < rem);
+                    slot.lo = lo;
+                    slot.hi = lo + len;
+                    lo += len;
+                }
+                {
+                    let featurizer = &self.featurizer;
+                    let mref = &model;
+                    let images = &batch.images;
+                    let labels = &batch.labels;
+                    self.pool.scope_shards(&mut slots[..shards], move |_s, slot| {
+                        slot.grads.reset();
+                        slot.loss_sum = 0.0;
+                        slot.hits = 0;
+                        let (lo, hi) = (slot.lo, slot.hi);
+                        let srows = hi - lo;
+                        let xs = &images.data()[lo * d..hi * d];
+                        let feats = &mut slot.feats[..srows * fdim];
+                        featurizer.apply_shard(xs, srows, d, feats, &mut slot.feat_scratch);
+                        let (ls, h) = mref.shard_loss_grad_sums(
+                            feats,
+                            srows,
+                            &labels[lo..hi],
+                            &mut slot.delta[..srows * classes],
+                            &mut slot.grads,
+                        );
+                        slot.loss_sum = ls;
+                        slot.hits = h;
+                    });
+                }
+                // Fixed-order tree reduction into slot 0: merge order
+                // is a function of the shard count alone, never of
+                // which worker finished first.
+                tree_reduce_with(&mut slots[..shards], |a, b| {
+                    a.grads.merge(&b.grads);
+                    a.loss_sum += b.loss_sum;
+                    a.hits += b.hits;
+                });
+                let inv = 1.0 / rows as f32;
+                slots[0].grads.scale(inv);
+                loss_sum += slots[0].loss_sum / rows as f64;
+                train_hits += slots[0].hits;
+                train_count += rows;
+                loss_batches += 1;
+                opt.step(&mut model, &slots[0].grads);
+            }
+            let test_acc = if self.config.eval_every_epoch || epoch + 1 == total_epochs {
+                evaluate_with(&self.featurizer, &model, test)
+            } else {
+                f64::NAN
+            };
+            let rec = EpochRecord {
+                epoch,
+                train_loss: loss_sum / loss_batches.max(1) as f64,
+                train_accuracy: train_hits as f64 / train_count.max(1) as f64,
+                test_accuracy: test_acc,
+                seconds: t0.elapsed().as_secs_f64(),
+            };
+            if self.config.verbose {
+                eprintln!(
+                    "[{}×{}] epoch {:>3}  loss {:.4}  train-acc {:.4}  test-acc {:.4}  ({:.2}s)",
+                    self.featurizer.name(),
+                    workers,
+                    rec.epoch,
+                    rec.train_loss,
+                    rec.train_accuracy,
+                    rec.test_accuracy,
+                    rec.seconds
+                );
+            }
+            history.push(rec);
         }
-        accuracy(&preds, data.labels())
+        let final_test_accuracy = history
+            .last()
+            .map(|r| r.test_accuracy)
+            .unwrap_or(f64::NAN);
+        let report = TrainReport {
+            final_test_accuracy,
+            param_count: model.param_count(),
+            featurizer: self.featurizer.name(),
+            history,
+        };
+        (model, report)
+    }
+
+    /// Accuracy of `model` on `data` (featurized in eval batches).
+    pub fn evaluate(&self, model: &SoftmaxRegression, data: &Dataset) -> f64 {
+        evaluate_with(&self.featurizer, model, data)
     }
 }
 
@@ -175,6 +390,7 @@ mod tests {
             seed: 1,
             eval_every_epoch: false,
             verbose: false,
+            workers: 1,
         }
     }
 
@@ -229,6 +445,35 @@ mod tests {
         let t2 = Trainer::new(quick_config(2, 0.05), Featurizer::Identity);
         let (m2, _) = t2.fit(&train, &test);
         assert_eq!(m1.w().data(), m2.w().data());
+    }
+
+    #[test]
+    fn parallel_trainer_learns_and_shards_ragged_batches() {
+        // 53 samples, batch 10 → a ragged 3-row tail batch; workers 4
+        // shard 10 rows as 3/3/2/2 and the tail as 1/1/1.
+        let (train, test) = datasets(53, 30);
+        let mut cfg = quick_config(4, 0.05);
+        cfg.workers = 4;
+        let trainer = ParallelTrainer::new(cfg, Featurizer::Identity);
+        let (model, report) = trainer.fit(&train, &test);
+        assert_eq!(report.history.len(), 4);
+        assert!(report.history.iter().all(|r| r.train_loss.is_finite()));
+        assert!(report.final_test_accuracy > 0.3, "{}", report.final_test_accuracy);
+        assert_eq!(model.features(), 784);
+    }
+
+    #[test]
+    fn parallel_trainer_resume_is_bit_identical() {
+        let (train, test) = datasets(60, 20);
+        let full = ParallelTrainer::new(quick_config(4, 0.05), Featurizer::Identity);
+        let (m_full, _) = full.fit(&train, &test);
+        let half = ParallelTrainer::new(quick_config(2, 0.05), Featurizer::Identity);
+        let (m_half, _) = half.fit(&train, &test);
+        let (m_res, rep) = full.fit_resume(m_half, 2, &train, &test);
+        assert_eq!(m_res.w().data(), m_full.w().data());
+        assert_eq!(m_res.b(), m_full.b());
+        assert_eq!(rep.history.len(), 2);
+        assert_eq!(rep.history[0].epoch, 2);
     }
 
     #[test]

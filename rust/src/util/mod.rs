@@ -9,3 +9,58 @@ pub mod threadpool;
 
 pub use pow2::{is_pow2, log2_exact, next_pow2};
 pub use threadpool::ThreadPool;
+
+/// Fixed-order pairwise tree reduction: merges `items[i+gap]` into
+/// `items[i]` for gaps 1, 2, 4, … so `items[0]` ends up holding the
+/// combined total. The merge order is a function of `items.len()`
+/// alone — never of timing — which is what makes the data-parallel
+/// trainer's gradient combine bit-reproducible across runs and
+/// schedules (floating-point addition is not associative, so the
+/// *order* is part of the contract).
+pub fn tree_reduce_with<T>(items: &mut [T], merge: impl Fn(&mut T, &T)) {
+    let n = items.len();
+    let mut gap = 1;
+    while gap < n {
+        let mut i = 0;
+        while i + gap < n {
+            let (head, tail) = items.split_at_mut(i + gap);
+            merge(&mut head[i], &tail[0]);
+            i += 2 * gap;
+        }
+        gap *= 2;
+    }
+}
+
+#[cfg(test)]
+mod tree_reduce_tests {
+    use super::tree_reduce_with;
+
+    #[test]
+    fn sums_into_first_slot() {
+        for n in 1..=9usize {
+            let mut v: Vec<u64> = (1..=n as u64).collect();
+            tree_reduce_with(&mut v, |a, b| *a += *b);
+            assert_eq!(v[0], (n as u64) * (n as u64 + 1) / 2, "n={n}");
+        }
+    }
+
+    #[test]
+    fn order_is_pairwise_not_sequential() {
+        // f32 addition is not associative: ((a+b)+(c+d)) with a=-c=1e8
+        // cancels exactly, while the left fold (((a+b)+c)+d) absorbs
+        // both 1s into the 1e8 terms first. The tree must produce the
+        // pairwise answer.
+        let mut v = vec![1e8f32, 1.0, -1e8, 1.0];
+        tree_reduce_with(&mut v, |a, b| *a += *b);
+        assert_eq!(v[0], (1e8f32 + 1.0) + (-1e8f32 + 1.0));
+    }
+
+    #[test]
+    fn empty_and_single_are_noops() {
+        let mut empty: Vec<f32> = vec![];
+        tree_reduce_with(&mut empty, |a, b| *a += *b);
+        let mut one = vec![7.5f32];
+        tree_reduce_with(&mut one, |a, b| *a += *b);
+        assert_eq!(one[0], 7.5);
+    }
+}

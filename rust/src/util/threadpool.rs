@@ -58,6 +58,70 @@ impl ThreadPool {
             .expect("worker channel closed");
     }
 
+    /// Run `f(s, &mut shards[s])` for every shard across the pool and
+    /// block until all jobs have finished — the data-parallel
+    /// trainer's step primitive. Unlike [`ThreadPool::scope_for_each`],
+    /// both the closure and the shard slice may borrow from the
+    /// caller's stack: the completion barrier guarantees every job has
+    /// run to completion (normally or by panic) before this returns,
+    /// so no erased borrow can outlive the call.
+    ///
+    /// A panic inside `f` is re-raised here after the barrier (the
+    /// worker thread that hosted it dies; remaining workers keep
+    /// serving the queue). If *every* worker has already died from
+    /// prior panics, queued jobs can no longer run and this call
+    /// blocks — a deliberate trade: deadlock is diagnosable, freed
+    /// stack borrows racing live jobs would be undefined behaviour.
+    pub fn scope_shards<S, F>(&self, shards: &mut [S], f: F)
+    where
+        S: Send,
+        F: Fn(usize, &mut S) + Send + Sync,
+    {
+        let n = shards.len();
+        if n == 0 {
+            return;
+        }
+        // Completion guard: signals even when the job panics (Drop
+        // runs during unwinding), so the barrier below always sees
+        // exactly `n` messages.
+        struct Done(mpsc::Sender<bool>);
+        impl Drop for Done {
+            fn drop(&mut self) {
+                let _ = self.0.send(thread::panicking());
+            }
+        }
+        let (done_tx, done_rx) = mpsc::channel::<bool>();
+        let base = shards.as_mut_ptr() as usize;
+        for i in 0..n {
+            let done = Done(done_tx.clone());
+            let fr: &F = &f;
+            let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                let _done = done;
+                // SAFETY: job `i` touches only shard `i` (disjoint
+                // &mut), and the barrier keeps `shards` borrowed by
+                // this frame until every job has dropped its guard.
+                let shard = unsafe { &mut *(base as *mut S).add(i) };
+                fr(i, shard);
+            });
+            // SAFETY: lifetime erasure to fit the queue's 'static Job
+            // type; soundness is the barrier argument above — this
+            // frame (owning `f` and borrowing `shards`) outlives every
+            // job, and after `n` guard signals no job code can run.
+            let job: Job = unsafe { std::mem::transmute(job) };
+            self.sender
+                .as_ref()
+                .expect("pool is shut down")
+                .send(job)
+                .expect("worker channel closed");
+        }
+        drop(done_tx);
+        let mut panicked = false;
+        for _ in 0..n {
+            panicked |= done_rx.recv().expect("scope barrier broken");
+        }
+        assert!(!panicked, "a shard job panicked");
+    }
+
     /// Run `f(i)` for `i ∈ 0..n` across the pool and wait for all.
     pub fn scope_for_each<F>(&self, n: usize, f: F)
     where
@@ -126,6 +190,50 @@ mod tests {
         for (i, a) in hits.iter().enumerate() {
             assert_eq!(a.load(Ordering::SeqCst), 1, "index {i}");
         }
+    }
+
+    #[test]
+    fn scope_shards_gives_each_job_its_own_slot() {
+        let pool = ThreadPool::new(4);
+        let mut shards: Vec<(usize, u64)> = (0..23).map(|i| (i, 0u64)).collect();
+        // borrow a stack-local from the closure: the scoped API's
+        // whole point is that this needs no Arc and no 'static
+        let offset = 100u64;
+        let off = &offset;
+        pool.scope_shards(&mut shards, |i, slot| {
+            assert_eq!(slot.0, i, "job index must match slot index");
+            slot.1 = i as u64 + off;
+        });
+        for (i, s) in shards.iter().enumerate() {
+            assert_eq!(s.1, i as u64 + 100, "slot {i}");
+        }
+    }
+
+    #[test]
+    fn scope_shards_empty_is_noop() {
+        let pool = ThreadPool::new(2);
+        let mut shards: Vec<u32> = vec![];
+        pool.scope_shards(&mut shards, |_, _| unreachable!());
+    }
+
+    #[test]
+    fn scope_shards_more_jobs_than_workers() {
+        let pool = ThreadPool::new(2);
+        let mut shards = vec![0usize; 64];
+        pool.scope_shards(&mut shards, |i, s| *s = i * i);
+        assert!(shards.iter().enumerate().all(|(i, &s)| s == i * i));
+    }
+
+    #[test]
+    #[should_panic(expected = "a shard job panicked")]
+    fn scope_shards_propagates_panics() {
+        let pool = ThreadPool::new(3);
+        let mut shards = vec![0u8; 5];
+        pool.scope_shards(&mut shards, |i, _| {
+            if i == 3 {
+                panic!("boom");
+            }
+        });
     }
 
     #[test]

@@ -1,0 +1,172 @@
+//! Gradient-correctness suite: the analytic backward pass of
+//! `SoftmaxRegression` against central finite differences at every
+//! coordinate of W and b (rel-err ≤ 1e-3), and the shard-sum path +
+//! fixed-order tree reduction against the full-batch oracle.
+
+use mckernel::linalg::Matrix;
+use mckernel::model::{Gradients, SoftmaxRegression};
+use mckernel::util::tree_reduce_with;
+
+const CLASSES: usize = 3;
+const FEATS: usize = 5;
+const ROWS: usize = 6;
+
+/// Deterministic (compiler-independent) toy model: weights large
+/// enough that every gradient coordinate is well above fd noise.
+fn toy_model() -> SoftmaxRegression {
+    let mut m = SoftmaxRegression::zeros(CLASSES, FEATS);
+    for (k, v) in m.w_mut().data_mut().iter_mut().enumerate() {
+        *v = (((k * 7) % 11) as f32 - 5.0) * 0.1;
+    }
+    for (c, b) in m.b_mut().iter_mut().enumerate() {
+        *b = (c as f32 - 1.0) * 0.2;
+    }
+    m
+}
+
+/// Unbalanced labels so the bias gradients stay O(0.1) — a balanced
+/// label set cancels them toward the fd noise floor.
+fn toy_batch() -> (Matrix, Vec<u8>) {
+    let x = Matrix::from_fn(ROWS, FEATS, |r, c| ((r * FEATS + c) % 9) as f32 / 8.0);
+    (x, vec![0, 0, 1, 0, 2, 0])
+}
+
+/// Relative error with a floor: tiny denominators would make fd
+/// rounding noise (~1e-5 absolute at eps=1e-2 in f32) dominate.
+fn rel_err(num: f32, ana: f32) -> f32 {
+    (num - ana).abs() / ana.abs().max(0.05)
+}
+
+#[test]
+fn central_differences_match_every_w_coordinate() {
+    let (x, y) = toy_batch();
+    let mut m = toy_model();
+    let (_, g) = m.loss_and_grad(&x, &y);
+    let eps = 1e-2f32;
+    for r in 0..CLASSES {
+        for c in 0..FEATS {
+            let orig = m.w()[(r, c)];
+            m.w_mut()[(r, c)] = orig + eps;
+            let lp = m.loss(&x, &y);
+            m.w_mut()[(r, c)] = orig - eps;
+            let lm = m.loss(&x, &y);
+            m.w_mut()[(r, c)] = orig;
+            let num = (lp - lm) / (2.0 * eps);
+            let ana = g.dw[(r, c)];
+            assert!(
+                rel_err(num, ana) <= 1e-3,
+                "dW[{r},{c}]: numeric {num} vs analytic {ana} (rel {})",
+                rel_err(num, ana)
+            );
+        }
+    }
+}
+
+#[test]
+fn central_differences_match_every_b_coordinate() {
+    let (x, y) = toy_batch();
+    let mut m = toy_model();
+    let (_, g) = m.loss_and_grad(&x, &y);
+    let eps = 1e-2f32;
+    for c in 0..CLASSES {
+        let orig = m.b()[c];
+        m.b_mut()[c] = orig + eps;
+        let lp = m.loss(&x, &y);
+        m.b_mut()[c] = orig - eps;
+        let lm = m.loss(&x, &y);
+        m.b_mut()[c] = orig;
+        let num = (lp - lm) / (2.0 * eps);
+        let ana = g.db[c];
+        assert!(
+            rel_err(num, ana) <= 1e-3,
+            "db[{c}]: numeric {num} vs analytic {ana} (rel {})",
+            rel_err(num, ana)
+        );
+    }
+}
+
+#[test]
+fn loss_and_grad_loss_matches_loss_helper() {
+    let (x, y) = toy_batch();
+    let m = toy_model();
+    let (l, _) = m.loss_and_grad(&x, &y);
+    assert!((l - m.loss(&x, &y)).abs() < 1e-6);
+}
+
+#[test]
+fn sharded_tree_reduced_gradient_matches_full_batch() {
+    let (x, y) = toy_batch();
+    let m = toy_model();
+    let (full_loss, full_g) = m.loss_and_grad(&x, &y);
+
+    // ragged 3-way split (3 + 2 + 1 rows) through the shard path,
+    // combined exactly the way the ParallelTrainer combines shards
+    struct Shard {
+        g: Gradients,
+        loss: f64,
+        hits: usize,
+    }
+    let bounds = [(0usize, 3usize), (3, 5), (5, 6)];
+    let mut shards: Vec<Shard> = bounds
+        .iter()
+        .map(|&(lo, hi)| {
+            let rows = hi - lo;
+            let mut g = Gradients::zeros(CLASSES, FEATS);
+            let mut delta = vec![0.0f32; rows * CLASSES];
+            let (loss, hits) = m.shard_loss_grad_sums(
+                &x.data()[lo * FEATS..hi * FEATS],
+                rows,
+                &y[lo..hi],
+                &mut delta,
+                &mut g,
+            );
+            Shard { g, loss, hits }
+        })
+        .collect();
+    tree_reduce_with(&mut shards, |a, b| {
+        a.g.merge(&b.g);
+        a.loss += b.loss;
+        a.hits += b.hits;
+    });
+    let root = &mut shards[0];
+    root.g.scale(1.0 / ROWS as f32);
+
+    // 1e-5 gates: the shard path's f32 exp(v−lse) + sum-then-scale
+    // rounds differently from the oracle's f64 softmax + pre-scaled
+    // contraction (mirror-measured drift ~1e-7; headroom for ulps)
+    assert!(
+        ((root.loss / ROWS as f64) as f32 - full_loss).abs() < 1e-5,
+        "loss {} vs {}",
+        root.loss / ROWS as f64,
+        full_loss
+    );
+    for (k, (a, b)) in root.g.dw.data().iter().zip(full_g.dw.data()).enumerate() {
+        assert!((a - b).abs() <= 1e-5, "dw[{k}]: {a} vs {b}");
+    }
+    for (c, (a, b)) in root.g.db.iter().zip(&full_g.db).enumerate() {
+        assert!((a - b).abs() <= 1e-5, "db[{c}]: {a} vs {b}");
+    }
+    let preds = m.predict(&x);
+    let want_hits = preds.iter().zip(&y).filter(|(p, t)| p == t).count();
+    assert_eq!(root.hits, want_hits, "shard hit counts must match predict()");
+}
+
+#[test]
+fn tree_reduction_is_pairwise_fixed_order() {
+    // f32 catastrophic-cancellation probe: ((a+b)+(c+d)) differs from
+    // a left fold, so this pins the reduction *order*, not just the sum.
+    let vals = [1e8f32, 1.0, -1e8, 1.0];
+    let mut shards: Vec<Gradients> = vals
+        .iter()
+        .map(|&v| {
+            let mut g = Gradients::zeros(1, 1);
+            g.dw[(0, 0)] = v;
+            g.db[0] = v;
+            g
+        })
+        .collect();
+    tree_reduce_with(&mut shards, |a, b| a.merge(b));
+    let want = (vals[0] + vals[1]) + (vals[2] + vals[3]);
+    assert_eq!(shards[0].dw[(0, 0)].to_bits(), want.to_bits());
+    assert_eq!(shards[0].db[0].to_bits(), want.to_bits());
+}

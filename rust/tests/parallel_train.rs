@@ -1,0 +1,153 @@
+//! Tentpole acceptance suite for the data-parallel sharded SGD
+//! trainer:
+//!
+//! * N-worker training is **deterministic** — repeated runs with the
+//!   same seed produce bit-identical `TrainReport.history` (modulo
+//!   wall-clock `seconds`) and bit-identical final weights, for
+//!   workers ∈ {1, 2, 4}.
+//! * Every worker count matches the single-threaded epoch-loop
+//!   `Trainer` oracle within 1e-5 final test accuracy (the only
+//!   difference between the paths is floating-point summation order).
+//! * Ragged tail batches and workers > batch rows are handled.
+
+use mckernel::data::{Dataset, SyntheticSpec};
+use mckernel::mckernel::McKernelFactory;
+use mckernel::optim::SgdConfig;
+use mckernel::train::{EpochRecord, Featurizer, ParallelTrainer, TrainConfig, Trainer};
+use std::sync::Arc;
+
+fn datasets(train_n: usize, test_n: usize) -> (Dataset, Dataset) {
+    let spec = SyntheticSpec::mnist();
+    (
+        Dataset::synthetic(11, &spec, "train", train_n),
+        Dataset::synthetic(11, &spec, "test", test_n),
+    )
+}
+
+fn config(epochs: usize, lr: f32, workers: usize) -> TrainConfig {
+    TrainConfig {
+        epochs,
+        batch_size: 10,
+        sgd: SgdConfig { lr, momentum: 0.0, clip: None },
+        seed: 1398239763,
+        eval_every_epoch: false,
+        verbose: false,
+        workers,
+    }
+}
+
+fn kernel_featurizer() -> Featurizer {
+    // σ=8 matches the data scale (see trainer.rs test notes).
+    Featurizer::McKernel(Arc::new(
+        McKernelFactory::new(784).expansions(1).sigma(8.0).rbf().seed(1).build(),
+    ))
+}
+
+/// History equality up to the wall-clock field.
+fn histories_bit_identical(a: &[EpochRecord], b: &[EpochRecord]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| {
+            x.epoch == y.epoch
+                && x.train_loss.to_bits() == y.train_loss.to_bits()
+                && x.train_accuracy.to_bits() == y.train_accuracy.to_bits()
+                && x.test_accuracy.to_bits() == y.test_accuracy.to_bits()
+        })
+}
+
+#[test]
+fn n_workers_match_serial_oracle_identity_features() {
+    let (train, test) = datasets(300, 100);
+    let (_, oracle) = Trainer::new(config(3, 0.05, 1), Featurizer::Identity).fit(&train, &test);
+    for workers in [1usize, 2, 4] {
+        let trainer = ParallelTrainer::new(config(3, 0.05, workers), Featurizer::Identity);
+        let (_, report) = trainer.fit(&train, &test);
+        assert!(
+            (report.final_test_accuracy - oracle.final_test_accuracy).abs() <= 1e-5,
+            "workers={workers}: parallel {} vs oracle {}",
+            report.final_test_accuracy,
+            oracle.final_test_accuracy
+        );
+    }
+}
+
+#[test]
+fn n_workers_match_serial_oracle_mckernel_features() {
+    let (train, test) = datasets(150, 60);
+    let (_, oracle) = Trainer::new(config(2, 0.002, 1), kernel_featurizer()).fit(&train, &test);
+    for workers in [1usize, 3] {
+        let trainer = ParallelTrainer::new(config(2, 0.002, workers), kernel_featurizer());
+        let (_, report) = trainer.fit(&train, &test);
+        assert!(
+            (report.final_test_accuracy - oracle.final_test_accuracy).abs() <= 1e-5,
+            "workers={workers}: parallel {} vs oracle {}",
+            report.final_test_accuracy,
+            oracle.final_test_accuracy
+        );
+    }
+}
+
+#[test]
+fn repeated_runs_are_bit_identical_per_worker_count() {
+    let (train, test) = datasets(100, 30);
+    for workers in [1usize, 2, 4] {
+        let mut cfg = config(2, 0.05, workers);
+        cfg.eval_every_epoch = true; // every epoch's test accuracy in history
+        let (m1, r1) = ParallelTrainer::new(cfg.clone(), Featurizer::Identity).fit(&train, &test);
+        let (m2, r2) = ParallelTrainer::new(cfg, Featurizer::Identity).fit(&train, &test);
+        assert!(
+            histories_bit_identical(&r1.history, &r2.history),
+            "workers={workers}: histories diverge:\n{:?}\nvs\n{:?}",
+            r1.history,
+            r2.history
+        );
+        assert_eq!(m1.w().data(), m2.w().data(), "workers={workers}: weights diverge");
+        assert_eq!(m1.b(), m2.b(), "workers={workers}: biases diverge");
+    }
+}
+
+#[test]
+fn shard_count_invariance_of_final_accuracy() {
+    let (train, test) = datasets(200, 80);
+    let mut accs = Vec::new();
+    for workers in [1usize, 2, 4] {
+        let (_, report) =
+            ParallelTrainer::new(config(3, 0.05, workers), Featurizer::Identity).fit(&train, &test);
+        accs.push(report.final_test_accuracy);
+    }
+    for (i, acc) in accs.iter().enumerate() {
+        assert!(
+            (acc - accs[0]).abs() <= 1e-5,
+            "workers config #{i}: accuracy {acc} vs 1-worker {}",
+            accs[0]
+        );
+    }
+}
+
+#[test]
+fn more_workers_than_rows_and_ragged_tail() {
+    // 23 samples, batch 10 → batches of 10/10/3; 8 workers shard the
+    // tail as 8 × {0,1}-row shards clamped to 3 shards of 1.
+    let (train, test) = datasets(23, 20);
+    let (_, oracle) = Trainer::new(config(2, 0.05, 1), Featurizer::Identity).fit(&train, &test);
+    let trainer = ParallelTrainer::new(config(2, 0.05, 8), Featurizer::Identity);
+    let (_, report) = trainer.fit(&train, &test);
+    assert_eq!(report.history.len(), 2);
+    assert!(report.history.iter().all(|r| r.train_loss.is_finite()));
+    assert!(
+        (report.final_test_accuracy - oracle.final_test_accuracy).abs() <= 1e-5,
+        "parallel {} vs oracle {}",
+        report.final_test_accuracy,
+        oracle.final_test_accuracy
+    );
+}
+
+#[test]
+fn report_metadata_matches_serial_trainer() {
+    let (train, test) = datasets(40, 20);
+    let (_, serial) = Trainer::new(config(1, 0.05, 1), Featurizer::Identity).fit(&train, &test);
+    let (_, parallel) =
+        ParallelTrainer::new(config(1, 0.05, 2), Featurizer::Identity).fit(&train, &test);
+    assert_eq!(parallel.featurizer, serial.featurizer);
+    assert_eq!(parallel.param_count, serial.param_count);
+    assert_eq!(parallel.history.len(), serial.history.len());
+}

@@ -27,6 +27,7 @@ fn config(epochs: usize, lr: f32) -> TrainConfig {
         seed: 1398239763,
         eval_every_epoch: false,
         verbose: false,
+        workers: 1,
     }
 }
 
@@ -138,6 +139,7 @@ fn momentum_and_clip_paths_run() {
         seed: 3,
         eval_every_epoch: true,
         verbose: false,
+        workers: 1,
     };
     let (_, rep) = Trainer::new(cfg, Featurizer::Identity).fit(&train, &test);
     assert_eq!(rep.history.len(), 2);
