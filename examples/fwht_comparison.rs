@@ -5,7 +5,7 @@
 //!     cargo run --release --example fwht_comparison [-- --quick]
 
 use mckernel::benchkit::{bench, BenchConfig};
-use mckernel::fwht::{optimized, recursive};
+use mckernel::fwht::{optimized, reference};
 use mckernel::hash::HashRng;
 
 /// Paper Table 1 (intel i5-4200 @ 1.6GHz): (n, mckernel ms, spiral ms).
@@ -39,7 +39,7 @@ fn main() {
         let mut r = HashRng::new(n as u64, 0xF0);
         let mut data: Vec<f32> = (0..n).map(|_| r.next_f32() - 0.5).collect();
         let mck = bench("mck", &cfg, |_| optimized::fwht(&mut data));
-        let plan = recursive::Plan::build(n);
+        let plan = reference::Plan::build(n);
         let mut data2: Vec<f32> = (0..n).map(|_| r.next_f32() - 0.5).collect();
         let spi = bench("spi", &cfg, |_| plan.execute(&mut data2));
         let ratio = spi.stats.median / mck.stats.median;

@@ -10,7 +10,7 @@ use mckernel::benchkit::{bench, compare_feature_paths, BenchConfig, Report};
 use mckernel::fwht::optimized;
 use mckernel::hash::HashRng;
 use mckernel::linalg::Matrix;
-use mckernel::mckernel::McKernelFactory;
+use mckernel::mckernel::{ExpansionEngine, McKernelFactory};
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
@@ -33,9 +33,9 @@ fn main() {
             .seed(1)
             .build();
         let mut out = vec![0.0f32; map.feature_dim()];
-        let mut scratch = map.make_scratch();
+        let mut oracle = ExpansionEngine::per_row_oracle(&map);
         let full = bench("feature_map", &cfg, |_| {
-            map.transform_into(&x, &mut out, &mut scratch)
+            oracle.execute(&map, &x, 1, x.len(), &mut out)
         });
         // lower bound: the 2E FWHTs alone
         let mut buf: Vec<f32> = (0..n).map(|i| i as f32).collect();
@@ -52,8 +52,8 @@ fn main() {
     // throughput summary for the paper's "lightning expansions" claim
     let map = McKernelFactory::new(input_dim).expansions(4).rbf_matern(40).seed(1).build();
     let mut out = vec![0.0f32; map.feature_dim()];
-    let mut scratch = map.make_scratch();
-    let rfull = bench("E=4", &cfg, |_| map.transform_into(&x, &mut out, &mut scratch));
+    let mut oracle = ExpansionEngine::per_row_oracle(&map);
+    let rfull = bench("E=4", &cfg, |_| oracle.execute(&map, &x, 1, x.len(), &mut out));
     println!(
         "E=4 throughput: {:.0} samples/s  ({:.1} MB/s of features)",
         rfull.throughput(1.0),

@@ -8,7 +8,7 @@
 //! Usage: cargo bench --bench bench_fwht [-- --ablation] [-- --quick]
 
 use mckernel::benchkit::{bench, BenchConfig, Report};
-use mckernel::fwht::{iterative, optimized, recursive};
+use mckernel::fwht::{iterative, optimized, reference};
 use mckernel::hash::HashRng;
 
 fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
@@ -35,7 +35,7 @@ fn main() {
         // Spiral executes a precomputed plan; timing plan-build each
         // call would be unfair — build once, execute per iteration
         // (matches Spiral's published methodology).
-        let plan = recursive::Plan::build(n);
+        let plan = reference::Plan::build(n);
         let mut data2 = rand_vec(n, log_n as u64 + 100);
         let spiral = bench("spiral", &cfg, |_| plan.execute(&mut data2));
         table1.add_row(
@@ -60,12 +60,12 @@ fn main() {
         let n = 1usize << log_n;
         let naive_ms = if log_n <= 12 {
             let mut d = rand_vec(n, 7);
-            bench("naive", &cfg, |_| mckernel::fwht::naive::fwht(&mut d)).median_ms()
+            bench("naive", &cfg, |_| reference::fwht_naive(&mut d)).median_ms()
         } else {
             f64::NAN
         };
         let mut d1 = rand_vec(n, 8);
-        let rec = bench("recursive", &cfg, |_| recursive::fwht(&mut d1)).median_ms();
+        let rec = bench("recursive", &cfg, |_| reference::fwht_recursive(&mut d1)).median_ms();
         let mut d2 = rand_vec(n, 9);
         let it = bench("iterative", &cfg, |_| iterative::fwht(&mut d2)).median_ms();
         let mut d3 = rand_vec(n, 10);
@@ -82,11 +82,11 @@ fn main() {
     );
     for log_n in [12usize, 16, 20] {
         let n = 1usize << log_n;
-        let plan = recursive::Plan::build(n);
+        let plan = reference::Plan::build(n);
         let mut d = rand_vec(n, 11);
         let exec = bench("exec", &cfg, |_| plan.execute(&mut d));
         let mut d2 = rand_vec(n, 12);
-        let full = bench("build+exec", &cfg, |_| recursive::fwht(&mut d2));
+        let full = bench("build+exec", &cfg, |_| reference::fwht_recursive(&mut d2));
         let overhead = (full.stats.median / exec.stats.median - 1.0) * 100.0;
         plan_ab.add_row(
             &format!("2^{log_n}"),

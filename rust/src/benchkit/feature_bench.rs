@@ -1,17 +1,20 @@
 //! Shared per-row vs batched feature-pipeline comparison, used by the
 //! `bench_features` binary and the `mckernel bench` CLI subcommand so
 //! the printed table and the machine-readable JSON snapshot can never
-//! diverge.
+//! diverge. Both paths execute through `mckernel::engine` — the
+//! per-row baseline via the plan's explicit per-row override, the
+//! batched path via the plan the engine would compile anyway — so the
+//! numbers track exactly what the library ships.
 
 use super::runner::{bench, BenchConfig, BenchResult};
 use crate::linalg::Matrix;
-use crate::mckernel::McKernel;
+use crate::mckernel::{ExpansionEngine, McKernel};
 
 /// Timings + output deviation of the two feature paths on one batch.
 pub struct FeatureComparison {
-    /// Per-row `transform_into` loop (the libm oracle).
+    /// Per-row libm oracle (plan forced onto `FwhtDispatch::PerRow`).
     pub per_row: BenchResult,
-    /// Batched `transform_batch_into` pipeline.
+    /// Batched engine pipeline (the compiled default).
     pub batched: BenchResult,
     /// Max |per-row − batched| over all features (trig-kernel budget).
     pub max_abs_err: f32,
@@ -31,21 +34,19 @@ impl FeatureComparison {
     }
 }
 
-/// Time the per-row oracle vs the batched pipeline on the same batch
+/// Time the per-row oracle vs the batched engine on the same batch
 /// and report the max output deviation between them.
 pub fn compare_feature_paths(map: &McKernel, x: &Matrix, cfg: &BenchConfig) -> FeatureComparison {
     let rows = x.rows();
     let mut out_rows = Matrix::zeros(rows, map.feature_dim());
-    let mut scratch_row = map.make_scratch();
+    let mut oracle = ExpansionEngine::per_row_oracle(map);
     let per_row = bench("features/per-row", cfg, |_| {
-        for r in 0..rows {
-            map.transform_into(x.row(r), out_rows.row_mut(r), &mut scratch_row);
-        }
+        oracle.execute_matrix(map, x, &mut out_rows)
     });
     let mut out_batch = Matrix::zeros(rows, map.feature_dim());
-    let mut scratch = map.make_batch_scratch();
+    let mut engine = ExpansionEngine::new(map, rows);
     let batched = bench("features/batched", cfg, |_| {
-        map.transform_batch_into(x, &mut out_batch, &mut scratch)
+        engine.execute_matrix(map, x, &mut out_batch)
     });
     let max_abs_err = out_rows
         .data()

@@ -222,19 +222,44 @@ pub fn cmd_features(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `mckernel fwht`.
+/// `mckernel fwht`. Production engines come from [`crate::fwht::Engine`];
+/// the reference oracles (`naive`, `recursive`/`spiral`) stay runnable
+/// here as explicit baselines for Table 1, without being selectable by
+/// the expansion plan.
 pub fn cmd_fwht(args: &Args) -> Result<()> {
-    use crate::fwht::Engine;
+    use crate::fwht::{reference, Engine};
     let log_n: u32 = args.parse_or("log-n", 20u32)?;
     let n = 1usize << log_n;
-    let engine = Engine::parse(&args.get_or("engine", "mckernel")).context("bad --engine")?;
+    let name = args.get_or("engine", "mckernel");
     let mut rng = crate::hash::HashRng::new(args.parse_or("seed", 1u64)?, 0xF);
     let mut data: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
     let cfg = crate::benchkit::BenchConfig::default();
-    let result = crate::benchkit::bench(engine.name(), &cfg, |_| engine.run(&mut data));
+    let (label, result) = if let Some(engine) = Engine::parse(&name) {
+        (
+            engine.name(),
+            crate::benchkit::bench(engine.name(), &cfg, |_| engine.run(&mut data)),
+        )
+    } else {
+        match name.as_str() {
+            "naive" => {
+                anyhow::ensure!(log_n <= 13, "naive reference is O(n²); use --log-n ≤ 13");
+                (
+                    "naive(reference)",
+                    crate::benchkit::bench("naive", &cfg, |_| reference::fwht_naive(&mut data)),
+                )
+            }
+            "recursive" | "spiral" => (
+                "recursive(reference)",
+                crate::benchkit::bench("recursive", &cfg, |_| {
+                    reference::fwht_recursive(&mut data)
+                }),
+            ),
+            other => bail!("bad --engine '{other}' (iterative|mckernel|batch|naive|spiral)"),
+        }
+    };
     println!(
         "FWHT n=2^{log_n} engine={}: median {:.4} ms  (min {:.4}, p95 {:.4}; {} samples × {} iters)",
-        engine.name(),
+        label,
         result.median_ms(),
         result.stats.min * 1e3,
         result.stats.p95 * 1e3,

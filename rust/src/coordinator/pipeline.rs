@@ -6,7 +6,7 @@
 
 use crate::data::{Batcher, Dataset};
 use crate::linalg::Matrix;
-use crate::mckernel::McKernel;
+use crate::mckernel::{ExpansionEngine, McKernel};
 use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -50,14 +50,16 @@ impl Prefetcher {
                 if drop_last {
                     batcher = batcher.drop_last();
                 }
-                let mut scratch = map.as_ref().map(|m| m.make_batch_scratch());
+                let mut engine = map.as_ref().map(|m| ExpansionEngine::new(m, batch_size));
                 for batch in batcher.epoch(&data, epoch) {
-                    let features = match (&map, &mut scratch) {
-                        (Some(m), Some(s)) => {
-                            // whole mini-batch through the batched
-                            // pipeline in one call
+                    let features = match (&map, &mut engine) {
+                        (Some(m), Some(eng)) => {
+                            // whole mini-batch through the compiled
+                            // engine in one call (scratch pooled for
+                            // the epoch; the output matrix is moved
+                            // downstream, so it is per-batch)
                             let mut out = Matrix::zeros(batch.images.rows(), m.feature_dim());
-                            m.transform_batch_into(&batch.images, &mut out, s);
+                            eng.execute_matrix(m, &batch.images, &mut out);
                             out
                         }
                         _ => batch.images,

@@ -6,7 +6,7 @@
 //! rows back to the callers.
 
 use crate::linalg::Matrix;
-use crate::mckernel::McKernel;
+use crate::mckernel::{ExpansionEngine, McKernel};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
@@ -82,7 +82,10 @@ impl FeatureServer {
         max_wait: Duration,
         stats: Arc<ServerStats>,
     ) {
-        let mut scratch = map.make_batch_scratch();
+        // One compiled engine for the server's lifetime: scratch and
+        // feature buffer pooled across every coalesced batch.
+        let mut engine = ExpansionEngine::new(&map, max_batch);
+        let mut feats = Matrix::zeros(0, 0);
         let mut shutting_down = false;
         loop {
             // Block for the first request of a batch.
@@ -112,7 +115,7 @@ impl FeatureServer {
             stats
                 .batched_rows
                 .fetch_add(pending.len() as u64, Ordering::Relaxed);
-            // Featurize the coalesced batch in ONE batched pass — this
+            // Featurize the coalesced batch in ONE engine pass — this
             // is where coalescing pays: the tile-vectorized pipeline
             // turns every butterfly, gather and trig evaluation into a
             // wide stream across the whole batch.
@@ -121,8 +124,8 @@ impl FeatureServer {
             for (r, req) in pending.iter().enumerate() {
                 xb.row_mut(r).copy_from_slice(&req.x);
             }
-            let mut feats = Matrix::zeros(rows, map.feature_dim());
-            map.transform_batch_into(&xb, &mut feats, &mut scratch);
+            feats.resize(rows, map.feature_dim());
+            engine.execute_matrix(&map, &xb, &mut feats);
             for (r, req) in pending.into_iter().enumerate() {
                 stats.requests.fetch_add(1, Ordering::Relaxed);
                 let _ = req.reply.send(feats.row(r).to_vec()); // client may have left

@@ -20,7 +20,7 @@
 //! stages / transpose-out, and the feature pipeline fuses its
 //! diagonals and gathers into those transposes.
 
-use super::optimized::{self, radix2_pass, radix4_pass};
+use super::optimized::{radix2_pass, radix4_pass};
 
 /// Tile footprint budget in f32 elements (128 KiB — L2-resident with
 /// headroom for the gather/trig scratch of the feature pipeline).
@@ -77,19 +77,18 @@ fn store_tile(tile: &[f32], n: usize, lanes: usize, rows: &mut [f32]) {
 
 /// FWHT of every row of a row-major `(rows, n)` matrix, vectorized
 /// across the batch dimension. Bit-identical to [`super::fwht`]
-/// applied per row.
+/// applied per row — including at `tile_lanes(n) == 1`, where a
+/// one-lane tile runs the same passes in the same stride order (the
+/// batch-vs-per-row *dispatch* decision is not made here; it belongs
+/// to `mckernel::plan::ExpansionPlan`, the codebase's one fallback
+/// point).
 pub fn fwht_batch(data: &mut [f32], rows: usize, n: usize) {
     assert!(n.is_power_of_two(), "row length must be a power of two");
     assert_eq!(data.len(), rows * n, "buffer shape mismatch");
-    let lanes_max = tile_lanes(n);
-    if lanes_max <= 1 {
-        // Transform too large to tile: the per-row engine's own
-        // cache-blocked streaming is already the right shape.
-        for row in data.chunks_exact_mut(n) {
-            optimized::fwht(row);
-        }
+    if n <= 1 {
         return;
     }
+    let lanes_max = tile_lanes(n);
     let mut tile = vec![0.0f32; n * lanes_max];
     let mut base = 0;
     while base < rows {

@@ -27,7 +27,7 @@ pub fn fwht(data: &mut [f32]) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fwht::naive;
+    use crate::fwht::reference;
 
     #[test]
     fn matches_naive_many_sizes() {
@@ -37,7 +37,7 @@ mod tests {
             let mut a = x.clone();
             let mut b = x;
             fwht(&mut a);
-            naive::fwht(&mut b);
+            reference::fwht_naive(&mut b);
             for (u, v) in a.iter().zip(b.iter()) {
                 assert!((u - v).abs() < 1e-3 * v.abs().max(1.0), "n={n}");
             }

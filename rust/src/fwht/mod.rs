@@ -8,12 +8,10 @@
 //! ```
 //!
 //! `H·c` factors into `log₂ n` butterfly stages (`paper Eq. 12-13`),
-//! giving `O(n log n)` time. Four per-row engines are provided, plus a
-//! batch-axis vectorized engine:
+//! giving `O(n log n)` time. Three **production engines** are
+//! provided — the set `mckernel::plan::ExpansionPlan` selects
+//! between — plus a reference module of test oracles:
 //!
-//! * [`naive`] — `O(n²)` by explicit sign computation (test oracle).
-//! * [`recursive`] — plan-based divide-and-conquer in the style of
-//!   Spiral [Johnson & Püschel 2000]; the paper's comparison baseline.
 //! * [`iterative`] — textbook in-place radix-2 Cooley–Tukey loop.
 //! * [`optimized`] — the paper's contribution, re-created: cache-blocked
 //!   two-phase traversal with unrolled SIMD-friendly codelets
@@ -22,69 +20,80 @@
 //! * [`batch`] — `rows` transforms in lockstep on column-major tiles
 //!   (batch dimension innermost), the mini-batch hot path; bit-identical
 //!   to [`optimized`] per row.
+//! * [`reference`] — the `O(n²)` naïve oracle and the Spiral-like
+//!   recursive baseline. Test/bench oracles only; never dispatched to
+//!   by the expansion plan.
 //!
 //! All engines operate **in place** and compute the *unnormalized*
 //! transform (`H x`, not `H x/√n`); [`crate::mckernel`] folds the
 //! `1/(σ√n)` normalization of Eq. 8 into the calibration diagonal.
+//! The batch-vs-per-row dispatch decision for the expansion pipeline
+//! is made in exactly one place: `mckernel::plan::ExpansionPlan`.
 
 pub mod batch;
 pub mod iterative;
-pub mod naive;
 pub mod optimized;
-pub mod recursive;
+pub mod reference;
 
 pub use batch::{fwht_batch, fwht_colmajor, tile_lanes};
 
 /// The default engine used by the library hot path.
 pub use optimized::fwht as fwht_fast;
 
-/// Which FWHT engine to run (CLI / bench selectable).
+/// Which production FWHT engine to run (CLI / bench selectable; the
+/// expansion plan picks between [`Engine::Optimized`] per row and
+/// [`Engine::Batch`] tiles). The reference oracles
+/// ([`reference::fwht_naive`], [`reference::fwht_recursive`]) are
+/// deliberately *not* variants: nothing in the library may dispatch
+/// to them.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Engine {
-    /// O(n²) oracle.
-    Naive,
-    /// Spiral-like plan-based recursion (comparison baseline).
-    Recursive,
     /// Plain in-place radix-2 loop.
     Iterative,
-    /// Cache-blocked, unrolled (the McKernel engine).
+    /// Cache-blocked, unrolled (the McKernel per-row engine).
     Optimized,
+    /// Column-major batch-lockstep tiles (bit-identical to Optimized
+    /// per row; on a single row it degenerates to one lane). At
+    /// `tile_lanes(n) == 1` (n ≥ 2^15) a timing of this engine mostly
+    /// measures transpose copies the expansion plan avoids by
+    /// dispatching `PerRow` — keep that in mind when reading large-n
+    /// CLI/bench numbers for it.
+    Batch,
 }
 
 impl Engine {
-    /// All engines, for sweeps.
-    pub const ALL: [Engine; 4] =
-        [Engine::Naive, Engine::Recursive, Engine::Iterative, Engine::Optimized];
+    /// All production engines, for sweeps.
+    pub const ALL: [Engine; 3] = [Engine::Iterative, Engine::Optimized, Engine::Batch];
 
     /// Human name (used by benches and the CLI).
     pub fn name(self) -> &'static str {
         match self {
-            Engine::Naive => "naive",
-            Engine::Recursive => "recursive",
             Engine::Iterative => "iterative",
             Engine::Optimized => "mckernel",
+            Engine::Batch => "batch",
         }
     }
 
     /// Parse a CLI name.
     pub fn parse(s: &str) -> Option<Engine> {
         match s {
-            "naive" => Some(Engine::Naive),
-            "recursive" | "spiral" => Some(Engine::Recursive),
             "iterative" => Some(Engine::Iterative),
             "optimized" | "mckernel" => Some(Engine::Optimized),
+            "batch" => Some(Engine::Batch),
             _ => None,
         }
     }
 
     /// Run this engine in place on `data` (`data.len()` must be a
-    /// power of two).
+    /// power of two). The batch engine treats `data` as a single row.
     pub fn run(self, data: &mut [f32]) {
         match self {
-            Engine::Naive => naive::fwht(data),
-            Engine::Recursive => recursive::fwht(data),
             Engine::Iterative => iterative::fwht(data),
             Engine::Optimized => optimized::fwht(data),
+            Engine::Batch => {
+                let n = data.len();
+                batch::fwht_batch(data, 1, n);
+            }
         }
     }
 }
@@ -107,25 +116,55 @@ mod tests {
         (0..n).map(|_| r.next_f32() * 2.0 - 1.0).collect()
     }
 
+    /// THE engine-equivalence pin (PR 4 satellite): every production
+    /// engine against the reference oracles, across the shapes the
+    /// expansion plan actually produces — padded non-power-of-two
+    /// input dims (e.g. 784 → 1024, 12 → 16) and the `lanes == 1`
+    /// regime where the tile engine degenerates to per-row order
+    /// (`tile_lanes(n) == 1` for n ≥ 2^15). The naïve oracle covers
+    /// the sizes where O(n²) is affordable; above that the recursive
+    /// oracle (itself pinned against naïve in `reference::tests`)
+    /// takes over, and Batch-vs-Optimized stays *exact* because the
+    /// per-lane arithmetic DAG is identical.
     #[test]
-    fn all_engines_agree_across_sizes() {
-        for log_n in 0..=13 {
-            let n = 1usize << log_n;
-            let x = random_vec(n, log_n as u64);
+    fn production_engines_match_reference() {
+        for n in [
+            1usize,
+            2,
+            8,
+            16,          // next_pow2(12)
+            64,          // next_pow2(48)
+            1024,        // next_pow2(784): the MNIST geometry
+            4096,        // largest naïve-checked size
+            1 << 14,     // tile_lanes = 2: two-lane tiles
+            1 << 15,     // tile_lanes = 1: the per-row-order regime
+        ] {
+            let x = random_vec(n, n as u64);
             let mut want = x.clone();
-            naive::fwht(&mut want);
-            for eng in [Engine::Recursive, Engine::Iterative, Engine::Optimized] {
+            if n <= 4096 {
+                reference::fwht_naive(&mut want);
+            } else {
+                reference::fwht_recursive(&mut want);
+            }
+            let mut opt = x.clone();
+            Engine::Optimized.run(&mut opt);
+            for eng in Engine::ALL {
                 let mut got = x.clone();
                 eng.run(&mut got);
-                for (g, w) in got.iter().zip(want.iter()) {
+                for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
                     assert!(
                         (g - w).abs() <= 1e-3 * w.abs().max(1.0),
-                        "{} n={} g={} w={}",
+                        "{} n={} i={} got={} want={}",
                         eng.name(),
                         n,
+                        i,
                         g,
                         w
                     );
+                }
+                // Optimized and Batch share the per-lane DAG exactly.
+                if eng == Engine::Batch {
+                    assert_eq!(got, opt, "batch vs optimized exact, n={n}");
                 }
             }
         }
@@ -216,7 +255,10 @@ mod tests {
         for e in Engine::ALL {
             assert_eq!(Engine::parse(e.name()), Some(e));
         }
-        assert_eq!(Engine::parse("spiral"), Some(Engine::Recursive));
+        assert_eq!(Engine::parse("optimized"), Some(Engine::Optimized));
+        // Reference oracles are not production engines.
+        assert_eq!(Engine::parse("naive"), None);
+        assert_eq!(Engine::parse("recursive"), None);
         assert_eq!(Engine::parse("bogus"), None);
     }
 }

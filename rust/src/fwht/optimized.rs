@@ -177,7 +177,7 @@ fn butterfly8(d: &mut [f32]) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fwht::naive;
+    use crate::fwht::reference;
 
     fn check_against_naive(n: usize, seed: u64) {
         let mut r = crate::hash::HashRng::new(seed, 0xF1);
@@ -185,7 +185,7 @@ mod tests {
         let mut a = x.clone();
         let mut b = x;
         fwht(&mut a);
-        naive::fwht(&mut b);
+        reference::fwht_naive(&mut b);
         for (i, (u, v)) in a.iter().zip(b.iter()).enumerate() {
             assert!(
                 (u - v).abs() < 1e-3 * v.abs().max(1.0),

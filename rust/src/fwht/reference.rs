@@ -1,17 +1,62 @@
-//! Plan-based recursive FWHT — the *Spiral-like baseline* of Table 1 /
-//! Figure 2.
+//! Reference FWHT implementations — **test oracles only**, never
+//! selected by the expansion plan.
 //!
-//! Spiral [Johnson & Püschel 2000] searches over recursive
-//! factorizations ("breakdown trees") of the transform and executes the
-//! chosen plan by straight-line recursion. We reproduce that execution
-//! model: a precomputed [`Plan`] tree describing the split at every
-//! level, walked by a recursive interpreter with a scalar size-≤8 base
-//! codelet. This carries Spiral's structural costs — call/plan-node
-//! overhead per region and no cross-stage cache blocking — which is
-//! precisely what the paper's engine removes. (Spiral's published FWHT
-//! also caps at `n = 2²⁰`; we note but do not impose the cap.)
+//! * [`fwht_naive`] — `O(n²)` by explicit sign computation (paper §4:
+//!   "a naïve implementation results in complexity O(n²)"). The ground
+//!   truth every fast engine is pinned against; f64 accumulation so the
+//!   oracle itself carries no rounding surprises.
+//! * [`fwht_recursive`] / [`Plan`] — plan-based divide-and-conquer in
+//!   the style of Spiral [Johnson & Püschel 2000]; the paper's
+//!   comparison baseline in Table 1 / Figure 2. `O(n log n)`, so it
+//!   doubles as the oracle at sizes where the naïve transform is too
+//!   slow to run in tests.
+//!
+//! The production engines the plan selects between live in
+//! [`super::iterative`], [`super::optimized`] and [`super::batch`];
+//! the one place that chooses among them is
+//! `mckernel::plan::ExpansionPlan`.
+
+/// In-place `O(n²)` Walsh–Hadamard transform (sign-matrix oracle).
+///
+/// Entry `(i, j)` of `H_n` is `(-1)^{popcount(i & j)}` (Sylvester
+/// ordering, the same ordering the butterfly engines produce).
+pub fn fwht_naive(data: &mut [f32]) {
+    let n = data.len();
+    assert!(n.is_power_of_two(), "FWHT length must be a power of two");
+    let x = data.to_vec();
+    for (i, out) in data.iter_mut().enumerate() {
+        let mut acc = 0.0f64;
+        for (j, &v) in x.iter().enumerate() {
+            if (i & j).count_ones() & 1 == 0 {
+                acc += v as f64;
+            } else {
+                acc -= v as f64;
+            }
+        }
+        *out = acc as f32;
+    }
+}
+
+/// The explicit Hadamard matrix entry `H[i][j] ∈ {+1, -1}`.
+pub fn entry(i: usize, j: usize) -> f32 {
+    if (i & j).count_ones() & 1 == 0 {
+        1.0
+    } else {
+        -1.0
+    }
+}
 
 /// One node of a Spiral-style breakdown tree.
+///
+/// Spiral searches over recursive factorizations ("breakdown trees")
+/// of the transform and executes the chosen plan by straight-line
+/// recursion. We reproduce that execution model: a precomputed tree
+/// describing the split at every level, walked by a recursive
+/// interpreter with a scalar size-≤8 base codelet. This carries
+/// Spiral's structural costs — call/plan-node overhead per region and
+/// no cross-stage cache blocking — which is precisely what the
+/// McKernel engine removes. (Spiral's published FWHT also caps at
+/// `n = 2²⁰`; we note but do not impose the cap.)
 #[derive(Debug)]
 pub struct Plan {
     /// Transform size at this node (power of two).
@@ -104,7 +149,7 @@ fn leaf_codelet(d: &mut [f32]) {
 
 /// One-shot plan-build + execute (what the Table 1 baseline times; a
 /// cached-plan variant is exposed for fairness in the bench harness).
-pub fn fwht(data: &mut [f32]) {
+pub fn fwht_recursive(data: &mut [f32]) {
     let plan = Plan::build(data.len());
     plan.execute(data);
 }
@@ -112,17 +157,64 @@ pub fn fwht(data: &mut [f32]) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fwht::naive;
 
     #[test]
-    fn matches_naive() {
+    fn entry_matches_recursive_definition_small() {
+        // H_1 = [[1,1],[1,-1]]
+        assert_eq!(entry(0, 0), 1.0);
+        assert_eq!(entry(0, 1), 1.0);
+        assert_eq!(entry(1, 0), 1.0);
+        assert_eq!(entry(1, 1), -1.0);
+        // H_2 block structure: H[2..4][2..4] = -H[0..2][0..2]
+        for i in 0..2 {
+            for j in 0..2 {
+                assert_eq!(entry(i + 2, j + 2), -entry(i, j));
+                assert_eq!(entry(i + 2, j), entry(i, j));
+                assert_eq!(entry(i, j + 2), entry(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn naive_rows_are_orthogonal() {
+        let n = 64;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let dot: f32 = (0..n).map(|k| entry(i, k) * entry(j, k)).sum();
+                assert_eq!(dot, 0.0, "rows {i},{j}");
+            }
+        }
+    }
+
+    #[test]
+    fn naive_transform_of_ones_is_scaled_impulse() {
+        let n = 128;
+        let mut x = vec![1.0f32; n];
+        fwht_naive(&mut x);
+        assert_eq!(x[0], n as f32);
+        assert!(x[1..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn naive_small_sizes_by_hand() {
+        let mut x = vec![3.0f32, 5.0];
+        fwht_naive(&mut x);
+        assert_eq!(x, vec![8.0, -2.0]);
+        let mut y = vec![1.0f32, 2.0, 3.0, 4.0];
+        fwht_naive(&mut y);
+        // H_2 · [1,2,3,4] = [10, -2, -4, 0]
+        assert_eq!(y, vec![10.0, -2.0, -4.0, 0.0]);
+    }
+
+    #[test]
+    fn recursive_matches_naive() {
         for log_n in 0..=12 {
             let n = 1usize << log_n;
             let x: Vec<f32> = (0..n).map(|i| ((i * 37 + 11) % 17) as f32 - 8.0).collect();
             let mut a = x.clone();
             let mut b = x;
-            fwht(&mut a);
-            naive::fwht(&mut b);
+            fwht_recursive(&mut a);
+            fwht_naive(&mut b);
             for (u, v) in a.iter().zip(b.iter()) {
                 assert!((u - v).abs() < 1e-3 * v.abs().max(1.0), "n={n}");
             }
@@ -153,8 +245,8 @@ mod tests {
             let x: Vec<f32> = (0..n).map(|i| (i as f32) - 1.5).collect();
             let mut a = x.clone();
             let mut b = x;
-            fwht(&mut a);
-            naive::fwht(&mut b);
+            fwht_recursive(&mut a);
+            fwht_naive(&mut b);
             assert_eq!(a, b, "n={n}");
         }
     }

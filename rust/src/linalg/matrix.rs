@@ -77,6 +77,18 @@ impl Matrix {
         &mut self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// Reshape in place to `rows × cols`, reusing the existing buffer
+    /// capacity (new cells are zero; surviving cells keep whatever
+    /// they held — callers that reuse a matrix as an output buffer
+    /// overwrite every element anyway). Shrinking then growing back
+    /// never reallocates, which is what makes a pooled output matrix
+    /// allocation-free across ragged mini-batches.
+    pub fn resize(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
+    }
+
     /// Transposed copy.
     pub fn transpose(&self) -> Matrix {
         let mut t = Matrix::zeros(self.cols, self.rows);
@@ -192,5 +204,18 @@ mod tests {
     #[should_panic]
     fn from_vec_shape_checked() {
         Matrix::from_vec(2, 2, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn resize_reuses_capacity() {
+        let mut m = Matrix::zeros(8, 4);
+        let cap = m.data.capacity();
+        let ptr = m.data.as_ptr();
+        m.resize(3, 4);
+        assert_eq!(m.shape(), (3, 4));
+        m.resize(8, 4);
+        assert_eq!(m.shape(), (8, 4));
+        assert_eq!(m.data.capacity(), cap);
+        assert!(std::ptr::eq(ptr, m.data.as_ptr()));
     }
 }

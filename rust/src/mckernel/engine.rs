@@ -1,0 +1,283 @@
+//! The expansion executor: one engine behind every consumer of the
+//! McKernel feature map.
+//!
+//! An [`ExpansionEngine`] carries a compiled [`ExpansionPlan`] plus a
+//! single exactly-sized scratch pool, and executes `φ(X)` for **any**
+//! row count — 1 (the serving path), a shard (the data-parallel
+//! trainer), or a full mini-batch — through the one pipeline the plan
+//! compiled to. `McKernel`'s public transform methods, the
+//! `Featurizer`, the KRR solver, the prefetch pipeline, the feature
+//! server and the bench harness are all thin wrappers over
+//! [`ExpansionEngine::execute`]; none of them sizes scratch or picks
+//! an FWHT path anymore.
+//!
+//! The engine does not own the feature map: coefficients live in
+//! [`McKernel`] (shared freely via `Arc`), the engine owns only the
+//! mutable execution state. `execute` verifies plan/map geometry
+//! agreement, so a plan compiled for one map cannot silently run
+//! against another.
+
+use super::feature_map::McKernel;
+use super::plan::{ExpansionPlan, FwhtDispatch};
+use crate::linalg::Matrix;
+use crate::util::fastmath;
+
+/// Executor for one [`ExpansionPlan`]: owns the plan plus its scratch
+/// pool, allocated once at construction and never grown. Hot paths
+/// (`execute`, `execute_matrix`) are allocation-free.
+#[derive(Debug, Clone)]
+pub struct ExpansionEngine {
+    plan: ExpansionPlan,
+    scratch: Vec<f32>,
+}
+
+impl ExpansionEngine {
+    /// Engine for an already-compiled plan.
+    pub fn with_plan(plan: ExpansionPlan) -> ExpansionEngine {
+        let scratch = vec![0.0; plan.scratch_floats()];
+        ExpansionEngine { plan, scratch }
+    }
+
+    /// Compile-and-build for `map`, expecting ~`rows_hint` rows per
+    /// call (see [`ExpansionPlan::new`]).
+    pub fn new(map: &McKernel, rows_hint: usize) -> ExpansionEngine {
+        ExpansionEngine::with_plan(ExpansionPlan::new(map.config(), rows_hint))
+    }
+
+    /// Like [`ExpansionEngine::new`] with the `1/√(n·E)` estimator
+    /// scaling folded into the feature write.
+    pub fn normalized(map: &McKernel, rows_hint: usize) -> ExpansionEngine {
+        ExpansionEngine::with_plan(ExpansionPlan::new(map.config(), rows_hint).normalized())
+    }
+
+    /// Engine forced onto the per-row libm path — the correctness
+    /// oracle for the batched pipeline and the bench baseline.
+    pub fn per_row_oracle(map: &McKernel) -> ExpansionEngine {
+        ExpansionEngine::with_plan(ExpansionPlan::per_row(map.config()))
+    }
+
+    /// The compiled plan this engine executes.
+    pub fn plan(&self) -> &ExpansionPlan {
+        &self.plan
+    }
+
+    /// Current scratch-pool size in f32 elements (always exactly
+    /// [`ExpansionPlan::scratch_floats`]; checked on every execute).
+    pub fn scratch_floats(&self) -> usize {
+        self.scratch.len()
+    }
+
+    /// Compute `φ` for `rows` row-major inputs (`xs` is
+    /// `(rows, src_cols)` with `src_cols` = the plan's input dim —
+    /// zero-padded internally — or exactly the padded dim) into `out`
+    /// (`(rows, feature_dim)`). Output layout per row, expansion `e`:
+    /// `out[e·2n .. e·2n+n] = cos(Ẑ_e x̂)·s`,
+    /// `out[e·2n+n .. (e+1)·2n] = sin(Ẑ_e x̂)·s` with `s` the plan's
+    /// folded post-scale.
+    ///
+    /// Works for any `rows` (1, a shard, a full batch) and is
+    /// invariant to how rows are split across calls: executing
+    /// disjoint shards into the same buffer is bit-identical to one
+    /// full-batch call.
+    pub fn execute(
+        &mut self,
+        map: &McKernel,
+        xs: &[f32],
+        rows: usize,
+        src_cols: usize,
+        out: &mut [f32],
+    ) {
+        assert!(
+            self.plan.matches(map),
+            "plan geometry (S={}, n={}, E={}) does not match the map (S={}, n={}, E={})",
+            self.plan.input_dim(),
+            self.plan.padded_dim(),
+            self.plan.expansions(),
+            map.input_dim(),
+            map.padded_dim(),
+            map.expansions()
+        );
+        let n = self.plan.padded_dim();
+        assert!(
+            src_cols == self.plan.input_dim() || src_cols == n,
+            "input width {} (expect {} or {})",
+            src_cols,
+            self.plan.input_dim(),
+            n
+        );
+        assert_eq!(xs.len(), rows * src_cols, "input length");
+        assert_eq!(out.len(), rows * self.plan.feature_dim(), "output length");
+        // No-realloc invariant: the pool was sized exactly at build
+        // time and execute only ever slices into it.
+        assert_eq!(
+            self.scratch.len(),
+            self.plan.scratch_floats(),
+            "engine scratch does not match its plan"
+        );
+        let scratch_ptr = self.scratch.as_ptr();
+        match self.plan.dispatch() {
+            FwhtDispatch::PerRow => self.run_per_row(map, xs, rows, src_cols, out),
+            FwhtDispatch::Batched => self.run_batched(map, xs, rows, src_cols, out),
+        }
+        debug_assert!(
+            std::ptr::eq(scratch_ptr, self.scratch.as_ptr()),
+            "engine scratch reallocated during execute"
+        );
+    }
+
+    /// Matrix-shaped convenience over [`ExpansionEngine::execute`].
+    pub fn execute_matrix(&mut self, map: &McKernel, x: &Matrix, out: &mut Matrix) {
+        assert_eq!(out.shape(), (x.rows(), self.plan.feature_dim()), "output shape");
+        let (rows, src_cols) = x.shape();
+        self.execute(map, x.data(), rows, src_cols, out.data_mut());
+    }
+
+    /// The per-row path: pad, `Ẑx̂` per expansion, libm `sin_cos`,
+    /// post-scale fused into the feature write. This is the pipeline
+    /// the batched path is validated against (≤1e-6 abs on tested
+    /// shapes; the only difference is the trig kernel).
+    fn run_per_row(
+        &mut self,
+        map: &McKernel,
+        xs: &[f32],
+        rows: usize,
+        src_cols: usize,
+        out: &mut [f32],
+    ) {
+        let n = self.plan.padded_dim();
+        let fd = self.plan.feature_dim();
+        let post_scale = self.plan.post_scale();
+        let (padded, tmp) = self.scratch.split_at_mut(n);
+        for r in 0..rows {
+            padded[..src_cols].copy_from_slice(&xs[r * src_cols..(r + 1) * src_cols]);
+            padded[src_cols..].fill(0.0);
+            let row_out = &mut out[r * fd..(r + 1) * fd];
+            for (e, block) in map.blocks().iter().enumerate() {
+                let seg = &mut row_out[e * 2 * n..(e + 1) * 2 * n];
+                let (cos_half, sin_half) = seg.split_at_mut(n);
+                // Ẑx̂ into cos_half (as scratch), then write the pair.
+                // sin_cos computes both trig values in one libm call —
+                // the trig map dominates the per-sample profile.
+                block.apply(padded, cos_half, tmp);
+                for i in 0..n {
+                    let (s, c) = cos_half[i].sin_cos();
+                    sin_half[i] = s * post_scale;
+                    cos_half[i] = c * post_scale;
+                }
+            }
+        }
+    }
+
+    /// The batched pipeline: row-tiles of `plan.lanes()` rows stream
+    /// through the fused Fastfood passes (B on the transpose-in load,
+    /// Π∘G as contiguous stream copies), the calibration diagonal, the
+    /// polynomial trig map, and a transpose-out write with the post-
+    /// scale fused in — no separate normalization pass. Lanes never
+    /// interact, so results are independent of the tile grouping.
+    fn run_batched(
+        &mut self,
+        map: &McKernel,
+        xs: &[f32],
+        rows: usize,
+        src_cols: usize,
+        out: &mut [f32],
+    ) {
+        let n = self.plan.padded_dim();
+        let fd = self.plan.feature_dim();
+        let post_scale = self.plan.post_scale();
+        let lanes_max = self.plan.lanes();
+        let (tin, rest) = self.scratch.split_at_mut(n * lanes_max);
+        let (z, sin) = rest.split_at_mut(n * lanes_max);
+        let mut base = 0;
+        while base < rows {
+            let lanes = lanes_max.min(rows - base);
+            let nl = n * lanes;
+            let xslice = &xs[base * src_cols..(base + lanes) * src_cols];
+            for (e, block) in map.blocks().iter().enumerate() {
+                block.apply_tile(xslice, src_cols, lanes, tin, z);
+                // calibration diagonal: contiguous per-coefficient runs
+                let scale = block.scale();
+                for j in 0..n {
+                    let sj = scale[j];
+                    for v in &mut z[j * lanes..(j + 1) * lanes] {
+                        *v *= sj;
+                    }
+                }
+                // polynomial trig over the whole tile; tin is free by
+                // now and becomes the cosine buffer
+                fastmath::sin_cos_batch(&z[..nl], &mut sin[..nl], &mut tin[..nl]);
+                // transpose-out into the (cos, sin) halves, any output
+                // normalization fused into this single write
+                for l in 0..lanes {
+                    let seg = &mut out[(base + l) * fd + e * 2 * n..][..2 * n];
+                    let (cos_half, sin_half) = seg.split_at_mut(n);
+                    for j in 0..n {
+                        cos_half[j] = tin[j * lanes + l] * post_scale;
+                        sin_half[j] = sin[j * lanes + l] * post_scale;
+                    }
+                }
+            }
+            base += lanes;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mckernel::McKernelFactory;
+
+    fn map(dim: usize, e: usize) -> McKernel {
+        McKernelFactory::new(dim).expansions(e).sigma(1.0).rbf().seed(11).build()
+    }
+
+    #[test]
+    fn engine_matches_thin_wrappers() {
+        let m = map(12, 2);
+        let x = Matrix::from_fn(5, 12, |r, c| ((r * 7 + c) % 9) as f32 * 0.1);
+        let mut eng = ExpansionEngine::new(&m, 5);
+        let mut out = Matrix::zeros(5, m.feature_dim());
+        eng.execute_matrix(&m, &x, &mut out);
+        assert_eq!(out.data(), m.transform_batch(&x).data());
+    }
+
+    #[test]
+    fn shard_splits_are_bit_identical_to_full_batch() {
+        let m = map(20, 1);
+        let x = Matrix::from_fn(9, 20, |r, c| ((r * 13 + c) % 11) as f32 * 0.05);
+        let fd = m.feature_dim();
+        let mut full = vec![0.0f32; 9 * fd];
+        let mut eng = ExpansionEngine::new(&m, 9);
+        eng.execute(&m, x.data(), 9, 20, &mut full);
+        let mut sharded = vec![0.0f32; 9 * fd];
+        for (lo, hi) in [(0usize, 4usize), (4, 7), (7, 9)] {
+            eng.execute(
+                &m,
+                &x.data()[lo * 20..hi * 20],
+                hi - lo,
+                20,
+                &mut sharded[lo * fd..hi * fd],
+            );
+        }
+        assert_eq!(full, sharded);
+    }
+
+    #[test]
+    fn zero_rows_is_a_no_op() {
+        let m = map(8, 1);
+        let mut eng = ExpansionEngine::new(&m, 4);
+        let mut out: Vec<f32> = vec![];
+        eng.execute(&m, &[], 0, 8, &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "plan geometry")]
+    fn mismatched_map_rejected() {
+        let a = map(12, 2);
+        let b = map(16, 2);
+        let mut eng = ExpansionEngine::new(&a, 4);
+        let mut out = vec![0.0f32; b.feature_dim()];
+        let x = vec![0.0f32; 16];
+        eng.execute(&b, &x, 1, 16, &mut out);
+    }
+}

@@ -4,7 +4,7 @@
 use super::diag::{binary_diag, calibration_diag, gauss_diag};
 use super::kernel::Kernel;
 use crate::fwht;
-use crate::fwht::batch::{fwht_colmajor, tile_lanes};
+use crate::fwht::batch::fwht_colmajor;
 use crate::hash::hash_rng::streams;
 use crate::hash::HashRng;
 use crate::rand::fisher_yates::random_permutation;
@@ -126,54 +126,6 @@ impl FastfoodBlock {
         }
         // v = H v
         fwht_colmajor(tout, n, lanes);
-    }
-
-    /// Batched [`FastfoodBlock::apply`]: `Ẑ` on `rows` padded inputs
-    /// (row-major `(rows, n)`), tile by tile. Bit-identical to the
-    /// per-row path (lanes never interact).
-    ///
-    /// The feature pipeline does not go through this — it drives
-    /// [`FastfoodBlock::apply_tile`] directly so it can fuse the trig
-    /// map into the transpose-out
-    /// (`McKernel::batch_into_scaled` in `feature_map.rs`, which
-    /// mirrors this tiling loop and the `tile_lanes(n) ≤ 1` per-row
-    /// fallback; keep the two in sync).
-    pub fn apply_batch(&self, xs: &[f32], out: &mut [f32], rows: usize) {
-        let n = self.n;
-        assert_eq!(xs.len(), rows * n, "input shape");
-        assert_eq!(out.len(), rows * n, "output shape");
-        let lanes_max = tile_lanes(n);
-        if lanes_max <= 1 {
-            // Transform too large to tile: the per-row engine's own
-            // cache-blocked bottom phase wins; lane-1 tiles would only
-            // add transpose copies.
-            let mut tmp = vec![0.0f32; n];
-            for r in 0..rows {
-                self.apply(&xs[r * n..(r + 1) * n], &mut out[r * n..(r + 1) * n], &mut tmp);
-            }
-            return;
-        }
-        let mut tin = vec![0.0f32; n * lanes_max];
-        let mut tout = vec![0.0f32; n * lanes_max];
-        let mut base = 0;
-        while base < rows {
-            let lanes = lanes_max.min(rows - base);
-            self.apply_tile(
-                &xs[base * n..(base + lanes) * n],
-                n,
-                lanes,
-                &mut tin,
-                &mut tout,
-            );
-            // calibration diagonal fused into the transpose-out write
-            for l in 0..lanes {
-                let row = &mut out[(base + l) * n..(base + l + 1) * n];
-                for (j, v) in row.iter_mut().enumerate() {
-                    *v = tout[j * lanes + l] * self.scale[j];
-                }
-            }
-            base += lanes;
-        }
     }
 
     /// Accessors for cross-layer tests (Python L1/L2 must derive
@@ -300,19 +252,25 @@ mod tests {
     }
 
     #[test]
-    fn apply_batch_matches_apply_exactly() {
+    fn apply_tile_matches_apply_exactly() {
+        // multi-lane tile of full-width rows vs the per-row chain —
+        // lanes never interact, so agreement is exact (modulo the
+        // calibration diagonal the tile leaves to its consumer)
         let n = 64;
         let fb = block(4, n);
-        let rows = 7;
+        let lanes = 7;
         let mut rng = HashRng::new(11, 7);
-        let xs: Vec<f32> = (0..rows * n).map(|_| rng.next_f32() - 0.5).collect();
-        let mut batch = vec![0.0; rows * n];
-        fb.apply_batch(&xs, &mut batch, rows);
+        let xs: Vec<f32> = (0..lanes * n).map(|_| rng.next_f32() - 0.5).collect();
+        let mut tin = vec![0.0; n * lanes];
+        let mut tout = vec![0.0; n * lanes];
+        fb.apply_tile(&xs, n, lanes, &mut tin, &mut tout);
         let mut out = vec![0.0; n];
         let mut tmp = vec![0.0; n];
-        for r in 0..rows {
-            fb.apply(&xs[r * n..(r + 1) * n], &mut out, &mut tmp);
-            assert_eq!(&batch[r * n..(r + 1) * n], &out[..], "row {r}");
+        for l in 0..lanes {
+            fb.apply(&xs[l * n..(l + 1) * n], &mut out, &mut tmp);
+            for j in 0..n {
+                assert_eq!(tout[j * lanes + l] * fb.scale()[j], out[j], "lane {l} coeff {j}");
+            }
         }
     }
 

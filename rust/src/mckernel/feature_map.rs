@@ -1,41 +1,20 @@
 //! The full McKernel feature map: `E` stacked Fastfood expansions +
 //! the real feature map `φ(x) = [cos(Ẑx̂), sin(Ẑx̂)]` (paper Eq. 9,
 //! Figure 1).
+//!
+//! `McKernel` owns the hash-derived coefficients; *how* `φ` is
+//! computed — tile lanes, batch-vs-per-row dispatch, scratch sizing,
+//! normalization folding — is compiled once by
+//! [`crate::mckernel::plan::ExpansionPlan`] and executed by
+//! [`crate::mckernel::engine::ExpansionEngine`]. The transform
+//! methods here are thin wrappers that build a one-shot engine; hot
+//! paths hold a long-lived engine instead.
 
+use super::engine::ExpansionEngine;
 use super::expansion::FastfoodBlock;
 use super::factory::McKernelConfig;
-use crate::fwht::batch::tile_lanes;
 use crate::linalg::Matrix;
-use crate::util::fastmath;
 use crate::util::pow2::next_pow2;
-
-/// Reusable scratch for the batched feature path: three column-major
-/// `(n, lanes)` tiles sized to stay L2-resident together. `tin`
-/// doubles as the cosine buffer once the second FWHT has consumed it.
-#[derive(Debug, Clone)]
-pub struct BatchScratch {
-    lanes: usize,
-    tin: Vec<f32>,
-    z: Vec<f32>,
-    sin: Vec<f32>,
-}
-
-impl BatchScratch {
-    fn new(n: usize) -> BatchScratch {
-        let lanes = tile_lanes(n);
-        BatchScratch {
-            lanes,
-            tin: vec![0.0; n * lanes],
-            z: vec![0.0; n * lanes],
-            sin: vec![0.0; n * lanes],
-        }
-    }
-
-    /// Rows processed per tile.
-    pub fn lanes(&self) -> usize {
-        self.lanes
-    }
-}
 
 /// The McKernel feature generator (paper Figure 1's `mckernel(x)`).
 ///
@@ -87,205 +66,20 @@ impl McKernel {
         self.blocks.len()
     }
 
-    /// Per-expansion blocks (for cross-layer coefficient checks).
+    /// Per-expansion blocks (for cross-layer coefficient checks and
+    /// the expansion engine).
     pub fn blocks(&self) -> &[FastfoodBlock] {
         &self.blocks
     }
 
-    /// Scratch buffer pair sized for [`McKernel::transform_into`].
-    pub fn make_scratch(&self) -> (Vec<f32>, Vec<f32>) {
-        (vec![0.0; self.n], vec![0.0; self.n])
-    }
-
-    /// Compute `φ(x)` into `out` (`len == feature_dim()`), using the
-    /// caller's scratch (allocation-free hot path). `x.len()` must be
-    /// `input_dim` (padding applied internally) or exactly `n`.
-    ///
-    /// This is the per-row path with libm trig — the correctness
-    /// oracle the batched [`McKernel::transform_batch_into`] pipeline
-    /// is validated against (≤1e-5 abs).
-    pub fn transform_into(
-        &self,
-        x: &[f32],
-        out: &mut [f32],
-        scratch: &mut (Vec<f32>, Vec<f32>),
-    ) {
-        self.transform_into_scaled(x, out, scratch, 1.0);
-    }
-
-    /// Per-row transform with `post_scale` fused into the feature
-    /// write — one pass over the output whether or not the caller
-    /// wants the `1/√(n·E)` estimator scaling.
-    fn transform_into_scaled(
-        &self,
-        x: &[f32],
-        out: &mut [f32],
-        scratch: &mut (Vec<f32>, Vec<f32>),
-        post_scale: f32,
-    ) {
-        let n = self.n;
-        assert!(
-            x.len() == self.config.input_dim || x.len() == n,
-            "input length {} (expect {} or {})",
-            x.len(),
-            self.config.input_dim,
-            n
-        );
-        assert_eq!(out.len(), self.feature_dim(), "output length");
-        let (padded, tmp) = scratch;
-        padded[..x.len()].copy_from_slice(x);
-        padded[x.len()..].fill(0.0);
-        for (e, block) in self.blocks.iter().enumerate() {
-            let seg = &mut out[e * 2 * n..(e + 1) * 2 * n];
-            let (cos_half, sin_half) = seg.split_at_mut(n);
-            // Ẑx̂ into cos_half (as scratch), then write the pair.
-            // sin_cos computes both trig values in one libm call —
-            // the trig map dominates the per-sample profile (§Perf).
-            block.apply(padded, cos_half, tmp);
-            for i in 0..n {
-                let (s, c) = cos_half[i].sin_cos();
-                sin_half[i] = s * post_scale;
-                cos_half[i] = c * post_scale;
-            }
-        }
-    }
-
-    /// Allocating convenience wrapper over [`McKernel::transform_into`].
+    /// `φ(x)` through the per-row libm pipeline — the correctness
+    /// oracle the batched engine path is validated against (≤1e-6 abs
+    /// on tested shapes). `x.len()` must be `input_dim` (padding
+    /// applied internally) or exactly `n`. Allocating convenience;
+    /// hot paths hold an [`ExpansionEngine`] instead.
     pub fn transform(&self, x: &[f32]) -> Vec<f32> {
         let mut out = vec![0.0; self.feature_dim()];
-        let mut scratch = self.make_scratch();
-        self.transform_into(x, &mut out, &mut scratch);
-        out
-    }
-
-    /// Scratch for the batched path ([`McKernel::transform_batch_into`]).
-    pub fn make_batch_scratch(&self) -> BatchScratch {
-        BatchScratch::new(self.n)
-    }
-
-    /// Batched `φ(X)` into a preallocated matrix — the hot path for
-    /// the trainer, the prefetch pipeline and the feature server.
-    /// Allocation-free; matches the per-row oracle within 1e-5 abs
-    /// (polynomial trig), and is invariant to how rows are grouped
-    /// into tiles (lanes never interact).
-    pub fn transform_batch_into(&self, x: &Matrix, out: &mut Matrix, scratch: &mut BatchScratch) {
-        assert_eq!(out.shape(), (x.rows(), self.feature_dim()), "output shape");
-        let (rows, src_cols) = x.shape();
-        self.batch_into_scaled(x.data(), rows, src_cols, out.data_mut(), scratch, 1.0);
-    }
-
-    /// Batched `φ` over raw row-major slices: `xs` is `(rows,
-    /// src_cols)` with `src_cols` = `input_dim` (padded internally) or
-    /// `n`; `out` is `(rows, feature_dim)`. This is the core the
-    /// parallel featurizer drives with disjoint row ranges.
-    pub fn transform_batch_slice_into(
-        &self,
-        xs: &[f32],
-        rows: usize,
-        src_cols: usize,
-        out: &mut [f32],
-        scratch: &mut BatchScratch,
-    ) {
-        self.batch_into_scaled(xs, rows, src_cols, out, scratch, 1.0);
-    }
-
-    /// The batched pipeline: row-tiles of `scratch.lanes()` rows
-    /// stream through the fused Fastfood passes (B on the transpose-in
-    /// load, Π∘G as contiguous stream copies), the calibration
-    /// diagonal, the polynomial trig map, and a transpose-out write
-    /// with `post_scale` fused in — no separate normalization pass.
-    fn batch_into_scaled(
-        &self,
-        xs: &[f32],
-        rows: usize,
-        src_cols: usize,
-        out: &mut [f32],
-        scratch: &mut BatchScratch,
-        post_scale: f32,
-    ) {
-        let n = self.n;
-        assert!(
-            src_cols == self.config.input_dim || src_cols == n,
-            "input width {} (expect {} or {})",
-            src_cols,
-            self.config.input_dim,
-            n
-        );
-        assert_eq!(xs.len(), rows * src_cols, "input length");
-        let fd = self.feature_dim();
-        assert_eq!(out.len(), rows * fd, "output length");
-        let lanes_max = scratch.lanes;
-        if lanes_max <= 1 {
-            // Transform too large to tile (tile_lanes(n) == 1): the
-            // per-row engine's cache-blocked bottom phase is the right
-            // shape, and lane-1 transposes would only add copies.
-            // (`FastfoodBlock::apply_batch` mirrors this tiling loop
-            // and fallback for the linear stage; keep them in sync.)
-            let mut row_scratch = self.make_scratch();
-            for r in 0..rows {
-                self.transform_into_scaled(
-                    &xs[r * src_cols..(r + 1) * src_cols],
-                    &mut out[r * fd..(r + 1) * fd],
-                    &mut row_scratch,
-                    post_scale,
-                );
-            }
-            return;
-        }
-        let mut base = 0;
-        while base < rows {
-            let lanes = lanes_max.min(rows - base);
-            let nl = n * lanes;
-            let xslice = &xs[base * src_cols..(base + lanes) * src_cols];
-            for (e, block) in self.blocks.iter().enumerate() {
-                block.apply_tile(xslice, src_cols, lanes, &mut scratch.tin, &mut scratch.z);
-                let z = &mut scratch.z[..nl];
-                // calibration diagonal: contiguous per-coefficient runs
-                let scale = block.scale();
-                for j in 0..n {
-                    let sj = scale[j];
-                    for v in &mut z[j * lanes..(j + 1) * lanes] {
-                        *v *= sj;
-                    }
-                }
-                // polynomial trig over the whole tile; tin is free by
-                // now and becomes the cosine buffer
-                let sin_t = &mut scratch.sin[..nl];
-                let cos_t = &mut scratch.tin[..nl];
-                fastmath::sin_cos_batch(z, sin_t, cos_t);
-                // transpose-out into the (cos, sin) halves, any output
-                // normalization fused into this single write
-                for l in 0..lanes {
-                    let seg = &mut out[(base + l) * fd + e * 2 * n..][..2 * n];
-                    let (cos_half, sin_half) = seg.split_at_mut(n);
-                    for j in 0..n {
-                        cos_half[j] = cos_t[j * lanes + l] * post_scale;
-                        sin_half[j] = sin_t[j * lanes + l] * post_scale;
-                    }
-                }
-            }
-            base += lanes;
-        }
-    }
-
-    /// Transform every row of `(batch, input_dim)` into
-    /// `(batch, feature_dim)` via the batched pipeline.
-    pub fn transform_batch(&self, x: &Matrix) -> Matrix {
-        assert_eq!(x.cols(), self.config.input_dim, "batch feature width");
-        let mut out = Matrix::zeros(x.rows(), self.feature_dim());
-        let mut scratch = self.make_batch_scratch();
-        self.transform_batch_into(x, &mut out, &mut scratch);
-        out
-    }
-
-    /// Batched `φ̄(X)` with the `1/√(n·E)` estimator scaling fused
-    /// into the feature write (no second pass over the output).
-    pub fn transform_batch_normalized(&self, x: &Matrix) -> Matrix {
-        assert_eq!(x.cols(), self.config.input_dim, "batch feature width");
-        let s = 1.0 / ((self.n * self.expansions()) as f32).sqrt();
-        let mut out = Matrix::zeros(x.rows(), self.feature_dim());
-        let mut scratch = self.make_batch_scratch();
-        self.batch_into_scaled(x.data(), x.rows(), x.cols(), out.data_mut(), &mut scratch, s);
+        ExpansionEngine::per_row_oracle(self).execute(self, x, 1, x.len(), &mut out);
         out
     }
 
@@ -296,9 +90,40 @@ impl McKernel {
     /// into the feature write, not a second pass.
     pub fn transform_normalized(&self, x: &[f32]) -> Vec<f32> {
         let mut out = vec![0.0; self.feature_dim()];
-        let mut scratch = self.make_scratch();
-        let s = 1.0 / ((self.n * self.expansions()) as f32).sqrt();
-        self.transform_into_scaled(x, &mut out, &mut scratch, s);
+        ExpansionEngine::with_plan(
+            super::plan::ExpansionPlan::per_row(&self.config).normalized(),
+        )
+        .execute(self, x, 1, x.len(), &mut out);
+        out
+    }
+
+    /// Batched `φ(X)` into a preallocated matrix through the caller's
+    /// engine — the hot path for the trainer, the prefetch pipeline
+    /// and the feature server. Allocation-free; matches the per-row
+    /// oracle within the trig-kernel budget and is invariant to how
+    /// rows are grouped into tiles (lanes never interact).
+    pub fn transform_batch_into(&self, x: &Matrix, out: &mut Matrix, engine: &mut ExpansionEngine) {
+        engine.execute_matrix(self, x, out);
+    }
+
+    /// Transform every row of `(batch, input_dim)` into
+    /// `(batch, feature_dim)` via the compiled engine path
+    /// (allocating convenience wrapper).
+    pub fn transform_batch(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols(), self.config.input_dim, "batch feature width");
+        let mut out = Matrix::zeros(x.rows(), self.feature_dim());
+        let mut engine = ExpansionEngine::new(self, x.rows());
+        engine.execute_matrix(self, x, &mut out);
+        out
+    }
+
+    /// Batched `φ̄(X)` with the `1/√(n·E)` estimator scaling fused
+    /// into the feature write (no second pass over the output).
+    pub fn transform_batch_normalized(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols(), self.config.input_dim, "batch feature width");
+        let mut out = Matrix::zeros(x.rows(), self.feature_dim());
+        let mut engine = ExpansionEngine::normalized(self, x.rows());
+        engine.execute_matrix(self, x, &mut out);
         out
     }
 
@@ -449,16 +274,13 @@ mod tests {
     fn batch_into_handles_tail_tiles() {
         // rows not a multiple of the tile width exercise the tail path
         let m = map(12, 1, 1.0, 14);
-        let scratch_lanes = m.make_batch_scratch().lanes();
-        let rows = scratch_lanes + 3;
+        let mut engine = ExpansionEngine::new(&m, usize::MAX);
+        let rows = engine.plan().lanes() + 3;
         let x = Matrix::from_fn(rows, 12, |r, c| ((r + 3 * c) % 7) as f32 * 0.05);
         let mut out = Matrix::zeros(rows, m.feature_dim());
-        let mut scratch = m.make_batch_scratch();
-        m.transform_batch_into(&x, &mut out, &mut scratch);
-        let mut row_scratch = m.make_scratch();
-        let mut want = vec![0.0; m.feature_dim()];
+        m.transform_batch_into(&x, &mut out, &mut engine);
         for r in 0..rows {
-            m.transform_into(x.row(r), &mut want, &mut row_scratch);
+            let want = m.transform(x.row(r));
             for (a, b) in out.row(r).iter().zip(&want) {
                 assert!((a - b).abs() < 1e-5, "row {r}");
             }

@@ -6,22 +6,36 @@
 //! `MMD²(P,Q) ≈ ‖μ̂_P − μ̂_Q‖²` — O((m+n)·D) instead of the quadratic
 //! exact estimator, exactly the speedup random features buy.
 
+use super::engine::ExpansionEngine;
 use super::feature_map::McKernel;
 use crate::hash::HashRng;
 use crate::linalg::Matrix;
 
 /// Mean embedding of a sample under the normalized feature map.
+///
+/// Rows stream through the engine one full tile at a time, so memory
+/// stays `O(lanes · D)` while the trig map and butterflies still run
+/// as wide multi-row sweeps.
 pub fn mean_embedding(map: &McKernel, x: &Matrix) -> Vec<f32> {
     let n = x.rows();
     assert!(n > 0, "empty sample");
-    let mut acc = vec![0.0f64; map.feature_dim()];
-    let mut out = vec![0.0f32; map.feature_dim()];
-    let mut scratch = map.make_scratch();
-    for r in 0..n {
-        map.transform_into(x.row(r), &mut out, &mut scratch);
-        for (a, v) in acc.iter_mut().zip(&out) {
-            *a += *v as f64;
+    let fd = map.feature_dim();
+    let mut acc = vec![0.0f64; fd];
+    let mut engine = ExpansionEngine::new(map, n);
+    let lanes = engine.plan().lanes().max(1);
+    let mut out = vec![0.0f32; lanes * fd];
+    let mut base = 0;
+    while base < n {
+        let rows = lanes.min(n - base);
+        let chunk = &x.data()[base * x.cols()..(base + rows) * x.cols()];
+        let out = &mut out[..rows * fd];
+        engine.execute(map, chunk, rows, x.cols(), out);
+        for row in out.chunks_exact(fd) {
+            for (a, v) in acc.iter_mut().zip(row) {
+                *a += *v as f64;
+            }
         }
+        base += rows;
     }
     let norm = 1.0 / (n as f64 * ((map.padded_dim() * map.expansions()) as f64).sqrt());
     acc.into_iter().map(|v| (v * norm) as f32).collect()

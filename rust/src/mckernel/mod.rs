@@ -18,13 +18,17 @@
 //! paper's compact-distribution story (§7).
 
 pub mod diag;
+pub mod engine;
 pub mod expansion;
 pub mod factory;
 pub mod feature_map;
 pub mod kernel;
 pub mod mmd;
+pub mod plan;
 
+pub use engine::ExpansionEngine;
 pub use expansion::FastfoodBlock;
 pub use factory::{McKernelConfig, McKernelFactory};
-pub use feature_map::{BatchScratch, McKernel};
+pub use feature_map::McKernel;
 pub use kernel::Kernel;
+pub use plan::{ExpansionPlan, FwhtDispatch};

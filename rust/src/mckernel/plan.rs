@@ -1,0 +1,237 @@
+//! Compiled expansion plans: every layout/dispatch decision of the
+//! feature pipeline, resolved **once** per (config, row-count hint)
+//! instead of ad hoc at each call site.
+//!
+//! Prior to this module the batch-vs-per-row fallback, the tile lane
+//! count, the scratch sizing and the normalization folding were each
+//! re-derived independently by `McKernel`, the `Featurizer`, the
+//! shard trainer, the KRR solver, the prefetch pipeline and the
+//! feature server. An [`ExpansionPlan`] pins them all down up front;
+//! `mckernel::engine::ExpansionEngine` is the single executor that
+//! carries a plan plus its exactly-sized scratch pool. Future
+//! backends (SIMD intrinsics, GPU, quantized features) add a
+//! [`FwhtDispatch`] variant here and an executor arm there — no
+//! consumer changes.
+
+use super::factory::McKernelConfig;
+use super::feature_map::McKernel;
+use crate::fwht::tile_lanes;
+use crate::util::pow2::next_pow2;
+
+/// Which execution path the plan compiled to — **the** batch-vs-row
+/// fallback decision point. Nothing outside `mckernel::{plan, engine}`
+/// may choose an FWHT engine for the expansion pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FwhtDispatch {
+    /// Column-major row-tiles through `fwht::batch` with the
+    /// polynomial trig map — the mini-batch hot path.
+    Batched,
+    /// Per-row cache-blocked `fwht::optimized` with libm trig — the
+    /// correctness oracle, and the fallback when the transform is too
+    /// large to tile (`tile_lanes(n) == 1`: lane-1 transposes would
+    /// only add copies around the per-row engine's own cache
+    /// blocking).
+    PerRow,
+}
+
+/// A compiled execution plan for one feature-map geometry.
+///
+/// Built from a [`McKernelConfig`] plus a row-count hint; resolves
+/// padding, tile lanes, the FWHT dispatch, exact scratch sizes and
+/// whether the `1/√(n·E)` estimator normalization is folded into the
+/// feature write. Plans are cheap plain data (no coefficient
+/// materialization) and deterministic: equal inputs compile to equal
+/// plans on any machine.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExpansionPlan {
+    input_dim: usize,
+    padded_dim: usize,
+    expansions: usize,
+    lanes: usize,
+    dispatch: FwhtDispatch,
+    normalized: bool,
+}
+
+impl ExpansionPlan {
+    /// Compile a plan for `config`, expecting calls of about
+    /// `rows_hint` rows (the hint caps the tile width so scratch never
+    /// outgrows the workload; any actual row count still executes
+    /// correctly — the batched pipeline is invariant to how rows are
+    /// grouped into tiles).
+    ///
+    /// This constructor is the codebase's **only** batch-vs-per-row
+    /// dispatch decision.
+    pub fn new(config: &McKernelConfig, rows_hint: usize) -> ExpansionPlan {
+        config.validate();
+        let n = next_pow2(config.input_dim);
+        let full = tile_lanes(n);
+        let (dispatch, lanes) = if full <= 1 {
+            (FwhtDispatch::PerRow, 1)
+        } else {
+            (FwhtDispatch::Batched, full.min(rows_hint.max(1)))
+        };
+        ExpansionPlan {
+            input_dim: config.input_dim,
+            padded_dim: n,
+            expansions: config.expansions,
+            lanes,
+            dispatch,
+            normalized: false,
+        }
+    }
+
+    /// Compile a plan forced onto the per-row libm path — the
+    /// correctness oracle the batched pipeline is validated against,
+    /// and the per-row baseline the bench harness times. An explicit
+    /// override, not a second decision point.
+    pub fn per_row(config: &McKernelConfig) -> ExpansionPlan {
+        config.validate();
+        ExpansionPlan {
+            input_dim: config.input_dim,
+            padded_dim: next_pow2(config.input_dim),
+            expansions: config.expansions,
+            lanes: 1,
+            dispatch: FwhtDispatch::PerRow,
+            normalized: false,
+        }
+    }
+
+    /// Fold the `1/√(n·E)` Rahimi–Recht estimator scaling into the
+    /// feature write (one pass over the output, no post-scaling pass).
+    pub fn normalized(mut self) -> ExpansionPlan {
+        self.normalized = true;
+        self
+    }
+
+    /// Raw input dimension `S`.
+    pub fn input_dim(&self) -> usize {
+        self.input_dim
+    }
+
+    /// Padded dimension `[S]₂`.
+    pub fn padded_dim(&self) -> usize {
+        self.padded_dim
+    }
+
+    /// Number of expansions `E`.
+    pub fn expansions(&self) -> usize {
+        self.expansions
+    }
+
+    /// Output feature dimension `2·[S]₂·E`.
+    pub fn feature_dim(&self) -> usize {
+        2 * self.padded_dim * self.expansions
+    }
+
+    /// Rows per tile (1 on the per-row path).
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// The compiled execution path.
+    pub fn dispatch(&self) -> FwhtDispatch {
+        self.dispatch
+    }
+
+    /// Whether the `1/√(n·E)` normalization is folded into the write.
+    pub fn is_normalized(&self) -> bool {
+        self.normalized
+    }
+
+    /// The scale folded into every feature write (`1.0` when not
+    /// normalized).
+    pub fn post_scale(&self) -> f32 {
+        if self.normalized {
+            1.0 / ((self.padded_dim * self.expansions) as f32).sqrt()
+        } else {
+            1.0
+        }
+    }
+
+    /// Exact scratch requirement of the executor, in f32 elements:
+    /// three `(n, lanes)` tiles for the batched path (transpose-in /
+    /// Ẑx / sine; the first doubles as the cosine buffer), or the
+    /// `(padded, tmp)` pair for the per-row path. The engine allocates
+    /// exactly this once and never reallocates during `execute`.
+    pub fn scratch_floats(&self) -> usize {
+        match self.dispatch {
+            FwhtDispatch::Batched => 3 * self.padded_dim * self.lanes,
+            FwhtDispatch::PerRow => 2 * self.padded_dim,
+        }
+    }
+
+    /// Whether this plan describes `map`'s geometry (guards against
+    /// executing a plan compiled for a different feature map).
+    pub fn matches(&self, map: &McKernel) -> bool {
+        self.input_dim == map.input_dim()
+            && self.padded_dim == map.padded_dim()
+            && self.expansions == map.expansions()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mckernel::kernel::Kernel;
+
+    fn config(input_dim: usize) -> McKernelConfig {
+        McKernelConfig {
+            input_dim,
+            expansions: 2,
+            sigma: 1.0,
+            kernel: Kernel::Rbf,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn small_geometry_compiles_to_batched() {
+        let p = ExpansionPlan::new(&config(784), 64);
+        assert_eq!(p.padded_dim(), 1024);
+        assert_eq!(p.feature_dim(), 2 * 1024 * 2);
+        assert_eq!(p.dispatch(), FwhtDispatch::Batched);
+        assert_eq!(p.lanes(), tile_lanes(1024));
+        assert_eq!(p.scratch_floats(), 3 * 1024 * p.lanes());
+        assert_eq!(p.post_scale(), 1.0);
+    }
+
+    #[test]
+    fn rows_hint_caps_lanes_but_not_dispatch() {
+        let p = ExpansionPlan::new(&config(784), 4);
+        assert_eq!(p.dispatch(), FwhtDispatch::Batched);
+        assert_eq!(p.lanes(), 4);
+        // hint 0 degrades to 1 lane, still batched
+        let p0 = ExpansionPlan::new(&config(784), 0);
+        assert_eq!(p0.lanes(), 1);
+        assert_eq!(p0.dispatch(), FwhtDispatch::Batched);
+    }
+
+    #[test]
+    fn huge_transform_compiles_to_per_row() {
+        // next_pow2(40_000) = 65536 ⇒ tile_lanes == 1 ⇒ per-row path
+        let p = ExpansionPlan::new(&config(40_000), 64);
+        assert_eq!(p.dispatch(), FwhtDispatch::PerRow);
+        assert_eq!(p.lanes(), 1);
+        assert_eq!(p.scratch_floats(), 2 * 65536);
+    }
+
+    #[test]
+    fn per_row_override_and_normalization_fold() {
+        let p = ExpansionPlan::per_row(&config(784));
+        assert_eq!(p.dispatch(), FwhtDispatch::PerRow);
+        assert_eq!(p.scratch_floats(), 2 * 1024);
+        assert!(!p.is_normalized());
+        let pn = p.normalized();
+        assert!(pn.is_normalized());
+        let want = 1.0 / ((1024.0f32 * 2.0).sqrt());
+        assert_eq!(pn.post_scale(), want);
+    }
+
+    #[test]
+    fn plans_are_deterministic_plain_data() {
+        let a = ExpansionPlan::new(&config(300), 10);
+        let b = ExpansionPlan::new(&config(300), 10);
+        assert_eq!(a, b);
+        assert_ne!(a, ExpansionPlan::new(&config(300), 11));
+    }
+}

@@ -8,7 +8,7 @@
 use crate::linalg::cholesky::solve_spd;
 use crate::linalg::ops::gemm_nt;
 use crate::linalg::Matrix;
-use crate::mckernel::{Kernel, McKernel};
+use crate::mckernel::{ExpansionEngine, Kernel, McKernel};
 use anyhow::{ensure, Result};
 
 /// Exact kernel ridge regression (paper Eq. 1–2).
@@ -146,9 +146,11 @@ impl FeatureRidge {
 }
 
 fn normalized_features(map: &McKernel, x: &Matrix) -> Matrix {
-    // batched pipeline with the 1/√(n·E) estimator scaling fused into
-    // the feature write — no second pass over Φ
-    map.transform_batch_normalized(x)
+    // compiled engine path with the 1/√(n·E) estimator scaling folded
+    // into the feature write by the plan — no second pass over Φ
+    let mut phi = Matrix::zeros(x.rows(), map.feature_dim());
+    ExpansionEngine::normalized(map, x.rows()).execute_matrix(map, x, &mut phi);
+    phi
 }
 
 #[cfg(test)]

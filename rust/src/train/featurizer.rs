@@ -2,16 +2,32 @@
 //! pixels), the native McKernel map, or a parallel McKernel map over
 //! the thread pool — the paper's two curves in Figures 3–5 differ
 //! only in this choice.
+//!
+//! All featurization executes through `mckernel::engine` — this layer
+//! holds no scratch sizing or FWHT dispatch of its own. Consumers
+//! build one [`FeatureEngine`] per worker/loop via
+//! [`Featurizer::make_engine`] and reuse it every mini-batch.
 
-use crate::fwht::batch::tile_lanes;
 use crate::linalg::Matrix;
-use crate::mckernel::{BatchScratch, McKernel};
+use crate::mckernel::{ExpansionEngine, McKernel};
 use crate::util::ThreadPool;
 use std::sync::Arc;
 
-/// Per-worker featurization scratch for the shard-parallel trainer
-/// (`None` for identity — raw pixels need no work buffers).
-pub struct ShardScratch(Option<BatchScratch>);
+/// Per-consumer execution state for a [`Featurizer`]: the compiled
+/// expansion engine, per-pool-task engines for the parallel variant,
+/// and a pooled output matrix so [`Featurizer::apply_into`] is
+/// allocation-free across mini-batches (ragged tail batches shrink
+/// the pooled matrix without releasing capacity). Engines are built
+/// lazily on the path that actually runs — identity never allocates,
+/// and the parallel variant never carries a dead serial engine.
+pub struct FeatureEngine {
+    /// Row-count hint captured at [`Featurizer::make_engine`] time,
+    /// used when an engine is first compiled.
+    rows_hint: usize,
+    engine: Option<ExpansionEngine>,
+    workers: Vec<ExpansionEngine>,
+    out: Matrix,
+}
 
 /// Maps a `(batch, pixels)` matrix to the classifier's input space.
 pub enum Featurizer {
@@ -42,70 +58,90 @@ impl Featurizer {
         }
     }
 
-    /// Scratch for [`Featurizer::apply_shard`], one per worker.
-    pub fn make_shard_scratch(&self) -> ShardScratch {
-        match self {
-            Featurizer::Identity => ShardScratch(None),
-            Featurizer::McKernel(m) | Featurizer::McKernelParallel(m, _) => {
-                ShardScratch(Some(m.make_batch_scratch()))
-            }
+    /// Build the execution state for this featurizer, expecting calls
+    /// of about `rows_hint` rows — one per worker/loop, reused every
+    /// mini-batch. Cheap: engines compile lazily on first use.
+    pub fn make_engine(&self, rows_hint: usize) -> FeatureEngine {
+        FeatureEngine {
+            rows_hint,
+            engine: None,
+            workers: Vec::new(),
+            out: Matrix::zeros(0, 0),
         }
     }
 
     /// Shard-aware apply: featurize `rows` raw rows (`xs`, row-major,
     /// width `d`) into the preallocated `out` (`rows × feature_dim`)
     /// without allocating — the data-parallel trainer calls this from
-    /// every worker on its own shard with its own scratch. Same math
-    /// as [`Featurizer::apply`]: the batched McKernel pipeline is
-    /// invariant to how rows are grouped into tiles, so shard splits
-    /// agree bit-for-bit with the full-batch path.
+    /// every worker on its own shard with its own engine. The engine
+    /// pipeline is invariant to how rows are grouped into tiles, so
+    /// shard splits agree bit-for-bit with the full-batch path.
     pub fn apply_shard(
         &self,
         xs: &[f32],
         rows: usize,
         d: usize,
         out: &mut [f32],
-        scratch: &mut ShardScratch,
+        engine: &mut FeatureEngine,
     ) {
         assert_eq!(xs.len(), rows * d, "shard input length");
         assert_eq!(out.len(), rows * self.feature_dim(d), "shard output length");
         match self {
             Featurizer::Identity => out.copy_from_slice(xs),
             Featurizer::McKernel(m) | Featurizer::McKernelParallel(m, _) => {
-                let scratch = scratch
-                    .0
-                    .as_mut()
-                    .expect("shard scratch built for a different featurizer");
-                m.transform_batch_slice_into(xs, rows, d, out, scratch);
+                let hint = engine.rows_hint;
+                let eng = engine
+                    .engine
+                    .get_or_insert_with(|| ExpansionEngine::new(m, hint));
+                eng.execute(m, xs, rows, d, out);
             }
         }
     }
 
-    /// Apply to a batch through the batch-vectorized pipeline. The
-    /// parallel variant splits whole *row-tiles* — not single rows —
-    /// across the pool, so every worker streams L2-resident tiles
+    /// Apply to a batch through the engine's pooled scratch and
+    /// pooled output matrix — allocation-free after the first call at
+    /// a given batch size (identity returns the input itself, zero
+    /// copies). The parallel variant splits whole *row-tiles* — not
+    /// single rows — across the pool, each task executing on its own
+    /// long-lived engine, so every worker streams L2-resident tiles
     /// through the fused Fastfood passes.
-    pub fn apply(&self, x: &Matrix) -> Matrix {
+    pub fn apply_into<'a>(&self, x: &'a Matrix, engine: &'a mut FeatureEngine) -> &'a Matrix {
         match self {
-            Featurizer::Identity => x.clone(),
-            Featurizer::McKernel(m) => m.transform_batch(x),
+            Featurizer::Identity => x,
+            Featurizer::McKernel(m) => {
+                engine.out.resize(x.rows(), m.feature_dim());
+                let hint = engine.rows_hint;
+                let eng = engine
+                    .engine
+                    .get_or_insert_with(|| ExpansionEngine::new(m, hint));
+                eng.execute_matrix(m, x, &mut engine.out);
+                &engine.out
+            }
             Featurizer::McKernelParallel(m, pool) => {
                 let rows = x.rows();
                 let d = x.cols();
                 let fd = m.feature_dim();
-                let mut out = Matrix::zeros(rows, fd);
+                engine.out.resize(rows, fd);
                 if rows == 0 {
-                    return out;
+                    return &engine.out;
+                }
+                // One engine per pool task, built on first use and
+                // reused across mini-batches (full tile width: tasks
+                // stream whole tiles regardless of this batch's rows).
+                if engine.workers.len() != pool.size() {
+                    engine.workers =
+                        (0..pool.size()).map(|_| ExpansionEngine::new(m, usize::MAX)).collect();
                 }
                 // Whole tiles per task; tile grouping does not change
                 // results (lanes never interact), so any split agrees
-                // bit-for-bit with the serial batched path.
-                let tile = tile_lanes(m.padded_dim());
+                // bit-for-bit with the serial engine path.
+                let tile = engine.workers[0].plan().lanes().max(1);
                 let tiles = rows.div_ceil(tile);
                 let chunk = tiles.div_ceil(pool.size()).max(1) * tile;
                 let tasks = rows.div_ceil(chunk);
-                let out_ptr = SendPtr(out.data_mut().as_mut_ptr());
+                let out_ptr = SendPtr(engine.out.data_mut().as_mut_ptr());
                 let in_ptr = SendConstPtr(x.data().as_ptr());
+                let eng_ptr = SendEnginePtr(engine.workers.as_mut_ptr());
                 let m2 = Arc::clone(m);
                 pool.scope_for_each(tasks, move |t| {
                     // force whole-struct capture (edition-2021 would
@@ -113,24 +149,41 @@ impl Featurizer {
                     // are not Send)
                     let out_ptr = out_ptr;
                     let in_ptr = in_ptr;
+                    let eng_ptr = eng_ptr;
                     let lo = t * chunk;
                     let hi = ((t + 1) * chunk).min(rows);
-                    let mut scratch = m2.make_batch_scratch();
-                    // SAFETY: tasks own disjoint row ranges, and both
-                    // the input batch and the output buffer outlive
+                    // SAFETY: tasks own disjoint row ranges and
+                    // disjoint engines (task `t` touches only
+                    // `workers[t]`, and `tasks ≤ pool.size() ==
+                    // workers.len()`); the input batch, the pooled
+                    // output and the worker engines all outlive
                     // scope_for_each (it blocks until every task is
-                    // done) — the batch is borrowed for the scope, not
-                    // cloned into an Arc per call.
+                    // done).
+                    let eng = unsafe { &mut *eng_ptr.0.add(t) };
                     let xs = unsafe {
                         std::slice::from_raw_parts(in_ptr.0.add(lo * d), (hi - lo) * d)
                     };
                     let seg = unsafe {
                         std::slice::from_raw_parts_mut(out_ptr.0.add(lo * fd), (hi - lo) * fd)
                     };
-                    m2.transform_batch_slice_into(xs, hi - lo, d, seg, &mut scratch);
+                    eng.execute(&m2, xs, hi - lo, d, seg);
                 });
-                out
+                &engine.out
             }
+        }
+    }
+
+    /// Allocating convenience wrapper over [`Featurizer::apply_into`]
+    /// (tests / one-shot callers; hot loops hold a [`FeatureEngine`]).
+    pub fn apply(&self, x: &Matrix) -> Matrix {
+        let mut engine = self.make_engine(x.rows());
+        self.apply_into(x, &mut engine);
+        match self {
+            // identity's apply_into returns the input untouched
+            Featurizer::Identity => x.clone(),
+            // the one-shot engine is dropped right after, so its
+            // pooled output moves out instead of being copied
+            _ => std::mem::replace(&mut engine.out, Matrix::zeros(0, 0)),
         }
     }
 }
@@ -148,6 +201,12 @@ unsafe impl Sync for SendPtr {}
 struct SendConstPtr(*const f32);
 unsafe impl Send for SendConstPtr {}
 unsafe impl Sync for SendConstPtr {}
+
+/// Per-task engine pointer (task `t` uses engine `t` exclusively).
+#[derive(Clone, Copy)]
+struct SendEnginePtr(*mut ExpansionEngine);
+unsafe impl Send for SendEnginePtr {}
+unsafe impl Sync for SendEnginePtr {}
 
 #[cfg(test)]
 mod tests {
@@ -168,6 +227,9 @@ mod tests {
         let f = Featurizer::Identity;
         assert_eq!(f.apply(&x), x);
         assert_eq!(f.feature_dim(12), 12);
+        // apply_into is zero-copy for identity: same allocation back
+        let mut eng = f.make_engine(9);
+        assert!(std::ptr::eq(f.apply_into(&x, &mut eng), &x));
     }
 
     #[test]
@@ -176,6 +238,23 @@ mod tests {
         assert_eq!(f.feature_dim(12), 2 * 16 * 2);
         let out = f.apply(&batch());
         assert_eq!(out.shape(), (9, 64));
+    }
+
+    #[test]
+    fn pooled_apply_is_stable_across_batch_sizes() {
+        // one engine reused over full batches and a ragged tail must
+        // give the same features as fresh one-shot applies
+        let m = map();
+        let f = Featurizer::McKernel(Arc::clone(&m));
+        let mut eng = f.make_engine(9);
+        let x9 = batch();
+        let x3 = Matrix::from_fn(3, 12, |r, c| ((r * 5 + c) % 11) as f32 * 0.07);
+        let a9 = f.apply_into(&x9, &mut eng).clone();
+        let a3 = f.apply_into(&x3, &mut eng).clone();
+        let again9 = f.apply_into(&x9, &mut eng).clone();
+        assert_eq!(a9.data(), f.apply(&x9).data());
+        assert_eq!(a3.data(), f.apply(&x3).data());
+        assert_eq!(a9.data(), again9.data());
     }
 
     #[test]
@@ -201,13 +280,15 @@ mod tests {
     #[test]
     fn parallel_many_rows_with_tail_tiles() {
         // more rows than one tile and not a multiple of the tile
-        // width: tasks get whole tiles plus a ragged tail
+        // width: tasks get whole tiles plus a ragged tail; the worker
+        // engines are built once and reused across both calls
         let m = map();
         let x = Matrix::from_fn(150, 12, |r, c| ((r * 7 + c) % 13) as f32 * 0.05);
-        let pool = Arc::new(ThreadPool::new(3));
         let serial = Featurizer::McKernel(Arc::clone(&m)).apply(&x);
-        let par = Featurizer::McKernelParallel(m, pool).apply(&x);
-        assert_eq!(serial.data(), par.data());
+        let fpar = Featurizer::McKernelParallel(m, Arc::new(ThreadPool::new(3)));
+        let mut eng = fpar.make_engine(150);
+        assert_eq!(serial.data(), fpar.apply_into(&x, &mut eng).data());
+        assert_eq!(serial.data(), fpar.apply_into(&x, &mut eng).data());
     }
 
     #[test]
@@ -219,14 +300,14 @@ mod tests {
         let fd = f.feature_dim(12);
         // ragged shard split (4 + 3 + 2 rows): must agree bit-for-bit
         let mut out = vec![0.0f32; 9 * fd];
-        let mut scratch = f.make_shard_scratch();
+        let mut engine = f.make_engine(4);
         for (lo, hi) in [(0usize, 4usize), (4, 7), (7, 9)] {
             f.apply_shard(
                 &x.data()[lo * 12..hi * 12],
                 hi - lo,
                 12,
                 &mut out[lo * fd..hi * fd],
-                &mut scratch,
+                &mut engine,
             );
         }
         assert_eq!(full.data(), &out[..]);
@@ -237,8 +318,8 @@ mod tests {
         let x = batch();
         let f = Featurizer::Identity;
         let mut out = vec![0.0f32; 2 * 12];
-        let mut scratch = f.make_shard_scratch();
-        f.apply_shard(&x.data()[3 * 12..5 * 12], 2, 12, &mut out, &mut scratch);
+        let mut engine = f.make_engine(2);
+        f.apply_shard(&x.data()[3 * 12..5 * 12], 2, 12, &mut out, &mut engine);
         assert_eq!(&out[..12], x.row(3));
         assert_eq!(&out[12..], x.row(4));
     }

@@ -6,6 +6,6 @@ pub mod featurizer;
 pub mod metrics;
 pub mod trainer;
 
-pub use featurizer::{Featurizer, ShardScratch};
+pub use featurizer::{FeatureEngine, Featurizer};
 pub use metrics::{accuracy, confusion_matrix, EpochRecord};
 pub use trainer::{evaluate_with, ParallelTrainer, TrainConfig, Trainer, TrainReport};

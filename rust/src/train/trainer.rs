@@ -1,11 +1,11 @@
 //! The epoch-loop trainer: mini-batch SGD over a featurized dataset —
 //! the engine behind Figures 3, 4 and 5. Works with any
-//! [`Featurizer`]; every mini-batch goes through the batch-vectorized
-//! McKernel pipeline ([`crate::mckernel::McKernel::transform_batch_into`])
-//! via [`Featurizer::apply`]. The PJRT-backed path lives in
-//! [`crate::coordinator`] (it owns device state).
+//! [`Featurizer`]; every mini-batch executes through one long-lived
+//! [`FeatureEngine`] (compiled plan + pooled scratch + pooled feature
+//! matrix) via [`Featurizer::apply_into`]. The PJRT-backed path lives
+//! in [`crate::coordinator`] (it owns device state).
 
-use super::featurizer::{Featurizer, ShardScratch};
+use super::featurizer::{FeatureEngine, Featurizer};
 use super::metrics::{accuracy, EpochRecord};
 use crate::data::{Batcher, Dataset};
 use crate::model::{Gradients, SoftmaxRegression};
@@ -84,6 +84,9 @@ impl Trainer {
         let mut model = SoftmaxRegression::zeros(train.classes(), fdim);
         let mut opt = Sgd::new(self.config.sgd);
         let batcher = Batcher::new(self.config.batch_size, self.config.seed);
+        // One expansion engine for the whole run: pooled scratch and
+        // pooled feature matrix, reused every mini-batch.
+        let mut engine = self.featurizer.make_engine(self.config.batch_size);
         let mut history = Vec::with_capacity(self.config.epochs);
 
         for epoch in 0..self.config.epochs {
@@ -93,11 +96,11 @@ impl Trainer {
             let mut train_hits = 0usize;
             let mut train_count = 0usize;
             for batch in batcher.epoch(train, epoch) {
-                let feats = self.featurizer.apply(&batch.images);
-                let (loss, grads) = model.loss_and_grad(&feats, &batch.labels);
+                let feats = self.featurizer.apply_into(&batch.images, &mut engine);
+                let (loss, grads) = model.loss_and_grad(feats, &batch.labels);
                 // training accuracy from the same logits' argmax would
                 // need another pass; use predictions on features:
-                let preds = model.predict(&feats);
+                let preds = model.predict(feats);
                 train_hits += preds
                     .iter()
                     .zip(&batch.labels)
@@ -156,18 +159,19 @@ impl Trainer {
 /// batches — shared by the serial and data-parallel trainers.
 pub fn evaluate_with(featurizer: &Featurizer, model: &SoftmaxRegression, data: &Dataset) -> f64 {
     let batcher = Batcher::new(256, 0).sequential();
+    let mut engine = featurizer.make_engine(256);
     let mut preds = Vec::with_capacity(data.len());
     for batch in batcher.epoch(data, 0) {
-        let feats = featurizer.apply(&batch.images);
-        preds.extend(model.predict(&feats));
+        let feats = featurizer.apply_into(&batch.images, &mut engine);
+        preds.extend(model.predict(feats));
     }
     accuracy(&preds, data.labels())
 }
 
 /// Per-worker step state for the data-parallel trainer: featurization
-/// output + scratch, the softmax delta buffer, and the gradient-sum
-/// accumulator — allocated once per `fit`, reused every step (the
-/// step loop itself never allocates).
+/// output + expansion engine, the softmax delta buffer, and the
+/// gradient-sum accumulator — allocated once per `fit`, reused every
+/// step (the step loop itself never allocates).
 struct WorkerSlot {
     /// Row range of the current batch owned by this worker.
     lo: usize,
@@ -175,7 +179,7 @@ struct WorkerSlot {
     feats: Vec<f32>,
     delta: Vec<f32>,
     grads: Gradients,
-    feat_scratch: ShardScratch,
+    engine: FeatureEngine,
     loss_sum: f64,
     hits: usize,
 }
@@ -252,7 +256,7 @@ impl ParallelTrainer {
                 feats: vec![0.0; max_shard * fdim],
                 delta: vec![0.0; max_shard * classes],
                 grads: Gradients::zeros(classes, fdim),
-                feat_scratch: self.featurizer.make_shard_scratch(),
+                engine: self.featurizer.make_engine(max_shard),
                 loss_sum: 0.0,
                 hits: 0,
             })
@@ -294,7 +298,7 @@ impl ParallelTrainer {
                         let srows = hi - lo;
                         let xs = &images.data()[lo * d..hi * d];
                         let feats = &mut slot.feats[..srows * fdim];
-                        featurizer.apply_shard(xs, srows, d, feats, &mut slot.feat_scratch);
+                        featurizer.apply_shard(xs, srows, d, feats, &mut slot.engine);
                         let (ls, h) = mref.shard_loss_grad_sums(
                             feats,
                             srows,

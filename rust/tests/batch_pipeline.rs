@@ -7,19 +7,16 @@
 use mckernel::fwht;
 use mckernel::hash::HashRng;
 use mckernel::linalg::Matrix;
-use mckernel::mckernel::{Kernel, McKernel, McKernelFactory};
+use mckernel::mckernel::{ExpansionEngine, Kernel, McKernel, McKernelFactory};
 use mckernel::train::Featurizer;
 use mckernel::util::fastmath;
 use mckernel::util::ThreadPool;
 use std::sync::Arc;
 
-/// Per-row libm reference.
+/// Per-row libm reference (the plan's explicit per-row override).
 fn oracle(map: &McKernel, x: &Matrix) -> Matrix {
     let mut out = Matrix::zeros(x.rows(), map.feature_dim());
-    let mut scratch = map.make_scratch();
-    for r in 0..x.rows() {
-        map.transform_into(x.row(r), out.row_mut(r), &mut scratch);
-    }
+    ExpansionEngine::per_row_oracle(map).execute_matrix(map, x, &mut out);
     out
 }
 
@@ -46,8 +43,8 @@ fn batched_matches_oracle_across_shapes_and_kernels() {
                 let mut rng = HashRng::new(rows as u64, 5);
                 let x = Matrix::from_fn(rows, dim, |_, _| rng.next_f32() - 0.5);
                 let mut out = Matrix::zeros(rows, map.feature_dim());
-                let mut scratch = map.make_batch_scratch();
-                map.transform_batch_into(&x, &mut out, &mut scratch);
+                let mut engine = ExpansionEngine::new(&map, rows);
+                map.transform_batch_into(&x, &mut out, &mut engine);
                 let err = max_abs_diff(&out, &oracle(&map, &x));
                 assert!(
                     err < 1e-5,
@@ -66,8 +63,8 @@ fn tail_tiles_at_mnist_geometry() {
     let mut rng = HashRng::new(4, 6);
     let x = Matrix::from_fn(rows, 784, |_, _| rng.next_f32());
     let mut out = Matrix::zeros(rows, map.feature_dim());
-    let mut scratch = map.make_batch_scratch();
-    map.transform_batch_into(&x, &mut out, &mut scratch);
+    let mut engine = ExpansionEngine::new(&map, rows);
+    map.transform_batch_into(&x, &mut out, &mut engine);
     let err = max_abs_diff(&out, &oracle(&map, &x));
     assert!(err < 1e-5, "tail-tile err {err}");
 }

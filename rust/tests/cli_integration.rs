@@ -32,10 +32,14 @@ fn features_command() {
 
 #[test]
 fn fwht_command_all_engines() {
-    for e in ["naive", "spiral", "iterative", "mckernel"] {
+    // production engines plus the reference baselines (naive/spiral
+    // stay CLI-runnable as oracles; the plan never selects them)
+    for e in ["naive", "spiral", "iterative", "mckernel", "batch"] {
         run(&["fwht", "--log-n", "8", "--engine", e]).unwrap();
     }
     assert!(run(&["fwht", "--engine", "fft"]).is_err());
+    // the O(n²) oracle refuses production-scale sizes
+    assert!(run(&["fwht", "--engine", "naive"]).is_err());
 }
 
 #[test]

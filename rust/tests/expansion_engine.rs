@@ -1,0 +1,142 @@
+//! Plan/engine invariants (PR 4): the compiled [`ExpansionPlan`] must
+//! size scratch exactly (no reallocation during `execute`), the
+//! engine must reproduce the per-row oracle bit-for-bit on the
+//! per-row path and within 1e-6 on the batched path — across odd
+//! batch sizes, tail tiles and both kernels — and the normalization
+//! fold must equal an explicit post-scale exactly.
+
+use mckernel::linalg::Matrix;
+use mckernel::mckernel::{
+    ExpansionEngine, ExpansionPlan, FwhtDispatch, Kernel, McKernel, McKernelFactory,
+};
+
+fn build(dim: usize, e: usize, kernel: Kernel) -> McKernel {
+    let f = McKernelFactory::new(dim).expansions(e).sigma(1.5).seed(21);
+    let f = match kernel {
+        Kernel::Rbf => f.rbf(),
+        Kernel::RbfMatern { t } => f.rbf_matern(t),
+    };
+    f.build()
+}
+
+fn oracle(map: &McKernel, x: &Matrix) -> Matrix {
+    let mut out = Matrix::zeros(x.rows(), map.feature_dim());
+    ExpansionEngine::per_row_oracle(map).execute_matrix(map, x, &mut out);
+    out
+}
+
+#[test]
+fn scratch_sizes_are_exact_and_never_reallocate() {
+    let map = build(12, 2, Kernel::Rbf);
+    let mut engine = ExpansionEngine::new(&map, 64);
+    let want = engine.plan().scratch_floats();
+    assert_eq!(
+        want,
+        3 * engine.plan().padded_dim() * engine.plan().lanes(),
+        "batched scratch formula"
+    );
+    assert_eq!(engine.scratch_floats(), want);
+    // odd row counts, tail tiles, a single row, an empty call: the
+    // pool must stay at its compiled size throughout (execute itself
+    // asserts the no-realloc invariant on every call)
+    let lanes = engine.plan().lanes();
+    for rows in [0usize, 1, 3, lanes - 1, lanes, lanes + 3, 2 * lanes + 1] {
+        let x = Matrix::from_fn(rows, 12, |r, c| ((r * 7 + c) % 5) as f32 * 0.1);
+        let mut out = Matrix::zeros(rows, map.feature_dim());
+        engine.execute_matrix(&map, &x, &mut out);
+        assert_eq!(engine.scratch_floats(), want, "rows={rows}");
+    }
+    // per-row plans pool the (padded, tmp) pair
+    let oracle = ExpansionEngine::per_row_oracle(&map);
+    assert_eq!(oracle.plan().scratch_floats(), 2 * map.padded_dim());
+    assert_eq!(oracle.scratch_floats(), 2 * map.padded_dim());
+}
+
+#[test]
+fn single_row_is_bit_identical_to_the_per_row_oracle() {
+    for kernel in [Kernel::Rbf, Kernel::RbfMatern { t: 40 }] {
+        let map = build(20, 2, kernel);
+        let x: Vec<f32> = (0..20).map(|i| (i as f32 * 0.37).sin()).collect();
+        // the per-row plan reproduces McKernel::transform exactly
+        let mut out = vec![0.0f32; map.feature_dim()];
+        ExpansionEngine::per_row_oracle(&map).execute(&map, &x, 1, 20, &mut out);
+        assert_eq!(out, map.transform(&x), "{kernel:?}");
+        // and a batched engine is grouping-invariant: one row alone
+        // equals that row inside a larger batch, bit for bit
+        let xs = Matrix::from_fn(5, 20, |r, c| ((r * 11 + c) % 13) as f32 * 0.05);
+        let all = map.transform_batch(&xs);
+        let mut engine = ExpansionEngine::new(&map, 5);
+        let mut one = Matrix::zeros(1, map.feature_dim());
+        for r in 0..5 {
+            let row = Matrix::from_vec(1, 20, xs.row(r).to_vec());
+            engine.execute_matrix(&map, &row, &mut one);
+            assert_eq!(one.row(0), all.row(r), "row {r} {kernel:?}");
+        }
+    }
+}
+
+#[test]
+fn batched_engine_tracks_oracle_within_1e6() {
+    for kernel in [Kernel::Rbf, Kernel::RbfMatern { t: 40 }] {
+        for &(dim, e) in &[(12usize, 1usize), (20, 3)] {
+            let map = build(dim, e, kernel);
+            let mut engine = ExpansionEngine::new(&map, usize::MAX);
+            let lanes = engine.plan().lanes();
+            // odd batch sizes + a full-tile-plus-tail shape
+            for rows in [1usize, 3, 7, lanes + 3] {
+                let x = Matrix::from_fn(rows, dim, |r, c| {
+                    (((r * 31 + c * 7) % 17) as f32 - 8.0) * 0.06
+                });
+                let mut out = Matrix::zeros(rows, map.feature_dim());
+                engine.execute_matrix(&map, &x, &mut out);
+                let want = oracle(&map, &x);
+                for (i, (a, b)) in out.data().iter().zip(want.data()).enumerate() {
+                    assert!(
+                        (a - b).abs() < 1e-6,
+                        "{kernel:?} dim={dim} E={e} rows={rows} i={i}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn normalization_fold_equals_explicit_post_scale_exactly() {
+    let map = build(12, 2, Kernel::Rbf);
+    let x = Matrix::from_fn(5, 12, |r, c| ((r * 3 + c) % 9) as f32 * 0.11);
+    let s = 1.0f32 / ((map.padded_dim() * map.expansions()) as f32).sqrt();
+    // batched: folded write vs plain write × s is the same product
+    let plain = map.transform_batch(&x);
+    let folded = map.transform_batch_normalized(&x);
+    for (a, b) in folded.data().iter().zip(plain.data()) {
+        assert_eq!(*a, b * s);
+    }
+    // per-row: same fold, same exactness
+    for r in 0..5 {
+        let p = map.transform(x.row(r));
+        let f = map.transform_normalized(x.row(r));
+        for i in 0..map.feature_dim() {
+            assert_eq!(f[i], p[i] * s);
+        }
+    }
+}
+
+#[test]
+fn plan_is_the_single_dispatch_point() {
+    // small geometry compiles to the batched path…
+    let small = ExpansionPlan::new(build(12, 1, Kernel::Rbf).config(), 8);
+    assert_eq!(small.dispatch(), FwhtDispatch::Batched);
+    // …huge geometry to the per-row fallback — consumers never see
+    // the difference, they just execute the compiled plan
+    let huge_cfg = mckernel::mckernel::McKernelConfig {
+        input_dim: 40_000,
+        expansions: 1,
+        sigma: 1.0,
+        kernel: Kernel::Rbf,
+        seed: 1,
+    };
+    let huge = ExpansionPlan::new(&huge_cfg, 8);
+    assert_eq!(huge.dispatch(), FwhtDispatch::PerRow);
+    assert_eq!(huge.lanes(), 1);
+}
