@@ -1,5 +1,8 @@
 //! Robust summary statistics over timing samples.
 
+use crate::obs::Dist;
+use crate::util::json::Json;
+
 /// Summary statistics of a sample of per-iteration times (seconds).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Stats {
@@ -9,14 +12,18 @@ pub struct Stats {
     pub mean: f64,
     pub median: f64,
     pub p95: f64,
+    pub p99: f64,
     pub stddev: f64,
 }
 
 impl Stats {
-    /// Compute statistics of `samples` (need not be sorted; empty
-    /// samples are rejected).
+    /// Compute statistics of `samples` (need not be sorted). An empty
+    /// slice yields the NaN-free all-zero [`Stats::empty`] rather than
+    /// panicking or propagating NaN into reports.
     pub fn of(samples: &[f64]) -> Stats {
-        assert!(!samples.is_empty(), "no samples");
+        if samples.is_empty() {
+            return Stats::empty();
+        }
         let mut s = samples.to_vec();
         s.sort_by(f64::total_cmp);
         let n = s.len();
@@ -29,15 +36,43 @@ impl Stats {
             mean,
             median: percentile_sorted(&s, 50.0),
             p95: percentile_sorted(&s, 95.0),
+            p99: percentile_sorted(&s, 99.0),
             stddev: var.sqrt(),
         }
     }
+
+    /// The zero-sample summary: every field 0, nothing NaN.
+    pub fn empty() -> Stats {
+        Stats { n: 0, min: 0.0, max: 0.0, mean: 0.0, median: 0.0, p95: 0.0, p99: 0.0, stddev: 0.0 }
+    }
+
+    /// This summary in the shared observability distribution schema
+    /// ([`crate::obs::Dist`]), converted from seconds to nanoseconds —
+    /// so a BENCH_*.json distribution and a live `server.latency_ns`
+    /// snapshot parse identically.
+    pub fn to_dist_json_ns(&self) -> Json {
+        let ns = 1e9;
+        Dist {
+            count: self.n as u64,
+            sum: self.mean * self.n as f64 * ns,
+            min: self.min * ns,
+            max: self.max * ns,
+            mean: self.mean * ns,
+            p50: self.median * ns,
+            p95: self.p95 * ns,
+            p99: self.p99 * ns,
+        }
+        .to_json()
+    }
 }
 
-/// Linear-interpolated percentile of an already sorted slice.
+/// Linear-interpolated percentile of an already sorted slice
+/// (0.0 for an empty slice — NaN never escapes into reports).
 pub fn percentile_sorted(sorted: &[f64], pct: f64) -> f64 {
-    assert!(!sorted.is_empty());
     assert!((0.0..=100.0).contains(&pct));
+    if sorted.is_empty() {
+        return 0.0;
+    }
     if sorted.len() == 1 {
         return sorted[0];
     }
@@ -60,6 +95,7 @@ mod tests {
         assert_eq!(s.max, 5.0);
         assert_eq!(s.mean, 3.0);
         assert_eq!(s.median, 3.0);
+        assert!(s.p95 <= s.p99 && s.p99 <= s.max);
         assert!((s.stddev - 2.0f64.sqrt()).abs() < 1e-12);
     }
 
@@ -83,12 +119,38 @@ mod tests {
         let s = Stats::of(&[7.5]);
         assert_eq!(s.median, 7.5);
         assert_eq!(s.p95, 7.5);
+        assert_eq!(s.p99, 7.5);
         assert_eq!(s.stddev, 0.0);
     }
 
     #[test]
-    #[should_panic]
-    fn empty_rejected() {
-        Stats::of(&[]);
+    fn empty_samples_are_nan_free_zeros() {
+        let s = Stats::of(&[]);
+        assert_eq!(s, Stats::empty());
+        assert_eq!(s.n, 0);
+        for v in [s.min, s.max, s.mean, s.median, s.p95, s.p99, s.stddev] {
+            assert_eq!(v, 0.0);
+        }
+        assert_eq!(percentile_sorted(&[], 50.0), 0.0);
+        assert_eq!(percentile_sorted(&[], 0.0), 0.0);
+        assert_eq!(percentile_sorted(&[], 100.0), 0.0);
+    }
+
+    #[test]
+    fn dist_json_uses_shared_schema_in_ns() {
+        let s = Stats::of(&[0.001, 0.002, 0.003]); // 1–3 ms
+        let j = s.to_dist_json_ns();
+        assert_eq!(j.get("count").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("mean").unwrap().as_f64(), Some(2.0e6));
+        assert_eq!(j.get("min").unwrap().as_f64(), Some(1.0e6));
+        assert_eq!(j.get("p50").unwrap().as_f64(), Some(2.0e6));
+        // same keys as a live histogram snapshot
+        let live = crate::obs::Hist::new();
+        live.record(100);
+        let live_j = live.snapshot().to_json();
+        let keys = |v: &crate::util::json::Json| -> Vec<String> {
+            v.as_obj().unwrap().keys().cloned().collect()
+        };
+        assert_eq!(keys(&j), keys(&live_j));
     }
 }

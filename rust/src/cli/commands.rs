@@ -23,6 +23,7 @@ COMMANDS:
   features   featurize one synthetic sample and print stats
   fwht       run one FWHT and report timing
   bench      write BENCH_*.json perf snapshots (per-row vs batched)
+  stats      drive the instrumented paths and export a metrics snapshot
   gen-data   write a synthetic dataset as IDX files
   info       list AOT artifacts (requires `make artifacts`)
   serve      run the dynamic-batching feature server demo
@@ -320,6 +321,8 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
             ("speedup", Json::Num(cmp.speedup())),
             ("rows_per_s", Json::Num(cmp.rows_per_s())),
             ("max_abs_err", Json::Num(cmp.max_abs_err as f64)),
+            ("per_row", cmp.per_row.stats.to_dist_json_ns()),
+            ("batched", cmp.batched.stats.to_dist_json_ns()),
         ],
     )?;
 
@@ -362,6 +365,8 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
             ("batched_ms", Json::Num(fwht_batched.median_ms())),
             ("speedup", Json::Num(fwht_speedup)),
             ("transforms_per_s", Json::Num(batch as f64 / fwht_batched.stats.median)),
+            ("per_row", fwht_rows.stats.to_dist_json_ns()),
+            ("batched", fwht_batched.stats.to_dist_json_ns()),
         ],
     )?;
 
@@ -390,6 +395,8 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
             ("speedup", Json::Num(tcmp.speedup())),
             ("rows_per_s", Json::Num(tcmp.rows_per_s())),
             ("acc_delta", Json::Num(tcmp.acc_delta)),
+            ("serial", tcmp.serial.stats.to_dist_json_ns()),
+            ("parallel", tcmp.parallel.stats.to_dist_json_ns()),
         ],
     )?;
     Ok(())
@@ -400,6 +407,106 @@ fn write_bench_json(path: &str, fields: &[(&str, Json)]) -> Result<()> {
         fields.iter().map(|(k, v)| (k.to_string(), v.clone())).collect();
     std::fs::write(path, Json::Obj(obj).to_string())?;
     println!("wrote {path}");
+    Ok(())
+}
+
+/// `mckernel stats` — enable the observability registry, drive each
+/// instrumented layer once (engine stages, sharded trainer, prefetch
+/// pipeline, feature server), and write the registry snapshot as JSON
+/// (`--out`, default `STATS_snapshot.json`). `--trace FILE`
+/// additionally streams span events as JSONL. The snapshot uses the
+/// same distribution schema as the BENCH_*.json dists
+/// ([`crate::benchkit::Stats::to_dist_json_ns`]).
+pub fn cmd_stats(args: &Args) -> Result<()> {
+    use crate::linalg::Matrix;
+    use crate::mckernel::ExpansionEngine;
+    use crate::obs;
+
+    obs::enable();
+    if let Some(path) = args.get("trace") {
+        obs::trace_to(path).with_context(|| format!("open --trace file {path}"))?;
+    }
+    let quick = args.flag("quick");
+    let input_dim: usize = args.parse_or("input-dim", 64usize)?;
+    let e: usize = args.parse_or("expansions", 2usize)?;
+    let rows: usize = args.positive_or("rows", 32)?;
+    let iters = if quick { 2 } else { 8 };
+    let requests: usize = args.positive_or("requests", 16)?;
+    let workers: usize = args.positive_or("workers", 2)?.max(2);
+    let out = args.get_or("out", "STATS_snapshot.json");
+
+    // 1. Engine stage timings (fwht/trig/write per plan fingerprint).
+    {
+        let _g = obs::span("stats.engine");
+        let map = McKernelFactory::new(input_dim).expansions(e).rbf().seed(7).build();
+        let mut rng = crate::hash::HashRng::new(7, 0x57A7);
+        let x = Matrix::from_fn(rows, input_dim, |_, _| rng.next_f32() - 0.5);
+        let mut engine = ExpansionEngine::new(&map, rows);
+        let mut feats = Matrix::zeros(rows, map.feature_dim());
+        for _ in 0..iters {
+            engine.execute_matrix(&map, &x, &mut feats);
+        }
+    }
+
+    // 2. Sharded trainer (epoch/shard/reduce timings + row counter);
+    //    workers ≥ 2 so the shard and reduction paths both run.
+    {
+        let _g = obs::span("stats.train");
+        let spec = SyntheticSpec::mnist();
+        let train = Dataset::synthetic(7, &spec, "train", (rows * 4).max(workers));
+        let test = Dataset::synthetic(7, &spec, "test", 16);
+        let cfg = TrainConfig {
+            epochs: 1,
+            batch_size: 16,
+            sgd: SgdConfig { lr: 0.01, momentum: 0.0, clip: None },
+            seed: 7,
+            eval_every_epoch: false,
+            verbose: false,
+            workers,
+        };
+        let _ = ParallelTrainer::new(cfg, Featurizer::Identity).fit(&train, &test);
+    }
+
+    // 3. Prefetch pipeline (queue-stall histogram).
+    {
+        let _g = obs::span("stats.prefetch");
+        let d = Arc::new(Dataset::synthetic(7, &SyntheticSpec::mnist(), "train", rows.max(8)));
+        let p = crate::coordinator::Prefetcher::spawn(d, 4, 7, 0, 1, false, None);
+        for _ in p.iter() {}
+    }
+
+    // 4. Feature server (latency/batch-occupancy/deadline-miss).
+    {
+        let _g = obs::span("stats.serve");
+        let map = Arc::new(McKernelFactory::new(16).expansions(1).rbf().seed(7).build());
+        let server = crate::coordinator::FeatureServer::start(
+            map,
+            8,
+            std::time::Duration::from_micros(100),
+        );
+        for i in 0..requests {
+            let row = vec![(i % 7) as f32 * 0.1; 16];
+            server.transform(row).context("server request")?;
+        }
+        server.shutdown();
+    }
+
+    obs::trace_off();
+    let snapshot = obs::global().snapshot_json();
+    std::fs::write(&out, snapshot.to_string())?;
+    println!("wrote {out}");
+    if let Some(hists) = snapshot.get("histograms").and_then(Json::as_obj) {
+        for (name, h) in hists {
+            let f = |k: &str| h.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+            println!(
+                "  {name:<32} count {:>6}  p50 {:>12.0} ns  p95 {:>12.0} ns  p99 {:>12.0} ns",
+                f("count") as u64,
+                f("p50"),
+                f("p95"),
+                f("p99")
+            );
+        }
+    }
     Ok(())
 }
 
@@ -496,6 +603,7 @@ pub fn run(args: Args) -> Result<()> {
                 "features" => cmd_features(&rest),
                 "fwht" => cmd_fwht(&rest),
                 "bench" => cmd_bench(&rest),
+                "stats" => cmd_stats(&rest),
                 "gen-data" => cmd_gen_data(&rest),
                 "info" => cmd_info(&rest),
                 "serve" => cmd_serve(&rest),
@@ -591,6 +699,23 @@ mod tests {
             .unwrap();
         assert_eq!(train.get("workers").and_then(Json::as_f64), Some(2.0));
         assert!(train.get("acc_delta").and_then(Json::as_f64).is_some());
+        // each file embeds nested dists in the shared obs schema
+        for (name, keys) in [
+            ("BENCH_features.json", ["per_row", "batched"]),
+            ("BENCH_fwht.json", ["per_row", "batched"]),
+            ("BENCH_train.json", ["serial", "parallel"]),
+        ] {
+            let json = Json::parse(&std::fs::read_to_string(dir.join(name)).unwrap()).unwrap();
+            for key in keys {
+                let dist = json.get(key).unwrap_or_else(|| panic!("{name} missing {key}"));
+                for field in ["count", "mean", "p50", "p95", "p99"] {
+                    assert!(
+                        dist.get(field).and_then(Json::as_f64).is_some(),
+                        "{name}.{key}.{field}"
+                    );
+                }
+            }
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 

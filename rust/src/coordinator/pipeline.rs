@@ -7,9 +7,11 @@
 use crate::data::{Batcher, Dataset};
 use crate::linalg::Matrix;
 use crate::mckernel::{ExpansionEngine, McKernel};
+use crate::obs;
 use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 /// A batch ready for the consumer: featurized (native map applied in
 /// the producer) or raw pixels (PJRT path featurizes in-graph).
@@ -43,6 +45,11 @@ impl Prefetcher {
         map: Option<Arc<McKernel>>,
     ) -> Prefetcher {
         let (tx, rx) = sync_channel(depth.max(1));
+        // Queue-stall accounting: how long each `send` blocked on the
+        // bounded channel (≈0 while the consumer keeps up; grows when
+        // the producer outruns it and backpressure engages). Once per
+        // batch, so it records unconditionally like the server stats.
+        let stall_ns = obs::global().histogram("prefetch.stall_ns");
         let handle = std::thread::Builder::new()
             .name(format!("mckernel-prefetch-{epoch}"))
             .spawn(move || {
@@ -65,9 +72,11 @@ impl Prefetcher {
                         _ => batch.images,
                     };
                     let fb = FeaturizedBatch { features, labels: batch.labels, index: batch.index };
+                    let t_send = Instant::now();
                     if tx.send(fb).is_err() {
                         return; // consumer dropped: stop early
                     }
+                    stall_ns.record(t_send.elapsed().as_nanos() as u64);
                 }
             })
             .expect("spawn prefetch thread");

@@ -67,11 +67,14 @@ impl<'rt> PjrtTrainer<'rt> {
             );
             let mut loss_sum = 0.0f64;
             let mut batches = 0usize;
+            let mut rows_done = 0usize;
             for fb in prefetch.iter() {
                 let loss = step.step(&fb.features, &fb.labels, self.config.sgd.lr)?;
                 loss_sum += loss as f64;
                 batches += 1;
+                rows_done += fb.labels.len();
             }
+            let train_secs = t0.elapsed().as_secs_f64();
             let model = step.export_model()?;
             let test_acc = if self.config.eval_every_epoch || epoch + 1 == self.config.epochs {
                 self.evaluate_with(&predictor, &model, test)?
@@ -84,6 +87,7 @@ impl<'rt> PjrtTrainer<'rt> {
                 train_accuracy: f64::NAN, // not tracked on-device
                 test_accuracy: test_acc,
                 seconds: t0.elapsed().as_secs_f64(),
+                rows_per_s: EpochRecord::throughput(rows_done, train_secs),
             };
             if self.config.verbose {
                 eprintln!(

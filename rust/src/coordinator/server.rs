@@ -4,10 +4,16 @@
 //! single vectors, the server coalesces them into batches (size- or
 //! deadline-triggered), featurizes once per batch, and scatters the
 //! rows back to the callers.
+//!
+//! Throughput/latency accounting lives in the observability registry
+//! (`server.*` metrics); [`ServerStats`] is the typed compatibility
+//! view over those handles. These are once-per-request /
+//! once-per-batch updates, so they record unconditionally — the
+//! enabled flag only gates the fine-grained engine/trainer timers.
 
 use crate::linalg::Matrix;
 use crate::mckernel::{ExpansionEngine, McKernel};
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::obs::{self, Counter, Gauge, Hist, HistSnapshot, MetricsRegistry};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -17,6 +23,8 @@ use std::time::{Duration, Instant};
 struct Request {
     x: Vec<f32>,
     reply: Sender<Vec<f32>>,
+    /// Submission time — measured end to end at the reply scatter.
+    t0: Instant,
 }
 
 /// Channel message: a job, or the shutdown poison pill (so `shutdown`
@@ -26,23 +34,80 @@ enum Msg {
     Shutdown,
 }
 
-/// Server throughput/latency counters.
-#[derive(Debug, Default)]
+/// Server metrics: a compatibility view over handles registered in a
+/// [`MetricsRegistry`] under `server.*` (the pre-observability
+/// `ServerStats` carried its own ad-hoc atomics; they now live in the
+/// registry so `mckernel stats` snapshots and these accessors always
+/// agree). Cloning the view clones the `Arc` handles — all clones
+/// observe the same metrics.
+#[derive(Debug, Clone)]
 pub struct ServerStats {
-    pub requests: AtomicU64,
-    pub batches: AtomicU64,
+    requests: Arc<Counter>,
+    batches: Arc<Counter>,
     /// Sum of batch sizes (for mean batch occupancy).
-    pub batched_rows: AtomicU64,
+    batched_rows: Arc<Counter>,
+    /// Batches flushed by the `max_wait` deadline while still short of
+    /// `max_batch`.
+    deadline_miss: Arc<Counter>,
+    /// Requests submitted but not yet replied to.
+    queue_depth: Arc<Gauge>,
+    /// End-to-end request latency (submit → reply scatter).
+    latency_ns: Arc<Hist>,
+    /// Rows per executed batch (occupancy distribution).
+    batch_fill: Arc<Hist>,
 }
 
 impl ServerStats {
+    /// Resolve the `server.*` handles in `reg`.
+    pub fn register(reg: &MetricsRegistry) -> ServerStats {
+        ServerStats {
+            requests: reg.counter("server.requests"),
+            batches: reg.counter("server.batches"),
+            batched_rows: reg.counter("server.batched_rows"),
+            deadline_miss: reg.counter("server.deadline_miss"),
+            queue_depth: reg.gauge("server.queue_depth"),
+            latency_ns: reg.histogram("server.latency_ns"),
+            batch_fill: reg.histogram("server.batch_fill"),
+        }
+    }
+
+    /// Total requests replied to.
+    pub fn requests(&self) -> u64 {
+        self.requests.get()
+    }
+
+    /// Total batches executed.
+    pub fn batches(&self) -> u64 {
+        self.batches.get()
+    }
+
+    /// Sum of executed batch sizes.
+    pub fn batched_rows(&self) -> u64 {
+        self.batched_rows.get()
+    }
+
+    /// Batches flushed by deadline while under `max_batch`.
+    pub fn deadline_misses(&self) -> u64 {
+        self.deadline_miss.get()
+    }
+
+    /// Requests currently submitted and unanswered.
+    pub fn queue_depth(&self) -> i64 {
+        self.queue_depth.get()
+    }
+
+    /// Request-latency summary (nanoseconds).
+    pub fn latency(&self) -> HistSnapshot {
+        self.latency_ns.snapshot()
+    }
+
     /// Mean rows per executed batch.
     pub fn mean_batch_size(&self) -> f64 {
-        let b = self.batches.load(Ordering::Relaxed);
+        let b = self.batches.get();
         if b == 0 {
             return 0.0;
         }
-        self.batched_rows.load(Ordering::Relaxed) as f64 / b as f64
+        self.batched_rows.get() as f64 / b as f64
     }
 }
 
@@ -50,21 +115,33 @@ impl ServerStats {
 pub struct FeatureServer {
     tx: Option<Sender<Msg>>,
     handle: Option<JoinHandle<()>>,
-    stats: Arc<ServerStats>,
+    stats: ServerStats,
     input_dim: usize,
     feature_dim: usize,
 }
 
 impl FeatureServer {
-    /// Start the server thread.
+    /// Start the server thread, reporting into the global registry.
     ///
     /// * `max_batch`: coalesce at most this many requests per batch.
     /// * `max_wait`: flush a partial batch after this deadline.
     pub fn start(map: Arc<McKernel>, max_batch: usize, max_wait: Duration) -> FeatureServer {
+        FeatureServer::start_with_registry(map, max_batch, max_wait, obs::global())
+    }
+
+    /// Like [`FeatureServer::start`] but reporting into `registry` —
+    /// the injection seam tests use for isolated, deterministic
+    /// counts (two servers on the *global* registry share metrics).
+    pub fn start_with_registry(
+        map: Arc<McKernel>,
+        max_batch: usize,
+        max_wait: Duration,
+        registry: &MetricsRegistry,
+    ) -> FeatureServer {
         assert!(max_batch > 0);
         let (tx, rx) = channel::<Msg>();
-        let stats = Arc::new(ServerStats::default());
-        let stats2 = Arc::clone(&stats);
+        let stats = ServerStats::register(registry);
+        let stats2 = stats.clone();
         let input_dim = map.input_dim();
         let feature_dim = map.feature_dim();
         let handle = std::thread::Builder::new()
@@ -80,7 +157,7 @@ impl FeatureServer {
         rx: Receiver<Msg>,
         max_batch: usize,
         max_wait: Duration,
-        stats: Arc<ServerStats>,
+        stats: ServerStats,
     ) {
         // One compiled engine for the server's lifetime: scratch and
         // feature buffer pooled across every coalesced batch.
@@ -95,10 +172,12 @@ impl FeatureServer {
             };
             let mut pending = vec![first];
             let deadline = Instant::now() + max_wait;
+            let mut deadline_hit = false;
             // Coalesce until full or deadline.
             while pending.len() < max_batch {
                 let now = Instant::now();
                 if now >= deadline {
+                    deadline_hit = true;
                     break;
                 }
                 match rx.recv_timeout(deadline - now) {
@@ -107,14 +186,19 @@ impl FeatureServer {
                         shutting_down = true;
                         break;
                     }
-                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Timeout) => {
+                        deadline_hit = true;
+                        break;
+                    }
                     Err(RecvTimeoutError::Disconnected) => break,
                 }
             }
-            stats.batches.fetch_add(1, Ordering::Relaxed);
-            stats
-                .batched_rows
-                .fetch_add(pending.len() as u64, Ordering::Relaxed);
+            stats.batches.inc();
+            stats.batched_rows.add(pending.len() as u64);
+            stats.batch_fill.record(pending.len() as u64);
+            if deadline_hit && pending.len() < max_batch {
+                stats.deadline_miss.inc();
+            }
             // Featurize the coalesced batch in ONE engine pass — this
             // is where coalescing pays: the tile-vectorized pipeline
             // turns every butterfly, gather and trig evaluation into a
@@ -127,7 +211,9 @@ impl FeatureServer {
             feats.resize(rows, map.feature_dim());
             engine.execute_matrix(&map, &xb, &mut feats);
             for (r, req) in pending.into_iter().enumerate() {
-                stats.requests.fetch_add(1, Ordering::Relaxed);
+                stats.requests.inc();
+                stats.latency_ns.record(req.t0.elapsed().as_nanos() as u64);
+                stats.queue_depth.add(-1);
                 let _ = req.reply.send(feats.row(r).to_vec()); // client may have left
             }
             if shutting_down {
@@ -146,7 +232,7 @@ impl FeatureServer {
         self.feature_dim
     }
 
-    /// Counters.
+    /// Metric accessors.
     pub fn stats(&self) -> &ServerStats {
         &self.stats
     }
@@ -155,10 +241,12 @@ impl FeatureServer {
     pub fn transform(&self, x: Vec<f32>) -> Option<Vec<f32>> {
         assert_eq!(x.len(), self.input_dim, "input width");
         let (reply_tx, reply_rx) = channel();
-        self.tx
-            .as_ref()?
-            .send(Msg::Job(Request { x, reply: reply_tx }))
-            .ok()?;
+        let req = Request { x, reply: reply_tx, t0: Instant::now() };
+        self.stats.queue_depth.add(1);
+        if self.tx.as_ref().and_then(|tx| tx.send(Msg::Job(req)).ok()).is_none() {
+            self.stats.queue_depth.add(-1);
+            return None;
+        }
         reply_rx.recv().ok()
     }
 
@@ -166,6 +254,7 @@ impl FeatureServer {
     pub fn client(&self) -> FeatureClient {
         FeatureClient {
             tx: self.tx.as_ref().expect("server running").clone(),
+            stats: self.stats.clone(),
             input_dim: self.input_dim,
         }
     }
@@ -197,6 +286,7 @@ impl Drop for FeatureServer {
 #[derive(Clone)]
 pub struct FeatureClient {
     tx: Sender<Msg>,
+    stats: ServerStats,
     input_dim: usize,
 }
 
@@ -205,9 +295,12 @@ impl FeatureClient {
     pub fn transform(&self, x: Vec<f32>) -> Option<Vec<f32>> {
         assert_eq!(x.len(), self.input_dim, "input width");
         let (reply_tx, reply_rx) = channel();
-        self.tx
-            .send(Msg::Job(Request { x, reply: reply_tx }))
-            .ok()?;
+        let req = Request { x, reply: reply_tx, t0: Instant::now() };
+        self.stats.queue_depth.add(1);
+        if self.tx.send(Msg::Job(req)).is_err() {
+            self.stats.queue_depth.add(-1);
+            return None;
+        }
         reply_rx.recv().ok()
     }
 }
@@ -217,9 +310,19 @@ mod tests {
     use super::*;
     use crate::mckernel::McKernelFactory;
 
+    fn test_map() -> Arc<McKernel> {
+        Arc::new(McKernelFactory::new(16).expansions(1).seed(4).build())
+    }
+
+    /// Each test server gets its own registry: counts are per-server
+    /// and immune to other tests running in the same process.
     fn server(max_batch: usize) -> FeatureServer {
-        let map = Arc::new(McKernelFactory::new(16).expansions(1).seed(4).build());
-        FeatureServer::start(map, max_batch, Duration::from_millis(2))
+        FeatureServer::start_with_registry(
+            test_map(),
+            max_batch,
+            Duration::from_millis(2),
+            &MetricsRegistry::new(),
+        )
     }
 
     #[test]
@@ -240,7 +343,7 @@ mod tests {
     fn concurrent_clients_get_correct_rows() {
         let s = server(4);
         let client = s.client();
-        let map = Arc::new(McKernelFactory::new(16).expansions(1).seed(4).build());
+        let map = test_map();
         let handles: Vec<_> = (0..12)
             .map(|k| {
                 let c = client.clone();
@@ -256,8 +359,9 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
-        assert_eq!(s.stats().requests.load(Ordering::Relaxed), 12);
-        assert!(s.stats().batches.load(Ordering::Relaxed) <= 12);
+        assert_eq!(s.stats().requests(), 12);
+        assert!(s.stats().batches() <= 12);
+        assert_eq!(s.stats().latency().count, 12);
         s.shutdown();
     }
 
@@ -279,7 +383,7 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
-        let batches = s.stats().batches.load(Ordering::Relaxed);
+        let batches = s.stats().batches();
         assert!(batches < 16, "no coalescing happened: {batches} batches");
         assert!(s.stats().mean_batch_size() > 1.0);
         s.shutdown();
@@ -296,5 +400,52 @@ mod tests {
     fn wrong_width_rejected() {
         let s = server(2);
         let _ = s.transform(vec![0.0; 3]);
+    }
+
+    #[test]
+    fn deadline_flush_counts_as_miss() {
+        // max_batch 8 but a single request: the 2ms deadline flushes a
+        // 1-row batch → exactly one deadline miss, deterministically.
+        let s = server(8);
+        let x: Vec<f32> = vec![0.25; 16];
+        s.transform(x).unwrap();
+        assert_eq!(s.stats().deadline_misses(), 1);
+        assert_eq!(s.stats().batches(), 1);
+        assert_eq!(s.stats().batched_rows(), 1);
+        s.shutdown();
+    }
+
+    #[test]
+    fn transform_after_shutdown_returns_none() {
+        let s = server(4);
+        let client = s.client();
+        assert!(client.transform(vec![0.0; 16]).is_some());
+        s.shutdown();
+        assert!(client.transform(vec![0.0; 16]).is_none());
+    }
+
+    #[test]
+    fn registry_snapshot_reflects_request_counts() {
+        let reg = MetricsRegistry::new();
+        let s = FeatureServer::start_with_registry(test_map(), 4, Duration::from_millis(1), &reg);
+        for i in 0..5 {
+            let x: Vec<f32> = (0..16).map(|j| (i * j) as f32 * 0.1).collect();
+            s.transform(x).unwrap();
+        }
+        let view = s.stats().clone();
+        s.shutdown();
+        let snap = reg.snapshot_json();
+        let counters = snap.get("counters").unwrap();
+        assert_eq!(counters.get("server.requests").unwrap().as_usize(), Some(5));
+        assert_eq!(counters.get("server.batches").unwrap().as_usize(), Some(5));
+        // sequential callers: every reply is in before the next submit
+        let depth = snap.get("gauges").unwrap().get("server.queue_depth").unwrap();
+        assert_eq!(depth.as_usize(), Some(0));
+        let lat = snap.get("histograms").unwrap().get("server.latency_ns").unwrap();
+        assert_eq!(lat.get("count").unwrap().as_usize(), Some(5));
+        assert!(lat.get("p95").unwrap().as_f64().unwrap() > 0.0);
+        // and the typed view reads the same registry
+        assert_eq!(view.requests(), 5);
+        assert_eq!(view.queue_depth(), 0);
     }
 }

@@ -27,6 +27,8 @@
 //!   (`artifacts/*.hlo.txt`), never Python at run time.
 //! * [`coordinator`] — mini-batch training orchestration and the
 //!   feature-server request loop.
+//! * [`obs`] — zero-dependency observability: metrics registry,
+//!   scoped spans, JSONL traces, `mckernel stats` export.
 //! * [`benchkit`], [`proplite`], [`cli`] — in-tree bench harness,
 //!   property-testing framework and CLI parser (offline build: no
 //!   criterion / proptest / clap).
@@ -49,6 +51,7 @@ pub mod hash;
 pub mod linalg;
 pub mod mckernel;
 pub mod model;
+pub mod obs;
 pub mod optim;
 pub mod proplite;
 pub mod rand;

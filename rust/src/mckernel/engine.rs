@@ -20,7 +20,63 @@
 use super::feature_map::McKernel;
 use super::plan::{ExpansionPlan, FwhtDispatch};
 use crate::linalg::Matrix;
+use crate::obs;
 use crate::util::fastmath;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Per-execute stage-time accumulators, in nanoseconds. Stays all
+/// zeros when the engine is untimed.
+#[derive(Debug, Default, Clone, Copy)]
+struct StageTimes {
+    fwht: u64,
+    trig: u64,
+    write: u64,
+}
+
+/// `Instant::now()` only when timing — the disabled path never reads
+/// the clock.
+#[inline]
+fn stamp(on: bool) -> Option<Instant> {
+    if on {
+        Some(Instant::now())
+    } else {
+        None
+    }
+}
+
+/// Accumulate the elapsed time of a [`stamp`], if one was taken.
+#[inline]
+fn lap(t: Option<Instant>, acc: &mut u64) {
+    if let Some(t) = t {
+        *acc += t.elapsed().as_nanos() as u64;
+    }
+}
+
+/// Handles into the global registry for one plan fingerprint,
+/// resolved once at engine construction (`engine.<fingerprint>.*`).
+#[derive(Debug, Clone)]
+struct EngineMetrics {
+    rows: Arc<obs::Counter>,
+    execute_ns: Arc<obs::Hist>,
+    fwht_ns: Arc<obs::Hist>,
+    trig_ns: Arc<obs::Hist>,
+    write_ns: Arc<obs::Hist>,
+}
+
+impl EngineMetrics {
+    fn for_plan(plan: &ExpansionPlan) -> EngineMetrics {
+        let reg = obs::global();
+        let fp = plan.fingerprint();
+        EngineMetrics {
+            rows: reg.counter(&format!("engine.{fp}.rows")),
+            execute_ns: reg.histogram(&format!("engine.{fp}.execute_ns")),
+            fwht_ns: reg.histogram(&format!("engine.{fp}.fwht_ns")),
+            trig_ns: reg.histogram(&format!("engine.{fp}.trig_ns")),
+            write_ns: reg.histogram(&format!("engine.{fp}.write_ns")),
+        }
+    }
+}
 
 /// Executor for one [`ExpansionPlan`]: owns the plan plus its scratch
 /// pool, allocated once at construction and never grown. Hot paths
@@ -29,13 +85,20 @@ use crate::util::fastmath;
 pub struct ExpansionEngine {
     plan: ExpansionPlan,
     scratch: Vec<f32>,
+    metrics: Option<EngineMetrics>,
 }
 
 impl ExpansionEngine {
     /// Engine for an already-compiled plan.
+    ///
+    /// Observability binds here: when the global registry is enabled
+    /// at construction, the engine resolves its `engine.<fingerprint>`
+    /// metric handles and times each pipeline stage; when disabled
+    /// (the default), it carries `None` and `execute` pays one branch.
     pub fn with_plan(plan: ExpansionPlan) -> ExpansionEngine {
         let scratch = vec![0.0; plan.scratch_floats()];
-        ExpansionEngine { plan, scratch }
+        let metrics = if obs::enabled() { Some(EngineMetrics::for_plan(&plan)) } else { None };
+        ExpansionEngine { plan, scratch, metrics }
     }
 
     /// Compile-and-build for `map`, expecting ~`rows_hint` rows per
@@ -115,14 +178,25 @@ impl ExpansionEngine {
             "engine scratch does not match its plan"
         );
         let scratch_ptr = self.scratch.as_ptr();
-        match self.plan.dispatch() {
-            FwhtDispatch::PerRow => self.run_per_row(map, xs, rows, src_cols, out),
-            FwhtDispatch::Batched => self.run_batched(map, xs, rows, src_cols, out),
-        }
+        let timed = self.metrics.is_some();
+        let t_exec = stamp(timed);
+        let stages = match self.plan.dispatch() {
+            FwhtDispatch::PerRow => self.run_per_row(map, xs, rows, src_cols, out, timed),
+            FwhtDispatch::Batched => self.run_batched(map, xs, rows, src_cols, out, timed),
+        };
         debug_assert!(
             std::ptr::eq(scratch_ptr, self.scratch.as_ptr()),
             "engine scratch reallocated during execute"
         );
+        if let Some(m) = &self.metrics {
+            let mut total = 0u64;
+            lap(t_exec, &mut total);
+            m.rows.add(rows as u64);
+            m.execute_ns.record(total);
+            m.fwht_ns.record(stages.fwht);
+            m.trig_ns.record(stages.trig);
+            m.write_ns.record(stages.write);
+        }
     }
 
     /// Matrix-shaped convenience over [`ExpansionEngine::execute`].
@@ -136,6 +210,10 @@ impl ExpansionEngine {
     /// post-scale fused into the feature write. This is the pipeline
     /// the batched path is validated against (≤1e-6 abs on tested
     /// shapes; the only difference is the trig kernel).
+    ///
+    /// Stage accounting: the Fastfood passes land in `fwht`; the
+    /// trig+write loop is fused here, so its time lands in `trig` and
+    /// `write` stays 0 on this path.
     fn run_per_row(
         &mut self,
         map: &McKernel,
@@ -143,7 +221,9 @@ impl ExpansionEngine {
         rows: usize,
         src_cols: usize,
         out: &mut [f32],
-    ) {
+        timed: bool,
+    ) -> StageTimes {
+        let mut st = StageTimes::default();
         let n = self.plan.padded_dim();
         let fd = self.plan.feature_dim();
         let post_scale = self.plan.post_scale();
@@ -158,14 +238,19 @@ impl ExpansionEngine {
                 // Ẑx̂ into cos_half (as scratch), then write the pair.
                 // sin_cos computes both trig values in one libm call —
                 // the trig map dominates the per-sample profile.
+                let t = stamp(timed);
                 block.apply(padded, cos_half, tmp);
+                lap(t, &mut st.fwht);
+                let t = stamp(timed);
                 for i in 0..n {
                     let (s, c) = cos_half[i].sin_cos();
                     sin_half[i] = s * post_scale;
                     cos_half[i] = c * post_scale;
                 }
+                lap(t, &mut st.trig);
             }
         }
+        st
     }
 
     /// The batched pipeline: row-tiles of `plan.lanes()` rows stream
@@ -181,7 +266,9 @@ impl ExpansionEngine {
         rows: usize,
         src_cols: usize,
         out: &mut [f32],
-    ) {
+        timed: bool,
+    ) -> StageTimes {
+        let mut st = StageTimes::default();
         let n = self.plan.padded_dim();
         let fd = self.plan.feature_dim();
         let post_scale = self.plan.post_scale();
@@ -194,6 +281,7 @@ impl ExpansionEngine {
             let nl = n * lanes;
             let xslice = &xs[base * src_cols..(base + lanes) * src_cols];
             for (e, block) in map.blocks().iter().enumerate() {
+                let t = stamp(timed);
                 block.apply_tile(xslice, src_cols, lanes, tin, z);
                 // calibration diagonal: contiguous per-coefficient runs
                 let scale = block.scale();
@@ -203,11 +291,15 @@ impl ExpansionEngine {
                         *v *= sj;
                     }
                 }
+                lap(t, &mut st.fwht);
                 // polynomial trig over the whole tile; tin is free by
                 // now and becomes the cosine buffer
+                let t = stamp(timed);
                 fastmath::sin_cos_batch(&z[..nl], &mut sin[..nl], &mut tin[..nl]);
+                lap(t, &mut st.trig);
                 // transpose-out into the (cos, sin) halves, any output
                 // normalization fused into this single write
+                let t = stamp(timed);
                 for l in 0..lanes {
                     let seg = &mut out[(base + l) * fd + e * 2 * n..][..2 * n];
                     let (cos_half, sin_half) = seg.split_at_mut(n);
@@ -216,9 +308,11 @@ impl ExpansionEngine {
                         sin_half[j] = sin[j * lanes + l] * post_scale;
                     }
                 }
+                lap(t, &mut st.write);
             }
             base += lanes;
         }
+        st
     }
 }
 
@@ -268,6 +362,27 @@ mod tests {
         let mut eng = ExpansionEngine::new(&m, 4);
         let mut out: Vec<f32> = vec![];
         eng.execute(&m, &[], 0, 8, &mut out);
+    }
+
+    #[test]
+    fn stage_metrics_record_when_enabled() {
+        // the global registry stays enabled for the rest of this test
+        // process; assertions are therefore `>=` (other tests may add)
+        crate::obs::enable();
+        let m = map(12, 2);
+        let mut eng = ExpansionEngine::new(&m, 5);
+        let x = Matrix::from_fn(5, 12, |r, c| ((r * 7 + c) % 9) as f32 * 0.1);
+        let mut out = Matrix::zeros(5, m.feature_dim());
+        eng.execute_matrix(&m, &x, &mut out);
+        let fp = eng.plan().fingerprint();
+        let reg = crate::obs::global();
+        assert!(reg.counter(&format!("engine.{fp}.rows")).get() >= 5);
+        for stage in ["execute_ns", "fwht_ns", "trig_ns", "write_ns"] {
+            let snap = reg.histogram(&format!("engine.{fp}.{stage}")).snapshot();
+            assert!(snap.count >= 1, "engine.{fp}.{stage} never recorded");
+        }
+        // instrumentation must not perturb the numerics
+        assert_eq!(out.data(), m.transform_batch(&x).data());
     }
 
     #[test]

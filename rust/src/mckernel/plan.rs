@@ -160,6 +160,24 @@ impl ExpansionPlan {
         }
     }
 
+    /// Stable short identifier for this plan's compiled shape — the
+    /// key the engine's observability metrics are grouped under
+    /// (`engine.<fingerprint>.*`), e.g. `s784_n1024_e2_b32` for a
+    /// batched 784→1024 two-expansion plan tiling 32 lanes, with a
+    /// `_norm` suffix when normalization is folded in. Equal plans
+    /// fingerprint equally on any machine.
+    pub fn fingerprint(&self) -> String {
+        let d = match self.dispatch {
+            FwhtDispatch::Batched => "b",
+            FwhtDispatch::PerRow => "r",
+        };
+        let norm = if self.normalized { "_norm" } else { "" };
+        format!(
+            "s{}_n{}_e{}_{}{}{}",
+            self.input_dim, self.padded_dim, self.expansions, d, self.lanes, norm
+        )
+    }
+
     /// Whether this plan describes `map`'s geometry (guards against
     /// executing a plan compiled for a different feature map).
     pub fn matches(&self, map: &McKernel) -> bool {
@@ -225,6 +243,24 @@ mod tests {
         assert!(pn.is_normalized());
         let want = 1.0 / ((1024.0f32 * 2.0).sqrt());
         assert_eq!(pn.post_scale(), want);
+    }
+
+    #[test]
+    fn fingerprint_encodes_shape_and_dispatch() {
+        let p = ExpansionPlan::new(&config(784), 4);
+        assert_eq!(p.fingerprint(), "s784_n1024_e2_b4");
+        let r = ExpansionPlan::per_row(&config(784));
+        assert_eq!(r.fingerprint(), "s784_n1024_e2_r1");
+        assert_eq!(r.normalized().fingerprint(), "s784_n1024_e2_r1_norm");
+        // equal plans fingerprint equally; distinct shapes don't collide
+        assert_eq!(
+            ExpansionPlan::new(&config(784), 4).fingerprint(),
+            ExpansionPlan::new(&config(784), 4).fingerprint()
+        );
+        assert_ne!(
+            ExpansionPlan::new(&config(300), 4).fingerprint(),
+            ExpansionPlan::new(&config(784), 4).fingerprint()
+        );
     }
 
     #[test]

@@ -1,0 +1,360 @@
+//! Fixed-layout log-scale histogram for latency/duration samples.
+//!
+//! The layout is HDR-style with a hardwired geometry so recording is a
+//! handful of bit tricks and two atomic adds — no allocation, no
+//! locking, safe to share across threads behind an `Arc`:
+//!
+//! * values `0..16` land in 16 exact linear buckets;
+//! * every octave `[2^o, 2^(o+1))` with `o >= 4` is split into 4
+//!   sub-buckets keyed by the two bits below the leading bit.
+//!
+//! That gives `16 + 4·60 = 256` buckets covering all of `u64`, with
+//! relative quantile error bounded by the sub-bucket width: ≤ 25%
+//! above 16, exact below. Good enough to tell "FWHT dominates" from
+//! "the trig polynomial dominates", which is what the engine stage
+//! timers exist to answer.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Total bucket count (16 linear + 4 per octave for octaves 4..=63).
+pub const BUCKETS: usize = 256;
+
+/// Values below this threshold get their own exact bucket.
+const LINEAR: u64 = 16;
+
+/// Bucket index for a recorded value.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v < LINEAR {
+        return v as usize;
+    }
+    let o = 63 - v.leading_zeros() as usize; // leading-bit position, >= 4
+    let sub = ((v >> (o - 2)) & 3) as usize; // two bits below the leading bit
+    16 + (o - 4) * 4 + sub
+}
+
+/// Inclusive lower bound of a bucket (the smallest value mapping to it).
+pub fn bucket_lo(idx: usize) -> u64 {
+    assert!(idx < BUCKETS);
+    if idx < 16 {
+        return idx as u64;
+    }
+    let k = idx - 16;
+    let o = 4 + k / 4;
+    let sub = (k % 4) as u64;
+    (1u64 << o) + sub * (1u64 << (o - 2))
+}
+
+/// Exclusive upper bound of a bucket.
+fn bucket_hi(idx: usize) -> u64 {
+    if idx + 1 < BUCKETS {
+        bucket_lo(idx + 1)
+    } else {
+        u64::MAX
+    }
+}
+
+/// Concurrent log-scale histogram. All operations are `&self`; every
+/// field is an atomic updated with `Relaxed` ordering (metric reads
+/// tolerate being a few records behind concurrent writers).
+#[derive(Debug)]
+pub struct Hist {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Hist {
+    fn default() -> Hist {
+        Hist::new()
+    }
+}
+
+impl Hist {
+    pub fn new() -> Hist {
+        Hist {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Zero every bucket and the summary atomics.
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.min.store(u64::MAX, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+    }
+
+    /// Point-in-time summary with bucket-interpolated percentiles.
+    /// NaN-free: an empty histogram snapshots to all zeros.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let buckets: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let count = self.count.load(Ordering::Relaxed);
+        if count == 0 {
+            return HistSnapshot { count: 0, sum: 0, min: 0, max: 0, p50: 0.0, p95: 0.0, p99: 0.0 };
+        }
+        let min = self.min.load(Ordering::Relaxed);
+        let max = self.max.load(Ordering::Relaxed);
+        // Bucket interpolation can land just outside the observed
+        // range (e.g. one sample at 100 sits in bucket [96, 112), so
+        // the raw p50 is 96); the true empirical percentile always
+        // lies in [min, max], so clamp to it.
+        let pct = |p: f64| percentile_from(&buckets, count, p).clamp(min as f64, max as f64);
+        HistSnapshot {
+            count,
+            sum: self.sum.load(Ordering::Relaxed),
+            min,
+            max,
+            p50: pct(50.0),
+            p95: pct(95.0),
+            p99: pct(99.0),
+        }
+    }
+}
+
+/// Nearest-rank percentile over bucket counts, linearly interpolated
+/// inside the winning bucket. Exact for values below 16 when the
+/// bucket holds one sample; otherwise bounded by the bucket width.
+fn percentile_from(buckets: &[u64], count: u64, pct: f64) -> f64 {
+    if count == 0 {
+        return 0.0;
+    }
+    let target = ((pct / 100.0) * count as f64).ceil().max(1.0) as u64;
+    let mut cum = 0u64;
+    for (i, &c) in buckets.iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        if cum + c >= target {
+            let lo = bucket_lo(i) as f64;
+            let hi = bucket_hi(i) as f64;
+            let frac = if c > 1 { (target - cum - 1) as f64 / (c - 1) as f64 } else { 0.0 };
+            return lo + frac * (hi - lo);
+        }
+        cum += c;
+    }
+    bucket_lo(BUCKETS - 1) as f64
+}
+
+/// One histogram's summary at snapshot time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub min: u64,
+    pub max: u64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl HistSnapshot {
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Shared-schema JSON (see [`Dist`]).
+    pub fn to_json(&self) -> Json {
+        Dist {
+            count: self.count,
+            sum: self.sum as f64,
+            min: self.min as f64,
+            max: self.max as f64,
+            mean: self.mean(),
+            p50: self.p50,
+            p95: self.p95,
+            p99: self.p99,
+        }
+        .to_json()
+    }
+}
+
+/// One distribution in the snapshot schema shared by the live metrics
+/// registry and `benchkit`'s BENCH_*.json reports: both serialize
+/// through this struct, so a consumer parsing `count/sum/min/max/mean/
+/// p50/p95/p99` reads either source identically.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Dist {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Dist {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("count".to_string(), Json::Num(self.count as f64));
+        m.insert("sum".to_string(), Json::Num(self.sum));
+        m.insert("min".to_string(), Json::Num(self.min));
+        m.insert("max".to_string(), Json::Num(self.max));
+        m.insert("mean".to_string(), Json::Num(self.mean));
+        m.insert("p50".to_string(), Json::Num(self.p50));
+        m.insert("p95".to_string(), Json::Num(self.p95));
+        m.insert("p99".to_string(), Json::Num(self.p99));
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_buckets_are_exact() {
+        for v in 0..16u64 {
+            assert_eq!(bucket_index(v), v as usize);
+            assert_eq!(bucket_lo(v as usize), v);
+        }
+    }
+
+    #[test]
+    fn bucket_bounds_are_monotonic_and_consistent() {
+        for idx in 0..BUCKETS {
+            let lo = bucket_lo(idx);
+            assert_eq!(bucket_index(lo), idx, "lo of bucket {idx} maps back");
+            if idx > 0 {
+                assert!(bucket_lo(idx - 1) < lo);
+            }
+        }
+        // spot checks on the log region: octave 4 = [16, 32) in 4 sub-buckets
+        assert_eq!(bucket_index(16), 16);
+        assert_eq!(bucket_index(19), 16);
+        assert_eq!(bucket_index(20), 17);
+        assert_eq!(bucket_index(31), 19);
+        assert_eq!(bucket_index(32), 20);
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        // every value's bucket bounds bracket it within 25%
+        for &v in &[16u64, 100, 1_000, 123_456, 1 << 40, u64::MAX / 3] {
+            let idx = bucket_index(v);
+            let lo = bucket_lo(idx);
+            let hi = bucket_hi(idx);
+            assert!(lo <= v && v < hi, "{v} not in [{lo}, {hi})");
+            assert!((hi - lo) as f64 / lo as f64 <= 0.25 + 1e-9, "bucket too wide at {v}");
+        }
+    }
+
+    #[test]
+    fn percentiles_of_small_exact_values() {
+        let h = Hist::new();
+        for v in 0..10u64 {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 10);
+        assert_eq!(s.sum, 45);
+        assert_eq!(s.min, 0);
+        assert_eq!(s.max, 9);
+        // nearest-rank: p50 → 5th smallest = 4, p95/p99 → 10th = 9
+        assert_eq!(s.p50, 4.0);
+        assert_eq!(s.p95, 9.0);
+        assert_eq!(s.p99, 9.0);
+        assert!((s.mean() - 4.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_of_log_region_within_bucket_error() {
+        let h = Hist::new();
+        for i in 1..=1000u64 {
+            h.record(i * 1000); // 1k..1M ns, say
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 1000);
+        // true p50 = 500_000, p95 = 950_000; allow the 25% bucket width
+        assert!((s.p50 - 500_000.0).abs() / 500_000.0 <= 0.25, "p50 = {}", s.p50);
+        assert!((s.p95 - 950_000.0).abs() / 950_000.0 <= 0.25, "p95 = {}", s.p95);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99);
+    }
+
+    #[test]
+    fn empty_snapshot_is_nan_free_zeros() {
+        let s = Hist::new().snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!((s.min, s.max, s.sum), (0, 0, 0));
+        assert_eq!((s.p50, s.p95, s.p99), (0.0, 0.0, 0.0));
+        assert_eq!(s.mean(), 0.0);
+        // and the JSON form carries finite numbers only
+        let j = s.to_json();
+        for k in ["count", "sum", "min", "max", "mean", "p50", "p95", "p99"] {
+            assert!(j.get(k).unwrap().as_f64().unwrap().is_finite(), "{k}");
+        }
+    }
+
+    #[test]
+    fn reset_clears_everything() {
+        let h = Hist::new();
+        h.record(42);
+        h.record(7);
+        h.reset();
+        let s = h.snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.p95, 0.0);
+        h.record(3);
+        assert_eq!(h.snapshot().count, 1);
+        assert_eq!(h.snapshot().min, 3);
+    }
+
+    #[test]
+    fn percentiles_clamped_to_observed_range() {
+        let h = Hist::new();
+        h.record(100); // bucket [96, 112): raw interpolation says 96
+        let s = h.snapshot();
+        assert_eq!(s.p50, 100.0);
+        assert_eq!(s.p99, 100.0);
+        h.record(100_000);
+        let s = h.snapshot();
+        assert!(s.p50 >= s.min as f64 && s.p99 <= s.max as f64);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99);
+    }
+
+    #[test]
+    fn concurrent_records_all_land() {
+        let h = std::sync::Arc::new(Hist::new());
+        let mut joins = Vec::new();
+        for t in 0..4 {
+            let h = std::sync::Arc::clone(&h);
+            joins.push(std::thread::spawn(move || {
+                for i in 0..1000u64 {
+                    h.record(t * 1_000_000 + i);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(h.snapshot().count, 4000);
+    }
+}

@@ -1,0 +1,59 @@
+//! Zero-dependency observability: an atomic metrics registry
+//! ([`MetricsRegistry`]: counters, gauges, fixed-bucket log-scale
+//! histograms with p50/p95/p99 snapshots), scoped timers with a
+//! thread-local span stack and optional JSONL trace export
+//! ([`span`], [`trace_to`]), and a process-wide registry that costs
+//! one branch per instrumented call when disabled.
+//!
+//! ## Conventions
+//!
+//! * Durations are recorded in **nanoseconds**, metric names say so
+//!   (`…_ns`); counters count events or rows; gauges are levels.
+//! * Names are `layer.metric` or `layer.key.metric` — e.g.
+//!   `server.latency_ns`, `engine.<plan-fingerprint>.fwht_ns`,
+//!   `train.shard_ns`, `prefetch.stall_ns`, `span.<name>_ns`.
+//! * Hot paths resolve their `Arc` handles once at setup; recording
+//!   is lock-free atomics.
+//! * The global registry starts **disabled**. Fine-grained timers
+//!   (engine stages, trainer shards) check `enabled()` at setup and
+//!   skip timestamping entirely when off; coarse once-per-request /
+//!   once-per-batch metrics (the server, the prefetcher) record
+//!   unconditionally so their compatibility views stay exact.
+//!
+//! `mckernel stats` (see `cli::commands`) enables the registry,
+//! drives an instrumented workload, and writes
+//! [`MetricsRegistry::snapshot_json`] — the same schema `benchkit`
+//! reports distributions in (see [`Dist`]).
+
+pub mod hist;
+pub mod registry;
+pub mod span;
+
+pub use hist::{Dist, Hist, HistSnapshot};
+pub use registry::{Counter, Gauge, MetricsRegistry};
+pub use span::{span, trace_off, trace_to, SpanGuard};
+
+use std::sync::OnceLock;
+
+static GLOBAL: OnceLock<MetricsRegistry> = OnceLock::new();
+
+/// The process-wide registry. Starts disabled; `mckernel stats` (or
+/// any embedder) turns it on with [`enable`].
+pub fn global() -> &'static MetricsRegistry {
+    GLOBAL.get_or_init(MetricsRegistry::disabled)
+}
+
+/// Enable recording on the global registry.
+pub fn enable() {
+    global().set_enabled(true);
+}
+
+/// Disable recording on the global registry.
+pub fn disable() {
+    global().set_enabled(false);
+}
+
+/// Whether the global registry is currently recording.
+pub fn enabled() -> bool {
+    global().is_enabled()
+}

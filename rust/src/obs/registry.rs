@@ -1,0 +1,245 @@
+//! The metrics registry: named counters, gauges, and histograms.
+//!
+//! Handles (`Arc<Counter>` etc.) are resolved once by name and then
+//! recorded through lock-free atomics; the registry's maps are only
+//! locked at registration and snapshot time, never on the hot path.
+//! Two registrations of the same name return the same underlying
+//! metric, so a "compatibility view" like `coordinator::ServerStats`
+//! and a raw `snapshot_json()` consumer always agree.
+
+use super::hist::Hist;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotonic event counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    #[inline]
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.v.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Instantaneous signed level (queue depths, in-flight work).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicI64,
+}
+
+impl Gauge {
+    #[inline]
+    pub fn add(&self, delta: i64) {
+        self.v.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    pub fn set(&self, v: i64) {
+        self.v.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.v.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.v.store(0, Ordering::Relaxed);
+    }
+}
+
+/// A named collection of metrics plus an enabled flag.
+///
+/// The process-wide instance ([`super::global`]) starts **disabled**:
+/// instrumented call sites that check [`MetricsRegistry::is_enabled`]
+/// at setup time (the engine's stage timers, the trainers) then skip
+/// all timestamping, so the disabled hot path costs one branch.
+/// Freshly constructed registries start enabled — tests inject their
+/// own (e.g. `FeatureServer::start_with_registry`) for deterministic,
+/// isolated counts.
+#[derive(Debug)]
+pub struct MetricsRegistry {
+    enabled: AtomicBool,
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    hists: Mutex<BTreeMap<String, Arc<Hist>>>,
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> MetricsRegistry {
+        MetricsRegistry::new()
+    }
+}
+
+impl MetricsRegistry {
+    /// A fresh, enabled registry.
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry {
+            enabled: AtomicBool::new(true),
+            counters: Mutex::new(BTreeMap::new()),
+            gauges: Mutex::new(BTreeMap::new()),
+            hists: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// A fresh registry with recording gates off (the global default).
+    pub fn disabled() -> MetricsRegistry {
+        let r = MetricsRegistry::new();
+        r.enabled.store(false, Ordering::Relaxed);
+        r
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Resolve (creating if absent) the counter named `name`.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        Arc::clone(self.counters.lock().unwrap().entry(name.to_string()).or_default())
+    }
+
+    /// Resolve (creating if absent) the gauge named `name`.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        Arc::clone(self.gauges.lock().unwrap().entry(name.to_string()).or_default())
+    }
+
+    /// Resolve (creating if absent) the histogram named `name`.
+    pub fn histogram(&self, name: &str) -> Arc<Hist> {
+        Arc::clone(self.hists.lock().unwrap().entry(name.to_string()).or_default())
+    }
+
+    /// Current value of a counter, if registered.
+    pub fn counter_value(&self, name: &str) -> Option<u64> {
+        self.counters.lock().unwrap().get(name).map(|c| c.get())
+    }
+
+    /// Zero every registered metric (names stay registered).
+    pub fn reset(&self) {
+        for c in self.counters.lock().unwrap().values() {
+            c.reset();
+        }
+        for g in self.gauges.lock().unwrap().values() {
+            g.reset();
+        }
+        for h in self.hists.lock().unwrap().values() {
+            h.reset();
+        }
+    }
+
+    /// Serialize every metric: `{"enabled": …, "counters": {name:
+    /// value}, "gauges": {name: value}, "histograms": {name: dist}}`
+    /// where `dist` is the shared schema of [`super::Dist`]. Key order
+    /// is stable (BTreeMap), so snapshots diff cleanly.
+    pub fn snapshot_json(&self) -> Json {
+        let counters: BTreeMap<String, Json> = self
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Num(v.get() as f64)))
+            .collect();
+        let gauges: BTreeMap<String, Json> = self
+            .gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Num(v.get() as f64)))
+            .collect();
+        let hists: BTreeMap<String, Json> = self
+            .hists
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.snapshot().to_json()))
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("enabled".to_string(), Json::Bool(self.is_enabled()));
+        root.insert("counters".to_string(), Json::Obj(counters));
+        root.insert("gauges".to_string(), Json::Obj(gauges));
+        root.insert("histograms".to_string(), Json::Obj(hists));
+        Json::Obj(root)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_name_resolves_same_metric() {
+        let reg = MetricsRegistry::new();
+        let a = reg.counter("x.hits");
+        let b = reg.counter("x.hits");
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3);
+        assert_eq!(reg.counter_value("x.hits"), Some(3));
+        assert_eq!(reg.counter_value("x.misses"), None);
+    }
+
+    #[test]
+    fn gauge_tracks_level() {
+        let reg = MetricsRegistry::new();
+        let g = reg.gauge("q.depth");
+        g.add(3);
+        g.add(-1);
+        assert_eq!(g.get(), 2);
+        g.set(-5);
+        assert_eq!(g.get(), -5);
+    }
+
+    #[test]
+    fn enabled_flag_defaults() {
+        assert!(MetricsRegistry::new().is_enabled());
+        let d = MetricsRegistry::disabled();
+        assert!(!d.is_enabled());
+        d.set_enabled(true);
+        assert!(d.is_enabled());
+    }
+
+    #[test]
+    fn snapshot_shape_and_stability() {
+        let reg = MetricsRegistry::new();
+        reg.counter("b.count").add(7);
+        reg.gauge("a.depth").set(2);
+        reg.histogram("c.lat_ns").record(1000);
+        let s = reg.snapshot_json();
+        assert_eq!(s.get("counters").unwrap().get("b.count").unwrap().as_usize(), Some(7));
+        assert_eq!(s.get("gauges").unwrap().get("a.depth").unwrap().as_usize(), Some(2));
+        let h = s.get("histograms").unwrap().get("c.lat_ns").unwrap();
+        assert_eq!(h.get("count").unwrap().as_usize(), Some(1));
+        assert!(h.get("p95").unwrap().as_f64().unwrap() >= 1000.0 * 0.75);
+        // identical registries print identically (stable ordering)
+        assert_eq!(s.to_string(), reg.snapshot_json().to_string());
+    }
+
+    #[test]
+    fn reset_preserves_names() {
+        let reg = MetricsRegistry::new();
+        reg.counter("n").add(9);
+        reg.histogram("h").record(5);
+        reg.reset();
+        assert_eq!(reg.counter_value("n"), Some(0));
+        assert_eq!(reg.histogram("h").snapshot().count, 0);
+    }
+}

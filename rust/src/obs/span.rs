@@ -1,0 +1,156 @@
+//! Scoped timers ("spans") with a thread-local nesting stack and an
+//! optional JSONL trace sink.
+//!
+//! `let _s = obs::span("phase");` times the enclosing scope: on drop
+//! it records into the global histogram `span.<name>_ns` and — when a
+//! trace file is open via [`trace_to`] — appends one JSON line with
+//! the span's name, parent, depth, offset from process start, and
+//! duration. When the global registry is disabled, `span()` returns
+//! an inert guard that does nothing on drop.
+
+use super::hist::Hist;
+use crate::util::json::Json;
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+thread_local! {
+    /// Names of the spans currently open on this thread, outermost first.
+    static STACK: RefCell<Vec<&'static str>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Reference point for trace timestamps (first use of the obs layer).
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+fn process_epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+static TRACE: OnceLock<Mutex<Option<BufWriter<File>>>> = OnceLock::new();
+
+fn trace_slot() -> &'static Mutex<Option<BufWriter<File>>> {
+    TRACE.get_or_init(|| Mutex::new(None))
+}
+
+/// Open `path` as the JSONL trace sink (one JSON object per completed
+/// span). Replaces any previously open sink.
+pub fn trace_to(path: &str) -> std::io::Result<()> {
+    let _ = process_epoch(); // pin the epoch before any span closes
+    let f = File::create(path)?;
+    *trace_slot().lock().unwrap() = Some(BufWriter::new(f));
+    Ok(())
+}
+
+/// Flush and close the trace sink, if open.
+pub fn trace_off() {
+    if let Some(mut w) = trace_slot().lock().unwrap().take() {
+        let _ = w.flush();
+    }
+}
+
+/// Time a scope. Drop records; bind to a named `_guard` (a bare `_`
+/// drops immediately and times nothing).
+#[must_use = "the span records on drop; binding to `_` measures nothing"]
+pub struct SpanGuard {
+    name: &'static str,
+    start: Option<Instant>,
+    hist: Option<Arc<Hist>>,
+}
+
+/// Open a span named `name`. Inert (and nearly free) while the global
+/// registry is disabled.
+pub fn span(name: &'static str) -> SpanGuard {
+    if !super::enabled() {
+        return SpanGuard { name, start: None, hist: None };
+    }
+    let hist = super::global().histogram(&format!("span.{name}_ns"));
+    STACK.with(|s| s.borrow_mut().push(name));
+    SpanGuard { name, start: Some(Instant::now()), hist: Some(hist) }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(start) = self.start else { return };
+        let dur_ns = start.elapsed().as_nanos() as u64;
+        if let Some(h) = &self.hist {
+            h.record(dur_ns);
+        }
+        let (depth, parent) = STACK.with(|s| {
+            let mut st = s.borrow_mut();
+            st.pop();
+            (st.len(), st.last().copied())
+        });
+        trace_line(self.name, parent, depth, start, dur_ns);
+    }
+}
+
+fn trace_line(name: &str, parent: Option<&'static str>, depth: usize, start: Instant, dur_ns: u64) {
+    let mut guard = trace_slot().lock().unwrap();
+    let Some(w) = guard.as_mut() else { return };
+    let t_ns = start
+        .checked_duration_since(process_epoch())
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    let mut m = BTreeMap::new();
+    m.insert("name".to_string(), Json::Str(name.to_string()));
+    if let Some(p) = parent {
+        m.insert("parent".to_string(), Json::Str(p.to_string()));
+    }
+    m.insert("depth".to_string(), Json::Num(depth as f64));
+    m.insert("t_ns".to_string(), Json::Num(t_ns as f64));
+    m.insert("dur_ns".to_string(), Json::Num(dur_ns as f64));
+    let _ = writeln!(w, "{}", Json::Obj(m));
+    let _ = w.flush();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs;
+
+    #[test]
+    fn span_records_into_named_histogram() {
+        obs::enable();
+        {
+            let _g = obs::span("span_unit_test");
+            std::hint::black_box(0u64);
+        }
+        let snap = obs::global().histogram("span.span_unit_test_ns").snapshot();
+        assert!(snap.count >= 1);
+    }
+
+    #[test]
+    fn nested_spans_trace_parent_and_depth() {
+        obs::enable();
+        let path =
+            std::env::temp_dir().join(format!("mckernel_trace_{}.jsonl", std::process::id()));
+        trace_to(path.to_str().unwrap()).unwrap();
+        {
+            let _outer = obs::span("trace_outer");
+            let _inner = obs::span("trace_inner");
+        }
+        trace_off();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+        let inner = lines
+            .iter()
+            .find(|j| j.get("name").unwrap().as_str() == Some("trace_inner"))
+            .expect("inner span traced");
+        assert_eq!(inner.get("parent").unwrap().as_str(), Some("trace_outer"));
+        assert_eq!(inner.get("depth").unwrap().as_usize(), Some(1));
+        let outer = lines
+            .iter()
+            .find(|j| j.get("name").unwrap().as_str() == Some("trace_outer"))
+            .expect("outer span traced");
+        assert!(outer.get("parent").is_none());
+        assert_eq!(outer.get("depth").unwrap().as_usize(), Some(0));
+        assert!(
+            outer.get("dur_ns").unwrap().as_f64().unwrap()
+                >= inner.get("dur_ns").unwrap().as_f64().unwrap()
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -28,22 +28,39 @@ pub struct EpochRecord {
     pub train_loss: f64,
     pub train_accuracy: f64,
     pub test_accuracy: f64,
-    /// Wall-clock seconds spent in this epoch.
+    /// Wall-clock seconds spent in this epoch (training + any eval).
     pub seconds: f64,
+    /// Training-loop throughput in rows/second (excludes evaluation;
+    /// 0.0 when the loop was too fast for the clock or saw no rows).
+    pub rows_per_s: f64,
 }
 
 impl EpochRecord {
     /// CSV header matching [`EpochRecord::to_csv_row`].
     pub fn csv_header() -> &'static str {
-        "epoch,train_loss,train_accuracy,test_accuracy,seconds"
+        "epoch,train_loss,train_accuracy,test_accuracy,seconds,rows_per_s"
     }
 
     /// One CSV row.
     pub fn to_csv_row(&self) -> String {
         format!(
-            "{},{:.6},{:.6},{:.6},{:.3}",
-            self.epoch, self.train_loss, self.train_accuracy, self.test_accuracy, self.seconds
+            "{},{:.6},{:.6},{:.6},{:.3},{:.1}",
+            self.epoch,
+            self.train_loss,
+            self.train_accuracy,
+            self.test_accuracy,
+            self.seconds,
+            self.rows_per_s
         )
+    }
+
+    /// `rows / secs`, guarded against zero/degenerate denominators.
+    pub fn throughput(rows: usize, secs: f64) -> f64 {
+        if secs > 0.0 {
+            rows as f64 / secs
+        } else {
+            0.0
+        }
     }
 }
 
@@ -88,9 +105,23 @@ mod tests {
             train_accuracy: 0.9,
             test_accuracy: 0.85,
             seconds: 1.25,
+            rows_per_s: 1234.56,
         };
-        assert_eq!(r.to_csv_row(), "3,0.500000,0.900000,0.850000,1.250");
+        assert_eq!(r.to_csv_row(), "3,0.500000,0.900000,0.850000,1.250,1234.6");
         assert!(EpochRecord::csv_header().starts_with("epoch,"));
+        assert_eq!(
+            EpochRecord::csv_header().split(',').count(),
+            r.to_csv_row().split(',').count()
+        );
+        assert!(EpochRecord::csv_header().ends_with(",rows_per_s"));
+    }
+
+    #[test]
+    fn throughput_guards_degenerate_denominators() {
+        assert_eq!(EpochRecord::throughput(100, 2.0), 50.0);
+        assert_eq!(EpochRecord::throughput(100, 0.0), 0.0);
+        assert_eq!(EpochRecord::throughput(0, 1.0), 0.0);
+        assert!(EpochRecord::throughput(100, -1.0) == 0.0);
     }
 
     #[test]

@@ -9,9 +9,38 @@ use super::featurizer::{FeatureEngine, Featurizer};
 use super::metrics::{accuracy, EpochRecord};
 use crate::data::{Batcher, Dataset};
 use crate::model::{Gradients, SoftmaxRegression};
+use crate::obs;
 use crate::optim::{Sgd, SgdConfig};
 use crate::util::{tree_reduce_with, ThreadPool};
+use std::sync::Arc;
 use std::time::Instant;
+
+/// Trainer metric handles, resolved from the global registry only
+/// when observability is enabled at `fit` start — the disabled path
+/// never reads the clock for them. Both trainers share the
+/// `train.epoch_ns` / `train.rows` names; the shard/reduction pair is
+/// parallel-only.
+struct TrainerObs {
+    epoch_ns: Arc<obs::Hist>,
+    rows: Arc<obs::Counter>,
+    shard_ns: Arc<obs::Hist>,
+    reduce_ns: Arc<obs::Hist>,
+}
+
+impl TrainerObs {
+    fn resolve_if_enabled() -> Option<TrainerObs> {
+        if !obs::enabled() {
+            return None;
+        }
+        let reg = obs::global();
+        Some(TrainerObs {
+            epoch_ns: reg.histogram("train.epoch_ns"),
+            rows: reg.counter("train.rows"),
+            shard_ns: reg.histogram("train.shard_ns"),
+            reduce_ns: reg.histogram("train.reduce_ns"),
+        })
+    }
+}
 
 /// Trainer configuration (defaults = the paper's Figure 4/5 settings
 /// for the McKernel curve).
@@ -88,6 +117,7 @@ impl Trainer {
         // pooled feature matrix, reused every mini-batch.
         let mut engine = self.featurizer.make_engine(self.config.batch_size);
         let mut history = Vec::with_capacity(self.config.epochs);
+        let metrics = TrainerObs::resolve_if_enabled();
 
         for epoch in 0..self.config.epochs {
             let t0 = Instant::now();
@@ -111,6 +141,11 @@ impl Trainer {
                 loss_sum += loss as f64;
                 loss_batches += 1;
             }
+            let train_secs = t0.elapsed().as_secs_f64();
+            if let Some(m) = &metrics {
+                m.epoch_ns.record((train_secs * 1e9) as u64);
+                m.rows.add(train_count as u64);
+            }
             let test_acc = if self.config.eval_every_epoch || epoch + 1 == self.config.epochs {
                 self.evaluate(&model, test)
             } else {
@@ -122,6 +157,7 @@ impl Trainer {
                 train_accuracy: train_hits as f64 / train_count.max(1) as f64,
                 test_accuracy: test_acc,
                 seconds: t0.elapsed().as_secs_f64(),
+                rows_per_s: EpochRecord::throughput(train_count, train_secs),
             };
             if self.config.verbose {
                 eprintln!(
@@ -263,6 +299,10 @@ impl ParallelTrainer {
             .collect();
         let total_epochs = self.config.epochs;
         let mut history = Vec::with_capacity(total_epochs.saturating_sub(start_epoch));
+        let metrics = TrainerObs::resolve_if_enabled();
+        // Shard-timing handle cloned into the worker closure (timing
+        // happens on pool threads; recording is lock-free).
+        let shard_ns: Option<Arc<obs::Hist>> = metrics.as_ref().map(|m| Arc::clone(&m.shard_ns));
         for epoch in start_epoch..total_epochs {
             let t0 = Instant::now();
             let mut loss_sum = 0.0f64;
@@ -290,7 +330,9 @@ impl ParallelTrainer {
                     let mref = &model;
                     let images = &batch.images;
                     let labels = &batch.labels;
+                    let shard_ns = shard_ns.clone();
                     self.pool.scope_shards(&mut slots[..shards], move |_s, slot| {
+                        let t_shard = shard_ns.as_ref().map(|_| Instant::now());
                         slot.grads.reset();
                         slot.loss_sum = 0.0;
                         slot.hits = 0;
@@ -308,11 +350,15 @@ impl ParallelTrainer {
                         );
                         slot.loss_sum = ls;
                         slot.hits = h;
+                        if let (Some(hist), Some(t)) = (&shard_ns, t_shard) {
+                            hist.record(t.elapsed().as_nanos() as u64);
+                        }
                     });
                 }
                 // Fixed-order tree reduction into slot 0: merge order
                 // is a function of the shard count alone, never of
                 // which worker finished first.
+                let t_reduce = metrics.as_ref().map(|_| Instant::now());
                 tree_reduce_with(&mut slots[..shards], |a, b| {
                     a.grads.merge(&b.grads);
                     a.loss_sum += b.loss_sum;
@@ -320,11 +366,19 @@ impl ParallelTrainer {
                 });
                 let inv = 1.0 / rows as f32;
                 slots[0].grads.scale(inv);
+                if let (Some(m), Some(t)) = (&metrics, t_reduce) {
+                    m.reduce_ns.record(t.elapsed().as_nanos() as u64);
+                }
                 loss_sum += slots[0].loss_sum / rows as f64;
                 train_hits += slots[0].hits;
                 train_count += rows;
                 loss_batches += 1;
                 opt.step(&mut model, &slots[0].grads);
+            }
+            let train_secs = t0.elapsed().as_secs_f64();
+            if let Some(m) = &metrics {
+                m.epoch_ns.record((train_secs * 1e9) as u64);
+                m.rows.add(train_count as u64);
             }
             let test_acc = if self.config.eval_every_epoch || epoch + 1 == total_epochs {
                 evaluate_with(&self.featurizer, &model, test)
@@ -337,6 +391,7 @@ impl ParallelTrainer {
                 train_accuracy: train_hits as f64 / train_count.max(1) as f64,
                 test_accuracy: test_acc,
                 seconds: t0.elapsed().as_secs_f64(),
+                rows_per_s: EpochRecord::throughput(train_count, train_secs),
             };
             if self.config.verbose {
                 eprintln!(

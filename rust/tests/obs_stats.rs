@@ -1,0 +1,71 @@
+//! Integration test for `mckernel stats`: drives the instrumented
+//! workload in this test binary's own process (so the global registry
+//! starts fresh and disabled) and checks the exported snapshot shape
+//! deterministically — exact counts where the workload fixes them,
+//! finiteness everywhere else.
+
+use mckernel::cli::{commands, Args};
+use mckernel::util::json::Json;
+
+#[test]
+fn stats_snapshot_has_expected_shape() {
+    let out =
+        std::env::temp_dir().join(format!("mckernel_stats_test_{}.json", std::process::id()));
+    let out_s = out.to_str().unwrap().to_string();
+    let argv = [
+        "--quick", "--rows", "8", "--input-dim", "32", "--expansions", "1", "--requests", "6",
+        "--workers", "2", "--out", out_s.as_str(),
+    ];
+    let args = Args::parse(argv.iter().copied()).unwrap();
+    commands::cmd_stats(&args).unwrap();
+
+    let snap = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+    assert_eq!(snap.get("enabled").and_then(Json::as_bool), Some(true));
+
+    let hists = snap.get("histograms").and_then(Json::as_obj).expect("histograms object");
+    let counters = snap.get("counters").and_then(Json::as_obj).expect("counters object");
+    let gauges = snap.get("gauges").and_then(Json::as_obj).expect("gauges object");
+
+    // Engine stage timings keyed by plan fingerprint.
+    for stage in [".execute_ns", ".fwht_ns", ".trig_ns", ".write_ns"] {
+        assert!(
+            hists.keys().any(|k| k.starts_with("engine.") && k.ends_with(stage)),
+            "no engine histogram ending in {stage}: {:?}",
+            hists.keys().collect::<Vec<_>>()
+        );
+    }
+
+    // Trainer, server and prefetch histograms all recorded ≥ 1 sample
+    // with finite, ordered summary fields.
+    for name in [
+        "train.epoch_ns",
+        "train.shard_ns",
+        "train.reduce_ns",
+        "server.latency_ns",
+        "server.batch_fill",
+        "prefetch.stall_ns",
+    ] {
+        let h = hists.get(name).unwrap_or_else(|| panic!("missing histogram {name}"));
+        let f = |k: &str| {
+            h.get(k).and_then(Json::as_f64).unwrap_or_else(|| panic!("{name}.{k} not a number"))
+        };
+        assert!(f("count") >= 1.0, "{name} recorded nothing");
+        for field in ["sum", "min", "max", "mean", "p50", "p95", "p99"] {
+            assert!(f(field).is_finite(), "{name}.{field} not finite");
+        }
+        assert!(f("min") <= f("p50") && f("p50") <= f("p95"), "{name} percentiles unordered");
+        assert!(f("p95") <= f("p99") && f("p99") <= f("max"), "{name} tail unordered");
+    }
+
+    // Deterministic exact counts: one request per transform call, and
+    // every request drained before shutdown.
+    assert_eq!(counters.get("server.requests").and_then(Json::as_usize), Some(6));
+    assert!(counters.get("train.rows").and_then(Json::as_usize).unwrap_or(0) > 0, "train.rows");
+    assert_eq!(
+        gauges.get("server.queue_depth").and_then(Json::as_f64),
+        Some(0.0),
+        "queue fully drained"
+    );
+
+    let _ = std::fs::remove_file(&out);
+}
