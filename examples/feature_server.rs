@@ -7,7 +7,7 @@
 //!         [--clients 8] [--requests 2000] [--max-batch 32] [--max-wait-us 200]
 
 use mckernel::cli::Args;
-use mckernel::coordinator::FeatureServer;
+use mckernel::coordinator::{FeatureServer, ServerConfig};
 use mckernel::mckernel::McKernelFactory;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -33,7 +33,10 @@ fn main() -> anyhow::Result<()> {
         map.feature_dim(),
         requests / clients
     );
-    let server = FeatureServer::start(Arc::clone(&map), max_batch, Duration::from_micros(wait_us));
+    let server = FeatureServer::start(
+        Arc::clone(&map),
+        ServerConfig::new(max_batch, Duration::from_micros(wait_us)),
+    );
 
     let per_client = requests / clients;
     let t0 = Instant::now();
@@ -73,7 +76,7 @@ fn main() -> anyhow::Result<()> {
     );
     println!(
         "batching: {} batches, mean occupancy {:.1} rows/batch",
-        server.stats().batches.load(std::sync::atomic::Ordering::Relaxed),
+        server.stats().batches(),
         server.stats().mean_batch_size()
     );
     server.shutdown();

@@ -6,7 +6,7 @@
 //! Usage: cargo bench --bench bench_server [-- --quick]
 
 use mckernel::benchkit::Report;
-use mckernel::coordinator::FeatureServer;
+use mckernel::coordinator::{FeatureServer, ServerConfig};
 use mckernel::mckernel::McKernelFactory;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -15,7 +15,7 @@ fn run_load(clients: usize, per_client: usize, max_batch: usize, wait: Duration)
     let map = Arc::new(
         McKernelFactory::new(784).expansions(1).sigma(1.0).rbf_matern(40).seed(1).build(),
     );
-    let server = FeatureServer::start(map, max_batch, wait);
+    let server = FeatureServer::start(map, ServerConfig::new(max_batch, wait));
     let x: Vec<f32> = (0..784).map(|i| (i % 11) as f32 / 11.0).collect();
     let t0 = Instant::now();
     let handles: Vec<_> = (0..clients)

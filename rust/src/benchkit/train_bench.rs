@@ -71,7 +71,11 @@ pub fn compare_train_paths(
     let parallel_trainer = ParallelTrainer::new(tc, Featurizer::Identity);
     let mut parallel_acc = f64::NAN;
     let parallel = bench("train/parallel", cfg, |_| {
-        parallel_acc = parallel_trainer.fit(&train, &test).1.final_test_accuracy;
+        parallel_acc = parallel_trainer
+            .fit(&train, &test)
+            .expect("parallel fit")
+            .1
+            .final_test_accuracy;
     });
     let acc_delta = (serial_acc - parallel_acc).abs();
     TrainComparison { serial, parallel, workers, rows, acc_delta }

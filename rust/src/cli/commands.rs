@@ -2,15 +2,19 @@
 //! logic lives in the library so integration tests can drive it.
 
 use crate::cli::Args;
+use crate::coordinator::{FeatureServer, Prefetcher, ServerConfig};
 use crate::data::{Dataset, SyntheticSpec};
+use crate::fault::{FaultPlan, FaultSite, McError};
 use crate::mckernel::{Kernel, McKernelFactory};
 use crate::model::checkpoint::Checkpoint;
+use crate::obs::MetricsRegistry;
 use crate::optim::SgdConfig;
-use crate::train::{Featurizer, ParallelTrainer, TrainConfig, Trainer};
+use crate::train::{Featurizer, ParallelTrainer, RetryPolicy, TrainConfig, Trainer};
 use crate::util::json::Json;
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::collections::BTreeMap;
 use std::sync::Arc;
+use std::time::Duration;
 
 /// Usage text.
 pub const USAGE: &str = "mckernel — approximate kernel expansions in log-linear time
@@ -27,6 +31,7 @@ COMMANDS:
   gen-data   write a synthetic dataset as IDX files
   info       list AOT artifacts (requires `make artifacts`)
   serve      run the dynamic-batching feature server demo
+  chaos      deterministic fault-injection drill (seeded FaultPlan)
 
 COMMON OPTIONS:
   --dataset mnist|fashion   synthetic dataset family     [mnist]
@@ -41,6 +46,8 @@ COMMON OPTIONS:
   --backend native|pjrt     execution backend  [native]
   --artifacts DIR           artifact directory [artifacts]
   --checkpoint PATH         model file to write/read
+  --resume                  with train: autosave to --checkpoint every
+                            epoch and resume from it if present
   --csv PATH                write per-epoch history CSV
 
 Run `mckernel <command> --help` for details.";
@@ -136,12 +143,24 @@ pub fn cmd_train(args: &Args) -> Result<()> {
             // workers == 1 keeps the serial epoch-loop oracle; > 1
             // runs the sharded data-parallel engine (deterministic
             // fixed-order gradient reduction — see train::trainer).
-            let (model, report) = if config.workers > 1 {
-                ParallelTrainer::new(config, featurizer).fit(&train, &test)
+            let resume = args.flag("resume");
+            let (model, report) = if config.workers > 1 || resume {
+                let trainer = ParallelTrainer::new(config, featurizer);
+                if resume {
+                    let path: String = args.require("checkpoint")?;
+                    trainer.fit_auto(&path, &train, &test).context("resumable train")?
+                } else {
+                    trainer.fit(&train, &test).context("sharded train")?
+                }
             } else {
                 Trainer::new(config, featurizer).fit(&train, &test)
             };
-            maybe_save(args, &map, &model, &report)?;
+            if !resume {
+                // fit_auto already autosaved (cursor included) after
+                // every epoch; re-saving here could regress the cursor
+                // when a finished checkpoint was merely re-evaluated.
+                maybe_save(args, &map, &model, &report)?;
+            }
             report
         }
         "pjrt" => {
@@ -471,7 +490,7 @@ pub fn cmd_stats(args: &Args) -> Result<()> {
     {
         let _g = obs::span("stats.prefetch");
         let d = Arc::new(Dataset::synthetic(7, &SyntheticSpec::mnist(), "train", rows.max(8)));
-        let p = crate::coordinator::Prefetcher::spawn(d, 4, 7, 0, 1, false, None);
+        let p = Prefetcher::spawn(d, 4, 7, 0, 1, false, None);
         for _ in p.iter() {}
     }
 
@@ -479,10 +498,9 @@ pub fn cmd_stats(args: &Args) -> Result<()> {
     {
         let _g = obs::span("stats.serve");
         let map = Arc::new(McKernelFactory::new(16).expansions(1).rbf().seed(7).build());
-        let server = crate::coordinator::FeatureServer::start(
+        let server = FeatureServer::start(
             map,
-            8,
-            std::time::Duration::from_micros(100),
+            ServerConfig::new(8, Duration::from_micros(100)),
         );
         for i in 0..requests {
             let row = vec![(i % 7) as f32 * 0.1; 16];
@@ -553,10 +571,9 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let wait_us: u64 = args.parse_or("max-wait-us", 200u64)?;
     let requests: usize = args.parse_or("requests", 1000usize)?;
     let clients: usize = args.parse_or("clients", 8usize)?;
-    let server = crate::coordinator::FeatureServer::start(
+    let server = FeatureServer::start(
         Arc::clone(&map),
-        max_batch,
-        std::time::Duration::from_micros(wait_us),
+        ServerConfig::new(max_batch, Duration::from_micros(wait_us)),
     );
     let t0 = std::time::Instant::now();
     let per_client = requests / clients;
@@ -588,6 +605,268 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `mckernel chaos` — deterministic fault-injection drill: drives the
+/// hardened server, trainer, pool and prefetcher under seeded
+/// [`FaultPlan`]s and checks the fault-tolerance invariants end to
+/// end — every admitted request answered exactly once, panicked
+/// batches quarantined and recovered, load shed at the admission
+/// bound, retried training bit-identical to the fault-free run.
+/// Evidence is written as JSON (`--out`, default
+/// `CHAOS_snapshot.json`); any violated invariant is a non-zero exit.
+pub fn cmd_chaos(args: &Args) -> Result<()> {
+    let seed: u64 = args.parse_or("seed", crate::PAPER_SEED)?;
+    let quick = args.flag("quick");
+    let requests: usize = args.positive_or("requests", if quick { 48 } else { 256 })?;
+    let out = args.get_or("out", "CHAOS_snapshot.json");
+
+    // Injected panics are the point of this drill; silence the default
+    // hook's backtrace spew for the run so real output stays readable.
+    let hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let run = || -> Result<Json> {
+        let mut m = BTreeMap::new();
+        m.insert("seed".into(), Json::Num(seed as f64));
+        m.insert("accounting".into(), chaos_accounting(seed, requests)?);
+        m.insert("restart".into(), chaos_restart(seed)?);
+        m.insert("shedding".into(), chaos_shedding(seed)?);
+        m.insert("trainer".into(), chaos_trainer(seed, quick)?);
+        m.insert("lifecycle".into(), chaos_lifecycle(seed)?);
+        Ok(Json::Obj(m))
+    };
+    let outcome = run();
+    std::panic::set_hook(hook);
+    let snapshot = outcome?;
+    std::fs::write(&out, snapshot.to_string())?;
+    println!("wrote {out}");
+    println!("all fault-tolerance invariants held (seed {seed})");
+    Ok(())
+}
+
+fn chaos_map(seed: u64) -> Arc<crate::mckernel::McKernel> {
+    Arc::new(McKernelFactory::new(16).expansions(1).rbf().seed(seed).build())
+}
+
+/// Mixed engine faults, worker panics and latency injection: every
+/// submitted request must come back with a feature row or a typed
+/// error — zero hangs, zero lost replies, zero leaked admission slots.
+fn chaos_accounting(seed: u64, requests: usize) -> Result<Json> {
+    let reg = MetricsRegistry::new();
+    let plan = Arc::new(
+        FaultPlan::with_registry(seed, &reg)
+            .with_rate(FaultSite::EngineFault, 0.10)
+            .with_rate(FaultSite::WorkerPanic, 0.05)
+            .with_rate(FaultSite::Latency, 0.10)
+            .with_latency(Duration::from_millis(1)),
+    );
+    let config = ServerConfig::new(8, Duration::from_micros(200))
+        .max_queue(requests.max(1))
+        .deadline(Duration::from_secs(10))
+        .faults(Arc::clone(&plan));
+    let server = FeatureServer::start_with_registry(chaos_map(seed), config, &reg);
+    let clients = 4usize;
+    let per = requests.div_ceil(clients);
+    let (otx, orx) = std::sync::mpsc::channel();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let client = server.client();
+            let otx = otx.clone();
+            std::thread::spawn(move || {
+                for i in 0..per {
+                    let x = vec![((c * per + i) % 9) as f32 * 0.1; 16];
+                    let _ = otx.send(client.transform(x).map(|_| ()));
+                }
+            })
+        })
+        .collect();
+    drop(otx);
+    for h in handles {
+        h.join().expect("chaos client thread");
+    }
+    let (mut ok, mut errors) = (0u64, 0u64);
+    let mut kinds: BTreeMap<String, u64> = BTreeMap::new();
+    for outcome in orx.iter() {
+        match outcome {
+            Ok(()) => ok += 1,
+            Err(e) => {
+                errors += 1;
+                *kinds.entry(e.kind().to_string()).or_insert(0) += 1;
+            }
+        }
+    }
+    let submitted = (clients * per) as u64;
+    ensure!(
+        ok + errors == submitted,
+        "lost replies: {ok} ok + {errors} errors != {submitted} submitted"
+    );
+    let stats = server.stats().clone();
+    server.shutdown();
+    ensure!(stats.queue_depth() == 0, "admission slots leaked: {}", stats.queue_depth());
+    println!(
+        "chaos/accounting: {submitted} submitted = {ok} ok + {errors} typed errors  \
+         (restarts {}, injected {})",
+        stats.restarts(),
+        plan.injected()
+    );
+    let mut j = BTreeMap::new();
+    j.insert("submitted".into(), Json::Num(submitted as f64));
+    j.insert("ok".into(), Json::Num(ok as f64));
+    j.insert(
+        "errors".into(),
+        Json::Obj(kinds.into_iter().map(|(k, v)| (k, Json::Num(v as f64))).collect()),
+    );
+    j.insert("restarts".into(), Json::Num(stats.restarts() as f64));
+    j.insert("injected".into(), Json::Num(plan.injected() as f64));
+    Ok(Json::Obj(j))
+}
+
+/// One guaranteed serve-loop panic: the poisoned batch's request gets
+/// `WorkerPanic`, the restart is counted, and the next request is
+/// answered bit-exactly.
+fn chaos_restart(seed: u64) -> Result<Json> {
+    let reg = MetricsRegistry::new();
+    let plan = Arc::new(
+        FaultPlan::with_registry(seed, &reg)
+            .with_rate(FaultSite::WorkerPanic, 1.0)
+            .with_limit(FaultSite::WorkerPanic, 1),
+    );
+    let map = chaos_map(seed);
+    let config = ServerConfig::new(4, Duration::from_micros(50)).faults(plan);
+    let server = FeatureServer::start_with_registry(Arc::clone(&map), config, &reg);
+    let x: Vec<f32> = (0..16).map(|i| i as f32 * 0.05).collect();
+    let first = server.transform(x.clone());
+    ensure!(
+        first == Err(McError::WorkerPanic),
+        "first request should hit the injected panic: {first:?}"
+    );
+    let second = server
+        .transform(x.clone())
+        .map_err(|e| anyhow!("post-restart request failed: {e}"))?;
+    ensure!(second == map.transform(&x), "post-restart reply must be bit-exact");
+    let restarts = server.stats().restarts();
+    ensure!(restarts >= 1, "panic recovery must be counted");
+    server.shutdown();
+    println!("chaos/restart: injected serve-loop panic -> WorkerPanic reply, then recovered");
+    let mut j = BTreeMap::new();
+    j.insert("restarts".into(), Json::Num(restarts as f64));
+    Ok(Json::Obj(j))
+}
+
+/// Admission control under guaranteed latency: with `max_queue` 2 and
+/// a 50 ms injected stall, a burst of 6 submits sheds the overflow
+/// with `Overloaded` while every admitted request is still served.
+fn chaos_shedding(seed: u64) -> Result<Json> {
+    let reg = MetricsRegistry::new();
+    let plan = Arc::new(
+        FaultPlan::with_registry(seed, &reg)
+            .with_rate(FaultSite::Latency, 1.0)
+            .with_latency(Duration::from_millis(50)),
+    );
+    let config = ServerConfig::new(1, Duration::from_micros(10))
+        .max_queue(2)
+        .faults(plan);
+    let server = FeatureServer::start_with_registry(chaos_map(seed), config, &reg);
+    let client = server.client();
+    let mut admitted = Vec::new();
+    let mut shed = 0u64;
+    for i in 0..6 {
+        match client.submit(vec![0.1 * (i + 1) as f32; 16]) {
+            Ok(p) => admitted.push(p),
+            Err(McError::Overloaded { limit }) => {
+                ensure!(limit == 2, "shed error must carry the bound, got {limit}");
+                shed += 1;
+            }
+            Err(e) => bail!("unexpected submit error: {e}"),
+        }
+    }
+    let served = admitted.len() as u64;
+    ensure!(shed > 0, "burst never hit the admission bound");
+    for p in admitted {
+        p.wait().map_err(|e| anyhow!("admitted request failed: {e}"))?;
+    }
+    let rejected = server.stats().rejected();
+    ensure!(rejected == shed, "rejected counter {rejected} != shed {shed}");
+    server.shutdown();
+    println!("chaos/shedding: {shed} of 6 shed at max_queue=2, all {served} admitted served");
+    let mut j = BTreeMap::new();
+    j.insert("shed".into(), Json::Num(shed as f64));
+    j.insert("served".into(), Json::Num(served as f64));
+    Ok(Json::Obj(j))
+}
+
+/// Injected shard panics + bounded retries must leave the final
+/// weights bit-identical to the fault-free run (recomputed shards are
+/// pure functions of their inputs; the reduction order is fixed).
+fn chaos_trainer(seed: u64, quick: bool) -> Result<Json> {
+    let spec = SyntheticSpec::mnist();
+    let train = Dataset::synthetic(seed, &spec, "train", if quick { 60 } else { 200 });
+    let test = Dataset::synthetic(seed, &spec, "test", 20);
+    let cfg = TrainConfig {
+        epochs: if quick { 2 } else { 3 },
+        batch_size: 10,
+        sgd: SgdConfig { lr: 0.05, momentum: 0.0, clip: None },
+        seed,
+        eval_every_epoch: false,
+        verbose: false,
+        workers: 4,
+    };
+    let (clean, _) = ParallelTrainer::new(cfg.clone(), Featurizer::Identity)
+        .fit(&train, &test)
+        .map_err(|e| anyhow!("fault-free fit failed: {e}"))?;
+    let reg = MetricsRegistry::new();
+    let plan =
+        Arc::new(FaultPlan::with_registry(seed, &reg).with_rate(FaultSite::WorkerPanic, 0.2));
+    let retries_before = crate::obs::global().counter("train.retries").get();
+    let (chaotic, _) = ParallelTrainer::new(cfg, Featurizer::Identity)
+        .with_retry(RetryPolicy {
+            max_retries: 8,
+            backoff: Duration::from_millis(1),
+            backoff_cap: Duration::from_millis(10),
+        })
+        .with_faults(Arc::clone(&plan))
+        .fit(&train, &test)
+        .map_err(|e| anyhow!("chaotic fit failed: {e}"))?;
+    let retried = crate::obs::global().counter("train.retries").get() - retries_before;
+    ensure!(plan.injected() > 0, "chaos run never injected a fault");
+    ensure!(retried > 0, "injected panics must surface as counted retries");
+    ensure!(
+        chaotic.w().data() == clean.w().data() && chaotic.b() == clean.b(),
+        "retried training diverged from the fault-free run"
+    );
+    println!(
+        "chaos/trainer: {} injected shard panics, {retried} retries, weights bit-identical",
+        plan.injected()
+    );
+    let mut j = BTreeMap::new();
+    j.insert("injected".into(), Json::Num(plan.injected() as f64));
+    j.insert("retries".into(), Json::Num(retried as f64));
+    j.insert("bit_identical".into(), Json::Bool(true));
+    Ok(Json::Obj(j))
+}
+
+/// Lifecycle edges: pool submission after shutdown is a typed error
+/// (not a panic), and a consumer abandoning a prefetch epoch aborts
+/// the producer cleanly (joined, counted).
+fn chaos_lifecycle(seed: u64) -> Result<Json> {
+    let mut pool = crate::util::ThreadPool::new(2);
+    pool.execute(|| {}).map_err(|e| anyhow!("healthy pool rejected a job: {e}"))?;
+    pool.shutdown();
+    ensure!(
+        pool.execute(|| {}) == Err(McError::ShuttingDown),
+        "submit-after-shutdown must be ShuttingDown"
+    );
+    let reg = MetricsRegistry::new();
+    let d = Arc::new(Dataset::synthetic(seed, &SyntheticSpec::mnist(), "train", 100));
+    let p = Prefetcher::spawn_with_registry(d, 5, seed, 0, 1, false, None, &reg);
+    let _first = p.next();
+    drop(p);
+    let aborted = reg.counter("prefetch.aborted").get();
+    ensure!(aborted == 1, "prefetch abort not counted: {aborted}");
+    println!("chaos/lifecycle: pool shutdown + prefetch abort are typed and leak-free");
+    let mut j = BTreeMap::new();
+    j.insert("prefetch_aborted".into(), Json::Num(aborted as f64));
+    Ok(Json::Obj(j))
+}
+
 /// Top-level dispatch.
 pub fn run(args: Args) -> Result<()> {
     match args.subcommand() {
@@ -607,6 +886,7 @@ pub fn run(args: Args) -> Result<()> {
                 "gen-data" => cmd_gen_data(&rest),
                 "info" => cmd_info(&rest),
                 "serve" => cmd_serve(&rest),
+                "chaos" => cmd_chaos(&rest),
                 "help" | "--help" => {
                     println!("{USAGE}");
                     Ok(())
@@ -720,6 +1000,25 @@ mod tests {
     }
 
     #[test]
+    fn chaos_quick_holds_invariants_and_writes_snapshot() {
+        let dir = std::env::temp_dir()
+            .join(format!("mckernel_chaos_cmd_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("CHAOS_snapshot.json");
+        let a = args(&["--quick", "--out", out.to_str().unwrap()]);
+        cmd_chaos(&a).unwrap();
+        let json = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        for key in ["accounting", "restart", "shedding", "trainer", "lifecycle"] {
+            assert!(json.get(key).is_some(), "snapshot missing {key}");
+        }
+        let trainer = json.get("trainer").unwrap();
+        assert_eq!(trainer.get("bit_identical").and_then(Json::as_bool), Some(true));
+        assert!(trainer.get("injected").and_then(Json::as_f64).unwrap() > 0.0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn tiny_native_train_runs() {
         let a = args(&[
             "train", "--train-size", "40", "--test-size", "20", "--epochs", "1",
@@ -735,5 +1034,25 @@ mod tests {
             "--expansions", "1", "--quiet", "--batch-size", "10", "--workers", "3",
         ]);
         run(a).unwrap();
+    }
+
+    #[test]
+    fn resumable_train_autosaves_and_reruns() {
+        let dir = std::env::temp_dir()
+            .join(format!("mckernel_resume_cmd_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let ck = dir.join("resume.mck");
+        let argv = [
+            "train", "--train-size", "40", "--test-size", "20", "--epochs", "2",
+            "--featurizer", "identity", "--quiet", "--batch-size", "10", "--workers", "2",
+            "--resume", "--checkpoint", ck.to_str().unwrap(),
+        ];
+        run(args(&argv)).unwrap(); // fresh run, autosaving every epoch
+        let saved = Checkpoint::load(&ck).unwrap();
+        assert_eq!(saved.epoch(), Some(2), "cursor records completed epochs");
+        run(args(&argv)).unwrap(); // complete checkpoint: evaluate only
+        assert_eq!(Checkpoint::load(&ck).unwrap().epoch(), Some(2), "cursor untouched");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -11,4 +11,4 @@ pub mod server;
 
 pub use pipeline::{FeaturizedBatch, Prefetcher};
 pub use pjrt_trainer::PjrtTrainer;
-pub use server::{FeatureServer, ServerStats};
+pub use server::{FeatureClient, FeatureServer, PendingReply, Reply, ServerConfig, ServerStats};

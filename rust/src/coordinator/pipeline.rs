@@ -5,9 +5,10 @@
 //! producer genuinely falls behind.
 
 use crate::data::{Batcher, Dataset};
+use crate::fault::McError;
 use crate::linalg::Matrix;
 use crate::mckernel::{ExpansionEngine, McKernel};
-use crate::obs;
+use crate::obs::{self, MetricsRegistry};
 use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -44,12 +45,40 @@ impl Prefetcher {
         drop_last: bool,
         map: Option<Arc<McKernel>>,
     ) -> Prefetcher {
+        Prefetcher::spawn_with_registry(
+            data,
+            batch_size,
+            seed,
+            epoch,
+            depth,
+            drop_last,
+            map,
+            obs::global(),
+        )
+    }
+
+    /// Like [`Prefetcher::spawn`] but reporting into `registry` — the
+    /// test-isolation seam for the `prefetch.*` counters.
+    #[allow(clippy::too_many_arguments)] // spawn's signature + the seam
+    pub fn spawn_with_registry(
+        data: Arc<Dataset>,
+        batch_size: usize,
+        seed: u64,
+        epoch: usize,
+        depth: usize,
+        drop_last: bool,
+        map: Option<Arc<McKernel>>,
+        registry: &MetricsRegistry,
+    ) -> Prefetcher {
         let (tx, rx) = sync_channel(depth.max(1));
         // Queue-stall accounting: how long each `send` blocked on the
         // bounded channel (≈0 while the consumer keeps up; grows when
         // the producer outruns it and backpressure engages). Once per
         // batch, so it records unconditionally like the server stats.
-        let stall_ns = obs::global().histogram("prefetch.stall_ns");
+        let stall_ns = registry.histogram("prefetch.stall_ns");
+        // Early-abort accounting: epochs cut short because the
+        // consumer went away before draining the pipeline.
+        let aborted = registry.counter("prefetch.aborted");
         let handle = std::thread::Builder::new()
             .name(format!("mckernel-prefetch-{epoch}"))
             .spawn(move || {
@@ -74,7 +103,11 @@ impl Prefetcher {
                     let fb = FeaturizedBatch { features, labels: batch.labels, index: batch.index };
                     let t_send = Instant::now();
                     if tx.send(fb).is_err() {
-                        return; // consumer dropped: stop early
+                        // Consumer dropped: the channel is closed, so
+                        // stop producing instead of blocking forever —
+                        // `Drop` joins this thread promptly.
+                        aborted.inc();
+                        return;
                     }
                     stall_ns.record(t_send.elapsed().as_nanos() as u64);
                 }
@@ -92,11 +125,27 @@ impl Prefetcher {
     pub fn iter(&self) -> impl Iterator<Item = FeaturizedBatch> + '_ {
         std::iter::from_fn(move || self.next())
     }
+
+    /// Join the producer and surface how it ended: `Ok` for a clean
+    /// epoch, `Err(WorkerPanic)` if the producer thread panicked — a
+    /// channel close alone cannot distinguish "epoch finished" from
+    /// "producer died", so callers that must not silently truncate an
+    /// epoch check this after draining.
+    pub fn finish(mut self) -> Result<(), McError> {
+        // Drain so a blocked producer unblocks, then close and join.
+        while self.rx.try_recv().is_ok() {}
+        drop(std::mem::replace(&mut self.rx, sync_channel(1).1));
+        match self.handle.take() {
+            Some(h) => h.join().map_err(|_| McError::WorkerPanic),
+            None => Ok(()),
+        }
+    }
 }
 
 impl Drop for Prefetcher {
     fn drop(&mut self) {
-        // Drain so the producer unblocks, then join.
+        // Drain so the producer unblocks (it detects the closed
+        // channel, counts `prefetch.aborted`, and returns), then join.
         while self.rx.try_recv().is_ok() {}
         drop(std::mem::replace(&mut self.rx, sync_channel(1).1));
         if let Some(h) = self.handle.take() {
@@ -162,6 +211,28 @@ mod tests {
         let p = Prefetcher::spawn(d, 5, 1, 0, 1, false, None);
         let _one = p.next();
         drop(p); // must join cleanly even with batches pending
+    }
+
+    #[test]
+    fn early_drop_counts_as_aborted() {
+        let reg = MetricsRegistry::new();
+        let d = data(100);
+        // depth 1 with 20 batches: the producer is guaranteed to still
+        // be mid-epoch when the consumer walks away.
+        let p = Prefetcher::spawn_with_registry(d, 5, 1, 0, 1, false, None, &reg);
+        let _one = p.next();
+        drop(p); // joins the producer, which detects the closed channel
+        assert_eq!(reg.counter("prefetch.aborted").get(), 1);
+    }
+
+    #[test]
+    fn finish_reports_clean_epoch() {
+        let reg = MetricsRegistry::new();
+        let d = data(30);
+        let p = Prefetcher::spawn_with_registry(d, 10, 1, 0, 2, false, None, &reg);
+        assert_eq!(p.iter().count(), 3);
+        p.finish().unwrap();
+        assert_eq!(reg.counter("prefetch.aborted").get(), 0);
     }
 
     #[test]

@@ -5,26 +5,117 @@
 //! deadline-triggered), featurizes once per batch, and scatters the
 //! rows back to the callers.
 //!
+//! Fault posture ([`crate::fault`]): requests are validated at submit
+//! (width + finiteness), admission is bounded (`Overloaded` beyond
+//! [`ServerConfig::max_queue`], counted in `server.rejected`), every
+//! wait carries a deadline (`Timeout`, counted in `server.timeouts`),
+//! and the serve loop runs under `catch_unwind` supervision — a
+//! panicking batch is quarantined (its requests get `WorkerPanic`,
+//! the engine is rebuilt, `server.restarts` counts it) and the loop
+//! keeps serving. Every admitted request gets exactly one reply or
+//! typed error.
+//!
 //! Throughput/latency accounting lives in the observability registry
 //! (`server.*` metrics); [`ServerStats`] is the typed compatibility
 //! view over those handles. These are once-per-request /
 //! once-per-batch updates, so they record unconditionally — the
 //! enabled flag only gates the fine-grained engine/trainer timers.
 
+use crate::fault::{FaultPlan, FaultSite, McError};
 use crate::linalg::Matrix;
 use crate::mckernel::{ExpansionEngine, McKernel};
 use crate::obs::{self, Counter, Gauge, Hist, HistSnapshot, MetricsRegistry};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+/// What a request resolves to: a feature row or a typed error.
+pub type Reply = Result<Vec<f32>, McError>;
+
+/// Serving policy knobs (see module docs for the fault posture).
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Coalesce at most this many requests per batch.
+    pub max_batch: usize,
+    /// Flush a partial batch after this deadline.
+    pub max_wait: Duration,
+    /// Admission bound: submissions beyond this many in-flight
+    /// requests are shed with [`McError::Overloaded`].
+    pub max_queue: usize,
+    /// Per-request deadline (submit → reply wait); an elapsed wait
+    /// returns [`McError::Timeout`].
+    pub deadline: Duration,
+    /// Deterministic chaos schedule (None in production: one pointer
+    /// test per batch).
+    pub faults: Option<Arc<FaultPlan>>,
+}
+
+impl ServerConfig {
+    /// Policy with the given batching knobs and lenient defaults for
+    /// the rest (1024-deep admission, 30s deadline, no faults).
+    pub fn new(max_batch: usize, max_wait: Duration) -> ServerConfig {
+        ServerConfig {
+            max_batch,
+            max_wait,
+            max_queue: 1024,
+            deadline: Duration::from_secs(30),
+            faults: None,
+        }
+    }
+
+    /// Set the admission bound.
+    pub fn max_queue(mut self, n: usize) -> ServerConfig {
+        self.max_queue = n;
+        self
+    }
+
+    /// Set the per-request deadline.
+    pub fn deadline(mut self, d: Duration) -> ServerConfig {
+        self.deadline = d;
+        self
+    }
+
+    /// Install a chaos schedule.
+    pub fn faults(mut self, plan: Arc<FaultPlan>) -> ServerConfig {
+        self.faults = Some(plan);
+        self
+    }
+}
+
+/// Strict in-flight accounting shared by the server handle and every
+/// client: admission happens against `inflight` with a CAS (the gauge
+/// is a mirror for snapshots, not the source of truth), and release
+/// happens in [`InflightGuard::drop`] — exactly once per admitted
+/// request on *every* path (reply scatter, quarantine, shutdown
+/// drain, or a panicking loop dropping the request).
+struct Shared {
+    stats: ServerStats,
+    inflight: AtomicUsize,
+    input_dim: usize,
+    max_queue: usize,
+    deadline: Duration,
+}
+
+/// Releases one admission slot when the request it rides in drops.
+struct InflightGuard(Arc<Shared>);
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        self.0.inflight.fetch_sub(1, Ordering::AcqRel);
+        self.0.stats.queue_depth.add(-1);
+    }
+}
+
 /// One in-flight request.
 struct Request {
     x: Vec<f32>,
-    reply: Sender<Vec<f32>>,
+    reply: Sender<Reply>,
     /// Submission time — measured end to end at the reply scatter.
     t0: Instant,
+    _guard: InflightGuard,
 }
 
 /// Channel message: a job, or the shutdown poison pill (so `shutdown`
@@ -49,6 +140,13 @@ pub struct ServerStats {
     /// Batches flushed by the `max_wait` deadline while still short of
     /// `max_batch`.
     deadline_miss: Arc<Counter>,
+    /// Requests shed at admission (`Overloaded`).
+    rejected: Arc<Counter>,
+    /// Requests whose reply wait hit the per-request deadline.
+    timeouts: Arc<Counter>,
+    /// Serve-loop recoveries: quarantined batches + supervisor
+    /// restarts after a panic escaped the batch region.
+    restarts: Arc<Counter>,
     /// Requests submitted but not yet replied to.
     queue_depth: Arc<Gauge>,
     /// End-to-end request latency (submit → reply scatter).
@@ -65,13 +163,16 @@ impl ServerStats {
             batches: reg.counter("server.batches"),
             batched_rows: reg.counter("server.batched_rows"),
             deadline_miss: reg.counter("server.deadline_miss"),
+            rejected: reg.counter("server.rejected"),
+            timeouts: reg.counter("server.timeouts"),
+            restarts: reg.counter("server.restarts"),
             queue_depth: reg.gauge("server.queue_depth"),
             latency_ns: reg.histogram("server.latency_ns"),
             batch_fill: reg.histogram("server.batch_fill"),
         }
     }
 
-    /// Total requests replied to.
+    /// Total requests replied to (feature rows *and* typed errors).
     pub fn requests(&self) -> u64 {
         self.requests.get()
     }
@@ -89,6 +190,21 @@ impl ServerStats {
     /// Batches flushed by deadline while under `max_batch`.
     pub fn deadline_misses(&self) -> u64 {
         self.deadline_miss.get()
+    }
+
+    /// Requests shed at admission.
+    pub fn rejected(&self) -> u64 {
+        self.rejected.get()
+    }
+
+    /// Reply waits that hit the per-request deadline.
+    pub fn timeouts(&self) -> u64 {
+        self.timeouts.get()
+    }
+
+    /// Serve-loop recoveries after a panic.
+    pub fn restarts(&self) -> u64 {
+        self.restarts.get()
     }
 
     /// Requests currently submitted and unanswered.
@@ -111,22 +227,78 @@ impl ServerStats {
     }
 }
 
+/// Validate, admit, and enqueue one request; shared by the server
+/// handle and every client clone.
+fn submit(tx: &Sender<Msg>, shared: &Arc<Shared>, x: Vec<f32>) -> Result<PendingReply, McError> {
+    if x.len() != shared.input_dim {
+        return Err(McError::DimMismatch { expected: shared.input_dim, got: x.len() });
+    }
+    if let Some(index) = x.iter().position(|v| !v.is_finite()) {
+        return Err(McError::NonFinite { index });
+    }
+    let admitted = shared
+        .inflight
+        .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| {
+            (n < shared.max_queue).then_some(n + 1)
+        })
+        .is_ok();
+    if !admitted {
+        shared.stats.rejected.inc();
+        return Err(McError::Overloaded { limit: shared.max_queue });
+    }
+    shared.stats.queue_depth.add(1);
+    let guard = InflightGuard(Arc::clone(shared));
+    let (reply_tx, reply_rx) = channel();
+    let req = Request { x, reply: reply_tx, t0: Instant::now(), _guard: guard };
+    // A failed send returns the message, so the dropped guard releases
+    // the admission slot we just took.
+    tx.send(Msg::Job(req)).map_err(|_| McError::ShuttingDown)?;
+    Ok(PendingReply {
+        rx: reply_rx,
+        deadline: shared.deadline,
+        timeouts: Arc::clone(&shared.stats.timeouts),
+    })
+}
+
+/// An admitted request awaiting its reply — the asynchronous half of
+/// [`FeatureClient::submit`]. Dropping it abandons the reply (the
+/// server's send becomes a no-op).
+pub struct PendingReply {
+    rx: Receiver<Reply>,
+    deadline: Duration,
+    timeouts: Arc<Counter>,
+}
+
+impl PendingReply {
+    /// Block until the reply or the per-request deadline, whichever
+    /// comes first.
+    pub fn wait(self) -> Reply {
+        match self.rx.recv_timeout(self.deadline) {
+            Ok(reply) => reply,
+            Err(RecvTimeoutError::Timeout) => {
+                self.timeouts.inc();
+                Err(McError::Timeout { waited: self.deadline })
+            }
+            // The request was dropped without a reply: only a panic
+            // unwinding the serve loop does that (an orderly shutdown
+            // drains the queue with ShuttingDown replies).
+            Err(RecvTimeoutError::Disconnected) => Err(McError::WorkerPanic),
+        }
+    }
+}
+
 /// Handle to a running feature server.
 pub struct FeatureServer {
     tx: Option<Sender<Msg>>,
     handle: Option<JoinHandle<()>>,
-    stats: ServerStats,
-    input_dim: usize,
+    shared: Arc<Shared>,
     feature_dim: usize,
 }
 
 impl FeatureServer {
     /// Start the server thread, reporting into the global registry.
-    ///
-    /// * `max_batch`: coalesce at most this many requests per batch.
-    /// * `max_wait`: flush a partial batch after this deadline.
-    pub fn start(map: Arc<McKernel>, max_batch: usize, max_wait: Duration) -> FeatureServer {
-        FeatureServer::start_with_registry(map, max_batch, max_wait, obs::global())
+    pub fn start(map: Arc<McKernel>, config: ServerConfig) -> FeatureServer {
+        FeatureServer::start_with_registry(map, config, obs::global())
     }
 
     /// Like [`FeatureServer::start`] but reporting into `registry` —
@@ -134,34 +306,66 @@ impl FeatureServer {
     /// counts (two servers on the *global* registry share metrics).
     pub fn start_with_registry(
         map: Arc<McKernel>,
-        max_batch: usize,
-        max_wait: Duration,
+        config: ServerConfig,
         registry: &MetricsRegistry,
     ) -> FeatureServer {
-        assert!(max_batch > 0);
+        assert!(config.max_batch > 0);
+        assert!(config.max_queue > 0);
         let (tx, rx) = channel::<Msg>();
         let stats = ServerStats::register(registry);
-        let stats2 = stats.clone();
-        let input_dim = map.input_dim();
+        let shared = Arc::new(Shared {
+            stats: stats.clone(),
+            inflight: AtomicUsize::new(0),
+            input_dim: map.input_dim(),
+            max_queue: config.max_queue,
+            deadline: config.deadline,
+        });
         let feature_dim = map.feature_dim();
         let handle = std::thread::Builder::new()
             .name("mckernel-feature-server".into())
-            .spawn(move || Self::serve(map, rx, max_batch, max_wait, stats2))
+            .spawn(move || Self::serve(map, rx, config, stats))
             .expect("spawn server thread");
-        FeatureServer { tx: Some(tx), handle: Some(handle), stats, input_dim, feature_dim }
+        FeatureServer { tx: Some(tx), handle: Some(handle), shared, feature_dim }
+    }
+
+    /// Supervisor: run the batching loop, restarting it whenever a
+    /// panic escapes the per-batch quarantine (requests held by the
+    /// dying iteration are dropped — their clients observe
+    /// `WorkerPanic` — and later requests are served by the restarted
+    /// loop). On orderly exit, drain still-queued requests with
+    /// `ShuttingDown` so no admitted request is left waiting.
+    fn serve(map: Arc<McKernel>, rx: Receiver<Msg>, config: ServerConfig, stats: ServerStats) {
+        loop {
+            let exit = catch_unwind(AssertUnwindSafe(|| {
+                Self::serve_loop(&map, &rx, &config, &stats)
+            }));
+            match exit {
+                Ok(()) => break,
+                Err(_) => stats.restarts.inc(),
+            }
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(Msg::Job(req)) => {
+                    stats.requests.inc();
+                    let _ = req.reply.send(Err(McError::ShuttingDown));
+                }
+                Ok(Msg::Shutdown) => continue,
+                Err(_) => break,
+            }
+        }
     }
 
     /// The batching event loop.
-    fn serve(
-        map: Arc<McKernel>,
-        rx: Receiver<Msg>,
-        max_batch: usize,
-        max_wait: Duration,
-        stats: ServerStats,
+    fn serve_loop(
+        map: &Arc<McKernel>,
+        rx: &Receiver<Msg>,
+        config: &ServerConfig,
+        stats: &ServerStats,
     ) {
-        // One compiled engine for the server's lifetime: scratch and
+        // One compiled engine for the loop's lifetime: scratch and
         // feature buffer pooled across every coalesced batch.
-        let mut engine = ExpansionEngine::new(&map, max_batch);
+        let mut engine = ExpansionEngine::new(map, config.max_batch);
         let mut feats = Matrix::zeros(0, 0);
         let mut shutting_down = false;
         loop {
@@ -171,10 +375,10 @@ impl FeatureServer {
                 Ok(Msg::Shutdown) | Err(_) => return,
             };
             let mut pending = vec![first];
-            let deadline = Instant::now() + max_wait;
+            let deadline = Instant::now() + config.max_wait;
             let mut deadline_hit = false;
             // Coalesce until full or deadline.
-            while pending.len() < max_batch {
+            while pending.len() < config.max_batch {
                 let now = Instant::now();
                 if now >= deadline {
                     deadline_hit = true;
@@ -196,7 +400,7 @@ impl FeatureServer {
             stats.batches.inc();
             stats.batched_rows.add(pending.len() as u64);
             stats.batch_fill.record(pending.len() as u64);
-            if deadline_hit && pending.len() < max_batch {
+            if deadline_hit && pending.len() < config.max_batch {
                 stats.deadline_miss.inc();
             }
             // Featurize the coalesced batch in ONE engine pass — this
@@ -209,12 +413,58 @@ impl FeatureServer {
                 xb.row_mut(r).copy_from_slice(&req.x);
             }
             feats.resize(rows, map.feature_dim());
-            engine.execute_matrix(&map, &xb, &mut feats);
+            if let Some(plan) = &config.faults {
+                if plan.fires(FaultSite::Latency) {
+                    std::thread::sleep(plan.latency());
+                }
+            }
+            // Execute under a per-batch unwind boundary: a panic here
+            // poisons only this batch, not the loop.
+            let run = catch_unwind(AssertUnwindSafe(|| {
+                if let Some(plan) = &config.faults {
+                    if plan.fires(FaultSite::WorkerPanic) {
+                        panic!("injected fault: serve-loop worker panic");
+                    }
+                }
+                engine.execute_matrix(map, &xb, &mut feats);
+            }));
+            if run.is_err() {
+                // Quarantine: the batch's requests get WorkerPanic,
+                // the engine is rebuilt (its pooled state is suspect
+                // mid-unwind), and the loop keeps serving. Counted as
+                // a restart — this *is* the worker recovery.
+                stats.restarts.inc();
+                engine = ExpansionEngine::new(map, config.max_batch);
+                feats = Matrix::zeros(0, 0);
+                for req in pending {
+                    stats.requests.inc();
+                    stats.latency_ns.record(req.t0.elapsed().as_nanos() as u64);
+                    let _ = req.reply.send(Err(McError::WorkerPanic));
+                }
+                if shutting_down {
+                    return;
+                }
+                continue;
+            }
+            if let Some(plan) = &config.faults {
+                if plan.fires(FaultSite::EngineFault) {
+                    // Poison the first output row; the finiteness scan
+                    // below must catch it and degrade to a typed error
+                    // for that row only.
+                    for v in feats.row_mut(0) {
+                        *v = f32::NAN;
+                    }
+                }
+            }
             for (r, req) in pending.into_iter().enumerate() {
                 stats.requests.inc();
                 stats.latency_ns.record(req.t0.elapsed().as_nanos() as u64);
-                stats.queue_depth.add(-1);
-                let _ = req.reply.send(feats.row(r).to_vec()); // client may have left
+                let row = feats.row(r);
+                let reply = match row.iter().position(|v| !v.is_finite()) {
+                    Some(index) => Err(McError::NonFinite { index }),
+                    None => Ok(row.to_vec()),
+                };
+                let _ = req.reply.send(reply); // client may have left
             }
             if shutting_down {
                 return;
@@ -224,7 +474,7 @@ impl FeatureServer {
 
     /// Expected input width.
     pub fn input_dim(&self) -> usize {
-        self.input_dim
+        self.shared.input_dim
     }
 
     /// Produced feature width.
@@ -234,33 +484,27 @@ impl FeatureServer {
 
     /// Metric accessors.
     pub fn stats(&self) -> &ServerStats {
-        &self.stats
+        &self.shared.stats
     }
 
-    /// Synchronous call: featurize one vector.
-    pub fn transform(&self, x: Vec<f32>) -> Option<Vec<f32>> {
-        assert_eq!(x.len(), self.input_dim, "input width");
-        let (reply_tx, reply_rx) = channel();
-        let req = Request { x, reply: reply_tx, t0: Instant::now() };
-        self.stats.queue_depth.add(1);
-        if self.tx.as_ref().and_then(|tx| tx.send(Msg::Job(req)).ok()).is_none() {
-            self.stats.queue_depth.add(-1);
-            return None;
-        }
-        reply_rx.recv().ok()
+    /// Synchronous call: featurize one vector, or a typed error
+    /// (invalid request, shed, deadline, quarantined batch, shutdown).
+    pub fn transform(&self, x: Vec<f32>) -> Reply {
+        let tx = self.tx.as_ref().ok_or(McError::ShuttingDown)?;
+        submit(tx, &self.shared, x)?.wait()
     }
 
     /// A cloneable client handle usable from other threads.
     pub fn client(&self) -> FeatureClient {
         FeatureClient {
             tx: self.tx.as_ref().expect("server running").clone(),
-            stats: self.stats.clone(),
-            input_dim: self.input_dim,
+            shared: Arc::clone(&self.shared),
         }
     }
 
-    /// Stop the server (drains requests already queued ahead of the
-    /// poison pill; safe even while client handles are still alive).
+    /// Stop the server. Requests already queued ahead of the poison
+    /// pill are served; requests behind it get `ShuttingDown` replies.
+    /// Safe even while client handles are still alive.
     pub fn shutdown(mut self) {
         if let Some(tx) = self.tx.take() {
             let _ = tx.send(Msg::Shutdown);
@@ -286,22 +530,21 @@ impl Drop for FeatureServer {
 #[derive(Clone)]
 pub struct FeatureClient {
     tx: Sender<Msg>,
-    stats: ServerStats,
-    input_dim: usize,
+    shared: Arc<Shared>,
 }
 
 impl FeatureClient {
-    /// Synchronous featurize (None if the server shut down).
-    pub fn transform(&self, x: Vec<f32>) -> Option<Vec<f32>> {
-        assert_eq!(x.len(), self.input_dim, "input width");
-        let (reply_tx, reply_rx) = channel();
-        let req = Request { x, reply: reply_tx, t0: Instant::now() };
-        self.stats.queue_depth.add(1);
-        if self.tx.send(Msg::Job(req)).is_err() {
-            self.stats.queue_depth.add(-1);
-            return None;
-        }
-        reply_rx.recv().ok()
+    /// Asynchronous submit: validate + admit now, wait later. Lets a
+    /// caller pipeline requests (and makes admission-control behaviour
+    /// deterministic to test: fill the queue without waiting).
+    pub fn submit(&self, x: Vec<f32>) -> Result<PendingReply, McError> {
+        submit(&self.tx, &self.shared, x)
+    }
+
+    /// Synchronous featurize: submit and wait for the reply or a
+    /// typed error.
+    pub fn transform(&self, x: Vec<f32>) -> Reply {
+        self.submit(x)?.wait()
     }
 }
 
@@ -319,8 +562,7 @@ mod tests {
     fn server(max_batch: usize) -> FeatureServer {
         FeatureServer::start_with_registry(
             test_map(),
-            max_batch,
-            Duration::from_millis(2),
+            ServerConfig::new(max_batch, Duration::from_millis(2)),
             &MetricsRegistry::new(),
         )
     }
@@ -396,10 +638,30 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
-    fn wrong_width_rejected() {
+    fn wrong_width_is_typed_error_not_panic() {
         let s = server(2);
-        let _ = s.transform(vec![0.0; 3]);
+        assert_eq!(
+            s.transform(vec![0.0; 3]),
+            Err(McError::DimMismatch { expected: 16, got: 3 })
+        );
+        // the rejected request never entered the queue
+        assert_eq!(s.stats().queue_depth(), 0);
+        assert_eq!(s.stats().requests(), 0);
+        s.shutdown();
+    }
+
+    #[test]
+    fn non_finite_input_is_rejected_at_submit() {
+        let s = server(2);
+        let mut x = vec![0.5f32; 16];
+        x[7] = f32::NAN;
+        assert_eq!(s.transform(x), Err(McError::NonFinite { index: 7 }));
+        let mut y = vec![0.5f32; 16];
+        y[3] = f32::INFINITY;
+        assert_eq!(s.transform(y), Err(McError::NonFinite { index: 3 }));
+        // server still healthy
+        assert!(s.transform(vec![0.5; 16]).is_ok());
+        s.shutdown();
     }
 
     #[test]
@@ -416,18 +678,22 @@ mod tests {
     }
 
     #[test]
-    fn transform_after_shutdown_returns_none() {
+    fn transform_after_shutdown_is_shutting_down_error() {
         let s = server(4);
         let client = s.client();
-        assert!(client.transform(vec![0.0; 16]).is_some());
+        assert!(client.transform(vec![0.0; 16]).is_ok());
         s.shutdown();
-        assert!(client.transform(vec![0.0; 16]).is_none());
+        assert_eq!(client.transform(vec![0.0; 16]), Err(McError::ShuttingDown));
     }
 
     #[test]
     fn registry_snapshot_reflects_request_counts() {
         let reg = MetricsRegistry::new();
-        let s = FeatureServer::start_with_registry(test_map(), 4, Duration::from_millis(1), &reg);
+        let s = FeatureServer::start_with_registry(
+            test_map(),
+            ServerConfig::new(4, Duration::from_millis(1)),
+            &reg,
+        );
         for i in 0..5 {
             let x: Vec<f32> = (0..16).map(|j| (i * j) as f32 * 0.1).collect();
             s.transform(x).unwrap();
@@ -438,6 +704,8 @@ mod tests {
         let counters = snap.get("counters").unwrap();
         assert_eq!(counters.get("server.requests").unwrap().as_usize(), Some(5));
         assert_eq!(counters.get("server.batches").unwrap().as_usize(), Some(5));
+        assert_eq!(counters.get("server.rejected").unwrap().as_usize(), Some(0));
+        assert_eq!(counters.get("server.restarts").unwrap().as_usize(), Some(0));
         // sequential callers: every reply is in before the next submit
         let depth = snap.get("gauges").unwrap().get("server.queue_depth").unwrap();
         assert_eq!(depth.as_usize(), Some(0));

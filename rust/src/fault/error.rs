@@ -1,0 +1,104 @@
+//! The crate's typed error taxonomy for serving and training.
+//!
+//! Every recoverable failure on the public serving/training APIs is
+//! one of these variants — callers match on them instead of fishing
+//! through panic payloads or `Option` ambiguity. The taxonomy is
+//! deliberately small and closed: each variant maps to exactly one
+//! operational response (fix the request, retry, back off, or stop).
+
+use std::fmt;
+use std::time::Duration;
+
+/// A typed, recoverable fault from the feature server, the parallel
+/// trainer, or the thread pool.
+#[derive(Debug, Clone, PartialEq)]
+pub enum McError {
+    /// Request width does not match the feature map's input width.
+    DimMismatch { expected: usize, got: usize },
+    /// A NaN/∞ value at `index` (request validation at submit, or a
+    /// poisoned feature row detected before the reply scatter).
+    NonFinite { index: usize },
+    /// The per-request deadline elapsed before a reply arrived.
+    Timeout { waited: Duration },
+    /// Admission control shed the request: `limit` requests were
+    /// already in flight.
+    Overloaded { limit: usize },
+    /// A worker panicked while holding this work item (the batch was
+    /// quarantined, or shard retries were exhausted).
+    WorkerPanic,
+    /// The target is shutting down (or already gone).
+    ShuttingDown,
+    /// An I/O failure (checkpoint autosave/load) with its cause.
+    Io(String),
+}
+
+impl McError {
+    /// Stable short tag — metric/log key for the variant.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            McError::DimMismatch { .. } => "dim_mismatch",
+            McError::NonFinite { .. } => "non_finite",
+            McError::Timeout { .. } => "timeout",
+            McError::Overloaded { .. } => "overloaded",
+            McError::WorkerPanic => "worker_panic",
+            McError::ShuttingDown => "shutting_down",
+            McError::Io(_) => "io",
+        }
+    }
+}
+
+impl fmt::Display for McError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            McError::DimMismatch { expected, got } => {
+                write!(f, "dimension mismatch: expected {expected}, got {got}")
+            }
+            McError::NonFinite { index } => {
+                write!(f, "non-finite value at index {index}")
+            }
+            McError::Timeout { waited } => {
+                write!(f, "deadline elapsed after {waited:?}")
+            }
+            McError::Overloaded { limit } => {
+                write!(f, "overloaded: {limit} requests already in flight")
+            }
+            McError::WorkerPanic => write!(f, "worker panicked"),
+            McError::ShuttingDown => write!(f, "shutting down"),
+            McError::Io(cause) => write!(f, "i/o failure: {cause}"),
+        }
+    }
+}
+
+impl std::error::Error for McError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_kind_cover_every_variant() {
+        let cases: Vec<(McError, &str)> = vec![
+            (McError::DimMismatch { expected: 16, got: 3 }, "dim_mismatch"),
+            (McError::NonFinite { index: 7 }, "non_finite"),
+            (McError::Timeout { waited: Duration::from_millis(5) }, "timeout"),
+            (McError::Overloaded { limit: 4 }, "overloaded"),
+            (McError::WorkerPanic, "worker_panic"),
+            (McError::ShuttingDown, "shutting_down"),
+            (McError::Io("disk full".into()), "io"),
+        ];
+        for (e, kind) in cases {
+            assert_eq!(e.kind(), kind);
+            assert!(!e.to_string().is_empty());
+        }
+    }
+
+    #[test]
+    fn is_a_std_error_usable_with_anyhow() {
+        fn takes_anyhow(r: std::result::Result<(), McError>) -> anyhow::Result<()> {
+            r?;
+            Ok(())
+        }
+        let err = takes_anyhow(Err(McError::WorkerPanic)).unwrap_err();
+        assert!(err.to_string().contains("panicked"));
+    }
+}

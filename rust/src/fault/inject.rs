@@ -1,0 +1,266 @@
+//! Seeded, deterministic fault injection.
+//!
+//! A [`FaultPlan`] decides — from the same counter-based MurmurHash3
+//! randomness the feature map uses for its coefficients — at which
+//! call indices a fault fires. Two plans built from the same seed and
+//! rates make identical decisions on every machine, so chaos
+//! scenarios replay bit-for-bit in CI. Consumers hold an
+//! `Option<Arc<FaultPlan>>` and branch on `None`: with no plan
+//! installed the production path pays a single pointer test, the same
+//! gating pattern the observability layer uses.
+
+use crate::hash::hash_rng::{streams, HashRng};
+use crate::obs::{self, Counter, MetricsRegistry};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Where a fault is injected. Each site draws from its own derived
+/// hash stream, so changing one site's rate never reshuffles another
+/// site's firing pattern.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Poison the expansion engine's output (NaN rows) after a batch
+    /// executes — exercises the server's output-finiteness quarantine.
+    EngineFault = 0,
+    /// Panic inside a worker (serve-loop batch or trainer shard).
+    WorkerPanic = 1,
+    /// Sleep before executing a batch — drives client deadlines.
+    Latency = 2,
+}
+
+impl FaultSite {
+    /// All sites, in stream order.
+    pub const ALL: [FaultSite; 3] =
+        [FaultSite::EngineFault, FaultSite::WorkerPanic, FaultSite::Latency];
+
+    /// Metric/log tag.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::EngineFault => "engine_fault",
+            FaultSite::WorkerPanic => "worker_panic",
+            FaultSite::Latency => "latency",
+        }
+    }
+}
+
+const SITES: usize = 3;
+
+/// A deterministic chaos schedule: per-site firing rates over hashed
+/// call indices, an optional per-site fire limit, and an artificial
+/// latency amount. Cheap to share (`Arc`) and lock-free to consult.
+pub struct FaultPlan {
+    seed: u64,
+    rngs: [HashRng; SITES],
+    rates: [f64; SITES],
+    limits: [u64; SITES],
+    latency: Duration,
+    /// Per-site sequential call cursors for [`FaultPlan::fires`].
+    cursors: [AtomicU64; SITES],
+    /// Per-site count of faults actually fired (enforces `limits`).
+    fired: [AtomicU64; SITES],
+    /// `fault.injected` — total faults fired across all sites.
+    injected: Arc<Counter>,
+}
+
+impl FaultPlan {
+    /// A plan with every rate 0 (never fires) reporting into the
+    /// global registry; configure with the `with_*` builders.
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan::with_registry(seed, obs::global())
+    }
+
+    /// Like [`FaultPlan::new`] but counting `fault.injected` in
+    /// `registry` — the test-isolation seam.
+    pub fn with_registry(seed: u64, registry: &MetricsRegistry) -> FaultPlan {
+        let base = HashRng::new(seed, streams::FAULT);
+        let rngs = [base.derive(0), base.derive(1), base.derive(2)];
+        FaultPlan {
+            seed,
+            rngs,
+            rates: [0.0; SITES],
+            limits: [u64::MAX; SITES],
+            latency: Duration::from_millis(1),
+            cursors: Default::default(),
+            fired: Default::default(),
+            injected: registry.counter("fault.injected"),
+        }
+    }
+
+    /// Set `site` to fire on a `rate` fraction of call indices
+    /// (`0.0..=1.0`).
+    pub fn with_rate(mut self, site: FaultSite, rate: f64) -> FaultPlan {
+        assert!((0.0..=1.0).contains(&rate), "rate must be in [0, 1]");
+        self.rates[site as usize] = rate;
+        self
+    }
+
+    /// Cap `site` at `max_fires` total faults (after which it goes
+    /// quiet) — for "fail once, then recover" scenarios.
+    pub fn with_limit(mut self, site: FaultSite, max_fires: u64) -> FaultPlan {
+        self.limits[site as usize] = max_fires;
+        self
+    }
+
+    /// Sleep amount injected when [`FaultSite::Latency`] fires.
+    pub fn with_latency(mut self, latency: Duration) -> FaultPlan {
+        self.latency = latency;
+        self
+    }
+
+    /// The seed this plan was built from.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The configured injected-latency amount.
+    pub fn latency(&self) -> Duration {
+        self.latency
+    }
+
+    /// Total faults fired so far (all sites).
+    pub fn injected(&self) -> u64 {
+        self.injected.get()
+    }
+
+    /// Would `site` fire at call index `key`, ignoring limits and
+    /// firing no fault? Pure: the decision depends only on
+    /// (seed, site, key) — this is the replayable schedule itself.
+    pub fn scheduled(&self, site: FaultSite, key: u64) -> bool {
+        let i = site as usize;
+        self.rates[i] > 0.0 && self.rngs[i].at_f64(key) < self.rates[i]
+    }
+
+    /// Fire `site` at explicit call index `key` (deterministic even
+    /// across threads when callers derive `key` from their work item —
+    /// the trainer keys on (epoch, batch, shard, attempt)). Returns
+    /// true and counts the fault iff the schedule says fire and the
+    /// site's limit is not exhausted.
+    pub fn fires_at(&self, site: FaultSite, key: u64) -> bool {
+        if !self.scheduled(site, key) {
+            return false;
+        }
+        let i = site as usize;
+        let claimed = self.fired[i]
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |n| {
+                (n < self.limits[i]).then_some(n + 1)
+            })
+            .is_ok();
+        if claimed {
+            self.injected.inc();
+        }
+        claimed
+    }
+
+    /// Sequential form of [`FaultPlan::fires_at`]: each call consumes
+    /// the site's next cursor index. Deterministic for single-threaded
+    /// call sites (the serve loop).
+    pub fn fires(&self, site: FaultSite) -> bool {
+        let k = self.cursors[site as usize].fetch_add(1, Ordering::Relaxed);
+        self.fires_at(site, k)
+    }
+}
+
+impl std::fmt::Debug for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FaultPlan")
+            .field("seed", &self.seed)
+            .field("rates", &self.rates)
+            .field("latency", &self.latency)
+            .finish()
+    }
+}
+
+/// Mix a trainer work item into one injection key: epoch, batch index
+/// within the epoch, shard index, and retry attempt. `attempt` is part
+/// of the key so a retried shard draws *fresh* randomness — otherwise
+/// a scheduled fault would re-fire forever and retries could never
+/// succeed.
+pub fn shard_key(epoch: usize, batch: usize, shard: usize, attempt: u32) -> u64 {
+    ((epoch as u64) << 44)
+        ^ ((batch as u64 & 0xFF_FFFF) << 20)
+        ^ ((shard as u64 & 0xFFF) << 8)
+        ^ (attempt as u64 & 0xFF)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let a = FaultPlan::with_registry(42, &MetricsRegistry::new())
+            .with_rate(FaultSite::WorkerPanic, 0.3);
+        let b = FaultPlan::with_registry(42, &MetricsRegistry::new())
+            .with_rate(FaultSite::WorkerPanic, 0.3);
+        for k in 0..512 {
+            assert_eq!(
+                a.scheduled(FaultSite::WorkerPanic, k),
+                b.scheduled(FaultSite::WorkerPanic, k),
+                "schedules diverge at {k}"
+            );
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ_and_rate_is_roughly_honored() {
+        let a = FaultPlan::with_registry(1, &MetricsRegistry::new())
+            .with_rate(FaultSite::EngineFault, 0.25);
+        let b = FaultPlan::with_registry(2, &MetricsRegistry::new())
+            .with_rate(FaultSite::EngineFault, 0.25);
+        let hits = |p: &FaultPlan| {
+            (0..2048).filter(|&k| p.scheduled(FaultSite::EngineFault, k)).count()
+        };
+        let (ha, hb) = (hits(&a), hits(&b));
+        // ~512 expected; a loose band catches rate bugs without flaking
+        assert!((300..750).contains(&ha), "rate off: {ha}/2048");
+        assert!((300..750).contains(&hb), "rate off: {hb}/2048");
+        let agree = (0..2048)
+            .filter(|&k| {
+                a.scheduled(FaultSite::EngineFault, k) == b.scheduled(FaultSite::EngineFault, k)
+            })
+            .count();
+        assert!(agree < 2048, "independent seeds produced identical schedules");
+    }
+
+    #[test]
+    fn sites_draw_independent_streams() {
+        let p = FaultPlan::with_registry(7, &MetricsRegistry::new())
+            .with_rate(FaultSite::EngineFault, 0.5)
+            .with_rate(FaultSite::Latency, 0.5);
+        let same = (0..1024)
+            .filter(|&k| {
+                p.scheduled(FaultSite::EngineFault, k) == p.scheduled(FaultSite::Latency, k)
+            })
+            .count();
+        assert!(same < 1024, "sites share a stream");
+    }
+
+    #[test]
+    fn limit_caps_fired_faults_and_counts_them() {
+        let reg = MetricsRegistry::new();
+        let p = FaultPlan::with_registry(9, &reg)
+            .with_rate(FaultSite::WorkerPanic, 1.0)
+            .with_limit(FaultSite::WorkerPanic, 2);
+        let fired = (0..100).filter(|_| p.fires(FaultSite::WorkerPanic)).count();
+        assert_eq!(fired, 2, "limit not enforced");
+        assert_eq!(p.injected(), 2);
+        assert_eq!(reg.counter("fault.injected").get(), 2);
+    }
+
+    #[test]
+    fn zero_rate_never_fires() {
+        let p = FaultPlan::with_registry(11, &MetricsRegistry::new());
+        assert!((0..256).all(|_| !p.fires(FaultSite::EngineFault)));
+        assert_eq!(p.injected(), 0);
+    }
+
+    #[test]
+    fn shard_key_varies_with_every_component() {
+        let base = shard_key(1, 2, 3, 0);
+        assert_ne!(base, shard_key(2, 2, 3, 0));
+        assert_ne!(base, shard_key(1, 3, 3, 0));
+        assert_ne!(base, shard_key(1, 2, 4, 0));
+        assert_ne!(base, shard_key(1, 2, 3, 1));
+    }
+}

@@ -1,0 +1,17 @@
+//! Fault tolerance: the typed error taxonomy ([`McError`]) threaded
+//! through the public serving/training APIs, and the seeded
+//! deterministic fault injector ([`FaultPlan`]) that makes chaos
+//! scenarios replayable bit-for-bit.
+//!
+//! The paper's recomputation premise — features are cheap to
+//! regenerate from a hashed seed — makes *retry-instead-of-die* the
+//! natural recovery strategy everywhere in this codebase: a panicked
+//! trainer shard is recomputed bit-identically on the surviving
+//! workers, a poisoned server batch is quarantined and its engine
+//! rebuilt, and a killed run resumes from the last epoch checkpoint.
+
+pub mod error;
+pub mod inject;
+
+pub use error::McError;
+pub use inject::{shard_key, FaultPlan, FaultSite};

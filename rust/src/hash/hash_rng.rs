@@ -46,6 +46,8 @@ pub mod streams {
     pub const INIT: u64 = 0x14;
     /// Mini-batch shuffling.
     pub const SHUFFLE: u64 = 0x5F;
+    /// Deterministic fault injection (`fault::FaultPlan`).
+    pub const FAULT: u64 = 0xFA;
 }
 
 impl HashRng {

@@ -29,6 +29,8 @@
 //!   feature-server request loop.
 //! * [`obs`] — zero-dependency observability: metrics registry,
 //!   scoped spans, JSONL traces, `mckernel stats` export.
+//! * [`fault`] — typed error taxonomy ([`fault::McError`]) and the
+//!   seeded deterministic chaos injector ([`fault::FaultPlan`]).
 //! * [`benchkit`], [`proplite`], [`cli`] — in-tree bench harness,
 //!   property-testing framework and CLI parser (offline build: no
 //!   criterion / proptest / clap).
@@ -46,6 +48,7 @@ pub mod benchkit;
 pub mod cli;
 pub mod coordinator;
 pub mod data;
+pub mod fault;
 pub mod fwht;
 pub mod hash;
 pub mod linalg;

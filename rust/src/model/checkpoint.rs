@@ -119,6 +119,18 @@ impl Checkpoint {
         Ok(Checkpoint { feature_config, model, meta })
     }
 
+    /// Build a mid-training checkpoint: model + feature config with
+    /// the resume cursor set to `completed_epochs` — what the trainer
+    /// autosaves after each epoch so `fit_auto` can pick up a killed
+    /// run.
+    pub fn for_training(
+        feature_config: Option<McKernelConfig>,
+        model: SoftmaxRegression,
+        completed_epochs: usize,
+    ) -> Checkpoint {
+        Checkpoint { feature_config, model, meta: BTreeMap::new() }.with_epoch(completed_epochs)
+    }
+
     /// Record the number of completed epochs in the metadata — the
     /// resume cursor read back by [`Checkpoint::epoch`] and passed to
     /// `ParallelTrainer::fit_resume`.
@@ -221,6 +233,14 @@ mod tests {
         let back = Checkpoint::read_from(&buf[..]).unwrap();
         assert_eq!(back.epoch(), Some(7));
         assert_eq!(sample().epoch(), None);
+    }
+
+    #[test]
+    fn for_training_sets_cursor() {
+        let ck = Checkpoint::for_training(None, SoftmaxRegression::zeros(3, 4), 5);
+        assert_eq!(ck.epoch(), Some(5));
+        assert!(ck.feature_config.is_none());
+        assert_eq!(ck.model.features(), 4);
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! [`Featurizer::make_engine`] and reuse it every mini-batch.
 
 use crate::linalg::Matrix;
-use crate::mckernel::{ExpansionEngine, McKernel};
+use crate::mckernel::{ExpansionEngine, McKernel, McKernelConfig};
 use crate::util::ThreadPool;
 use std::sync::Arc;
 
@@ -55,6 +55,18 @@ impl Featurizer {
             Featurizer::Identity => "identity",
             Featurizer::McKernel(_) => "mckernel",
             Featurizer::McKernelParallel(..) => "mckernel-par",
+        }
+    }
+
+    /// The feature-map config to persist in a checkpoint (`None` for
+    /// the raw-pixel identity baseline) — the trainer's autosave path
+    /// uses this so a resumed run rebuilds the identical map.
+    pub fn config(&self) -> Option<McKernelConfig> {
+        match self {
+            Featurizer::Identity => None,
+            Featurizer::McKernel(m) | Featurizer::McKernelParallel(m, _) => {
+                Some(m.config().clone())
+            }
         }
     }
 
@@ -167,7 +179,12 @@ impl Featurizer {
                         std::slice::from_raw_parts_mut(out_ptr.0.add(lo * fd), (hi - lo) * fd)
                     };
                     eng.execute(&m2, xs, hi - lo, d, seg);
-                });
+                })
+                // `apply_into`'s contract has no error channel; a
+                // panicking engine task here is an internal bug (the
+                // output would be silently incomplete), so escalate
+                // instead of returning partial features.
+                .expect("parallel featurization task failed");
                 &engine.out
             }
         }

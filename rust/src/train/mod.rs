@@ -8,4 +8,4 @@ pub mod trainer;
 
 pub use featurizer::{FeatureEngine, Featurizer};
 pub use metrics::{accuracy, confusion_matrix, EpochRecord};
-pub use trainer::{evaluate_with, ParallelTrainer, TrainConfig, Trainer, TrainReport};
+pub use trainer::{evaluate_with, ParallelTrainer, RetryPolicy, TrainConfig, Trainer, TrainReport};

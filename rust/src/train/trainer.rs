@@ -8,12 +8,15 @@
 use super::featurizer::{FeatureEngine, Featurizer};
 use super::metrics::{accuracy, EpochRecord};
 use crate::data::{Batcher, Dataset};
+use crate::fault::{shard_key, FaultPlan, FaultSite, McError};
+use crate::model::checkpoint::Checkpoint;
 use crate::model::{Gradients, SoftmaxRegression};
 use crate::obs;
 use crate::optim::{Sgd, SgdConfig};
 use crate::util::{tree_reduce_with, ThreadPool};
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Trainer metric handles, resolved from the global registry only
 /// when observability is enabled at `fit` start — the disabled path
@@ -209,6 +212,10 @@ pub fn evaluate_with(featurizer: &Featurizer, model: &SoftmaxRegression, data: &
 /// gradient-sum accumulator — allocated once per `fit`, reused every
 /// step (the step loop itself never allocates).
 struct WorkerSlot {
+    /// This slot's shard index within the current batch (stable across
+    /// retries — it keys fault injection and identifies the shard when
+    /// only a subset is resubmitted).
+    idx: usize,
     /// Row range of the current batch owned by this worker.
     lo: usize,
     hi: usize,
@@ -218,6 +225,37 @@ struct WorkerSlot {
     engine: FeatureEngine,
     loss_sum: f64,
     hits: usize,
+}
+
+/// Retry policy for panicked shards: bounded exponential backoff
+/// (`backoff · 2^(round−1)`, capped at `backoff_cap`), giving up with
+/// [`McError::WorkerPanic`] after `max_retries` rounds.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Retry rounds before giving up.
+    pub max_retries: u32,
+    /// Backoff before the first retry round.
+    pub backoff: Duration,
+    /// Upper bound on any single backoff sleep.
+    pub backoff_cap: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 3,
+            backoff: Duration::from_millis(10),
+            backoff_cap: Duration::from_millis(500),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The sleep before retry round `round` (1-based).
+    fn delay(&self, round: u32) -> Duration {
+        let mult = 1u32 << round.saturating_sub(1).min(16);
+        self.backoff.saturating_mul(mult).min(self.backoff_cap)
+    }
 }
 
 /// Data-parallel mini-batch SGD trainer (the paper's Eq. 21 step at
@@ -234,21 +272,93 @@ pub struct ParallelTrainer {
     pub config: TrainConfig,
     pub featurizer: Featurizer,
     pool: ThreadPool,
+    retry: RetryPolicy,
+    faults: Option<Arc<FaultPlan>>,
+    autosave: Option<PathBuf>,
 }
 
 impl ParallelTrainer {
-    /// Build a trainer with a pool of `config.workers` threads.
+    /// Build a trainer with a pool of `config.workers` threads (and
+    /// the default [`RetryPolicy`], no fault injection, no autosave).
     pub fn new(config: TrainConfig, featurizer: Featurizer) -> ParallelTrainer {
         assert!(config.workers >= 1, "workers must be ≥ 1");
         let pool = ThreadPool::new(config.workers);
-        ParallelTrainer { config, featurizer, pool }
+        ParallelTrainer {
+            config,
+            featurizer,
+            pool,
+            retry: RetryPolicy::default(),
+            faults: None,
+            autosave: None,
+        }
+    }
+
+    /// Override the shard retry/backoff policy.
+    pub fn with_retry(mut self, retry: RetryPolicy) -> ParallelTrainer {
+        self.retry = retry;
+        self
+    }
+
+    /// Install a deterministic chaos schedule (worker panics are
+    /// injected into shard jobs, keyed by (epoch, batch, shard,
+    /// attempt) — retries draw fresh randomness, so recovery is
+    /// reachable and bit-identical to a fault-free run).
+    pub fn with_faults(mut self, plan: Arc<FaultPlan>) -> ParallelTrainer {
+        self.faults = Some(plan);
+        self
+    }
+
+    /// Save a checkpoint (with the resume cursor) to `path` after
+    /// every completed epoch, so a killed run loses at most one epoch.
+    pub fn with_autosave<P: Into<PathBuf>>(mut self, path: P) -> ParallelTrainer {
+        self.autosave = Some(path.into());
+        self
     }
 
     /// Train a fresh model on `train`, evaluating on `test`.
-    pub fn fit(&self, train: &Dataset, test: &Dataset) -> (SoftmaxRegression, TrainReport) {
+    pub fn fit(
+        &self,
+        train: &Dataset,
+        test: &Dataset,
+    ) -> Result<(SoftmaxRegression, TrainReport), McError> {
         let fdim = self.featurizer.feature_dim(train.dim());
         let model = SoftmaxRegression::zeros(train.classes(), fdim);
         self.fit_resume(model, 0, train, test)
+    }
+
+    /// Crash-recovery entry point: if a checkpoint exists at `path`,
+    /// load it and resume from its epoch cursor (a fully-trained
+    /// checkpoint just evaluates and returns); otherwise train from
+    /// scratch. Either way, every completed epoch autosaves to `path`
+    /// — so rerunning the same command after a kill picks up where the
+    /// dead run left off.
+    pub fn fit_auto<P: AsRef<Path>>(
+        &self,
+        path: P,
+        train: &Dataset,
+        test: &Dataset,
+    ) -> Result<(SoftmaxRegression, TrainReport), McError> {
+        let path = path.as_ref();
+        if path.exists() {
+            let ck = Checkpoint::load(path)
+                .map_err(|e| McError::Io(format!("load {}: {e}", path.display())))?;
+            let start = ck.epoch().unwrap_or(0);
+            if start >= self.config.epochs {
+                // nothing left to train: evaluate the stored model
+                let acc = evaluate_with(&self.featurizer, &ck.model, test);
+                let report = TrainReport {
+                    history: Vec::new(),
+                    final_test_accuracy: acc,
+                    param_count: ck.model.param_count(),
+                    featurizer: self.featurizer.name(),
+                };
+                return Ok((ck.model, report));
+            }
+            return self.fit_inner(ck.model, start, train, test, Some(path));
+        }
+        let fdim = self.featurizer.feature_dim(train.dim());
+        let model = SoftmaxRegression::zeros(train.classes(), fdim);
+        self.fit_inner(model, 0, train, test, Some(path))
     }
 
     /// Continue training `model` over epochs `start_epoch..config.epochs`
@@ -258,13 +368,26 @@ impl ParallelTrainer {
     /// exactly what the uninterrupted run would have done.
     pub fn fit_resume(
         &self,
+        model: SoftmaxRegression,
+        start_epoch: usize,
+        train: &Dataset,
+        test: &Dataset,
+    ) -> Result<(SoftmaxRegression, TrainReport), McError> {
+        self.fit_inner(model, start_epoch, train, test, self.autosave.as_deref())
+    }
+
+    fn fit_inner(
+        &self,
         mut model: SoftmaxRegression,
         start_epoch: usize,
         train: &Dataset,
         test: &Dataset,
-    ) -> (SoftmaxRegression, TrainReport) {
+        autosave: Option<&Path>,
+    ) -> Result<(SoftmaxRegression, TrainReport), McError> {
         let fdim = self.featurizer.feature_dim(train.dim());
-        assert_eq!(model.features(), fdim, "model width vs featurizer");
+        if model.features() != fdim {
+            return Err(McError::DimMismatch { expected: fdim, got: model.features() });
+        }
         // Optimizer velocity is not checkpointed, so a mid-training
         // restart can only replay the uninterrupted run when the
         // optimizer is stateless.
@@ -287,6 +410,7 @@ impl ParallelTrainer {
         let max_shard = self.config.batch_size.div_ceil(workers);
         let mut slots: Vec<WorkerSlot> = (0..workers)
             .map(|_| WorkerSlot {
+                idx: 0,
                 lo: 0,
                 hi: 0,
                 feats: vec![0.0; max_shard * fdim],
@@ -303,13 +427,16 @@ impl ParallelTrainer {
         // Shard-timing handle cloned into the worker closure (timing
         // happens on pool threads; recording is lock-free).
         let shard_ns: Option<Arc<obs::Hist>> = metrics.as_ref().map(|m| Arc::clone(&m.shard_ns));
+        // Retry accounting is a rare, coarse event — recorded
+        // unconditionally like the server counters.
+        let retries = obs::global().counter("train.retries");
         for epoch in start_epoch..total_epochs {
             let t0 = Instant::now();
             let mut loss_sum = 0.0f64;
             let mut loss_batches = 0usize;
             let mut train_hits = 0usize;
             let mut train_count = 0usize;
-            for batch in batcher.epoch(train, epoch) {
+            for (bi, batch) in batcher.epoch(train, epoch).enumerate() {
                 let rows = batch.images.rows();
                 let d = batch.images.cols();
                 // Deterministic shard boundaries: a function of
@@ -321,6 +448,7 @@ impl ParallelTrainer {
                 let mut lo = 0;
                 for (s, slot) in slots[..shards].iter_mut().enumerate() {
                     let len = base + usize::from(s < rem);
+                    slot.idx = s;
                     slot.lo = lo;
                     slot.hi = lo + len;
                     lo += len;
@@ -331,7 +459,17 @@ impl ParallelTrainer {
                     let images = &batch.images;
                     let labels = &batch.labels;
                     let shard_ns = shard_ns.clone();
-                    self.pool.scope_shards(&mut slots[..shards], move |_s, slot| {
+                    let faults = self.faults.as_deref();
+                    // One shard's whole step — pure in the shard's
+                    // inputs, so rerunning it (on any worker, any
+                    // attempt) reproduces bit-identical sums.
+                    let run_shard = move |slot: &mut WorkerSlot, attempt: u32| {
+                        if let Some(plan) = faults {
+                            let key = shard_key(epoch, bi, slot.idx, attempt);
+                            if plan.fires_at(FaultSite::WorkerPanic, key) {
+                                panic!("injected fault: shard {} attempt {attempt}", slot.idx);
+                            }
+                        }
                         let t_shard = shard_ns.as_ref().map(|_| Instant::now());
                         slot.grads.reset();
                         slot.loss_sum = 0.0;
@@ -353,7 +491,45 @@ impl ParallelTrainer {
                         if let (Some(hist), Some(t)) = (&shard_ns, t_shard) {
                             hist.record(t.elapsed().as_nanos() as u64);
                         }
-                    });
+                    };
+                    let mut failed = self
+                        .pool
+                        .scope_shards(&mut slots[..shards], |_s, slot| run_shard(slot, 0))?;
+                    let mut attempt = 0u32;
+                    while !failed.is_empty() {
+                        attempt += 1;
+                        if attempt > self.retry.max_retries {
+                            return Err(McError::WorkerPanic);
+                        }
+                        retries.add(failed.len() as u64);
+                        let delay = self.retry.delay(attempt);
+                        if !delay.is_zero() {
+                            std::thread::sleep(delay);
+                        }
+                        // Quarantine: a panic mid-featurization leaves
+                        // the slot's pooled engine state suspect, so
+                        // rebuild it; the shard math itself recomputes
+                        // bit-identically from the inputs.
+                        for &i in &failed {
+                            slots[i].engine = self.featurizer.make_engine(max_shard);
+                        }
+                        // Resubmit exactly the failed shards to the
+                        // surviving pool (panic-contained workers stay
+                        // alive, so the full pool width remains).
+                        let mut retry_idx = Vec::with_capacity(failed.len());
+                        let mut retry_slots: Vec<&mut WorkerSlot> =
+                            Vec::with_capacity(failed.len());
+                        for (i, slot) in slots[..shards].iter_mut().enumerate() {
+                            if failed.contains(&i) {
+                                retry_idx.push(i);
+                                retry_slots.push(slot);
+                            }
+                        }
+                        let again = self.pool.scope_shards(&mut retry_slots, |_j, slot| {
+                            run_shard(&mut **slot, attempt)
+                        })?;
+                        failed = again.into_iter().map(|j| retry_idx[j]).collect();
+                    }
                 }
                 // Fixed-order tree reduction into slot 0: merge order
                 // is a function of the shard count alone, never of
@@ -406,6 +582,15 @@ impl ParallelTrainer {
                 );
             }
             history.push(rec);
+            // Autosave with the resume cursor: a kill after this point
+            // loses at most the *next* epoch; `fit_auto` on the same
+            // path replays the rest bit-identically (epoch-keyed
+            // shuffles + stateless optimizer).
+            if let Some(path) = autosave {
+                Checkpoint::for_training(self.featurizer.config(), model.clone(), epoch + 1)
+                    .save(path)
+                    .map_err(|e| McError::Io(format!("autosave {}: {e}", path.display())))?;
+            }
         }
         let final_test_accuracy = history
             .last()
@@ -417,7 +602,7 @@ impl ParallelTrainer {
             featurizer: self.featurizer.name(),
             history,
         };
-        (model, report)
+        Ok((model, report))
     }
 
     /// Accuracy of `model` on `data` (featurized in eval batches).
@@ -514,7 +699,7 @@ mod tests {
         let mut cfg = quick_config(4, 0.05);
         cfg.workers = 4;
         let trainer = ParallelTrainer::new(cfg, Featurizer::Identity);
-        let (model, report) = trainer.fit(&train, &test);
+        let (model, report) = trainer.fit(&train, &test).unwrap();
         assert_eq!(report.history.len(), 4);
         assert!(report.history.iter().all(|r| r.train_loss.is_finite()));
         assert!(report.final_test_accuracy > 0.3, "{}", report.final_test_accuracy);
@@ -525,10 +710,10 @@ mod tests {
     fn parallel_trainer_resume_is_bit_identical() {
         let (train, test) = datasets(60, 20);
         let full = ParallelTrainer::new(quick_config(4, 0.05), Featurizer::Identity);
-        let (m_full, _) = full.fit(&train, &test);
+        let (m_full, _) = full.fit(&train, &test).unwrap();
         let half = ParallelTrainer::new(quick_config(2, 0.05), Featurizer::Identity);
-        let (m_half, _) = half.fit(&train, &test);
-        let (m_res, rep) = full.fit_resume(m_half, 2, &train, &test);
+        let (m_half, _) = half.fit(&train, &test).unwrap();
+        let (m_res, rep) = full.fit_resume(m_half, 2, &train, &test).unwrap();
         assert_eq!(m_res.w().data(), m_full.w().data());
         assert_eq!(m_res.b(), m_full.b());
         assert_eq!(rep.history.len(), 2);

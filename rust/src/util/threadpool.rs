@@ -1,12 +1,32 @@
 //! Fixed-size thread pool over `std::sync::mpsc` — the execution
 //! substrate for the coordinator's prefetch pipeline and the parallel
 //! feature generator (offline build: no tokio/rayon).
+//!
+//! Fault posture: workers run every job under `catch_unwind`, so a
+//! panicking job never kills its worker — the pool keeps its full
+//! width for the trainer's retry path. Submission returns a typed
+//! [`McError`] instead of panicking when the pool is shut down, and
+//! [`ThreadPool::scope_shards`] reports *which* shards panicked so
+//! the caller can recompute exactly those.
 
+use crate::fault::McError;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Completion guard for the scoped barriers: signals its job's index
+/// even when the job panics (Drop runs during unwinding), so a
+/// barrier always sees exactly one message per submitted job.
+struct Done(mpsc::Sender<(usize, bool)>, usize);
+
+impl Drop for Done {
+    fn drop(&mut self) {
+        let _ = self.0.send((self.1, thread::panicking()));
+    }
+}
 
 /// A fixed pool of worker threads executing boxed jobs FIFO.
 pub struct ThreadPool {
@@ -26,9 +46,17 @@ impl ThreadPool {
                 thread::Builder::new()
                     .name(format!("mckernel-worker-{i}"))
                     .spawn(move || loop {
+                        // The lock guard drops before the job runs, so
+                        // a panicking job can never poison the mutex.
                         let job = { rx.lock().unwrap().recv() };
                         match job {
-                            Ok(job) => job(),
+                            // Contain panics here: the worker survives
+                            // and keeps serving the queue at full pool
+                            // width. Scoped callers observe the panic
+                            // through their completion guards.
+                            Ok(job) => {
+                                let _ = catch_unwind(AssertUnwindSafe(job));
+                            }
                             Err(_) => break, // channel closed: shut down
                         }
                     })
@@ -49,13 +77,16 @@ impl ThreadPool {
         self.workers.len()
     }
 
-    /// Submit a job.
-    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.sender
-            .as_ref()
-            .expect("pool is shut down")
-            .send(Box::new(f))
-            .expect("worker channel closed");
+    /// Submit a job. `Err(ShuttingDown)` after [`ThreadPool::shutdown`];
+    /// `Err(WorkerPanic)` if every worker is gone (the queue can no
+    /// longer drain).
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) -> Result<(), McError> {
+        self.submit(Box::new(f))
+    }
+
+    fn submit(&self, job: Job) -> Result<(), McError> {
+        let tx = self.sender.as_ref().ok_or(McError::ShuttingDown)?;
+        tx.send(job).map_err(|_| McError::WorkerPanic)
     }
 
     /// Run `f(s, &mut shards[s])` for every shard across the pool and
@@ -66,34 +97,28 @@ impl ThreadPool {
     /// run to completion (normally or by panic) before this returns,
     /// so no erased borrow can outlive the call.
     ///
-    /// A panic inside `f` is re-raised here after the barrier (the
-    /// worker thread that hosted it dies; remaining workers keep
-    /// serving the queue). If *every* worker has already died from
-    /// prior panics, queued jobs can no longer run and this call
-    /// blocks — a deliberate trade: deadlock is diagnosable, freed
-    /// stack borrows racing live jobs would be undefined behaviour.
-    pub fn scope_shards<S, F>(&self, shards: &mut [S], f: F)
+    /// Returns the (sorted) indices of shards whose job panicked —
+    /// empty on a clean pass. The shards themselves are untouched by
+    /// this call after the panic point, so the caller can repair state
+    /// and resubmit exactly those indices. `Err` means submission
+    /// failed (pool shut down mid-loop); even then, every job that
+    /// *was* submitted has completed before the error returns, so the
+    /// borrow-safety argument holds on the error path too.
+    pub fn scope_shards<S, F>(&self, shards: &mut [S], f: F) -> Result<Vec<usize>, McError>
     where
         S: Send,
         F: Fn(usize, &mut S) + Send + Sync,
     {
         let n = shards.len();
         if n == 0 {
-            return;
+            return Ok(Vec::new());
         }
-        // Completion guard: signals even when the job panics (Drop
-        // runs during unwinding), so the barrier below always sees
-        // exactly `n` messages.
-        struct Done(mpsc::Sender<bool>);
-        impl Drop for Done {
-            fn drop(&mut self) {
-                let _ = self.0.send(thread::panicking());
-            }
-        }
-        let (done_tx, done_rx) = mpsc::channel::<bool>();
+        let (done_tx, done_rx) = mpsc::channel::<(usize, bool)>();
         let base = shards.as_mut_ptr() as usize;
+        let mut submitted = 0usize;
+        let mut submit_err = None;
         for i in 0..n {
-            let done = Done(done_tx.clone());
+            let done = Done(done_tx.clone(), i);
             let fr: &F = &f;
             let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
                 let _done = done;
@@ -106,51 +131,97 @@ impl ThreadPool {
             // SAFETY: lifetime erasure to fit the queue's 'static Job
             // type; soundness is the barrier argument above — this
             // frame (owning `f` and borrowing `shards`) outlives every
-            // job, and after `n` guard signals no job code can run.
+            // job, and the barrier waits for every *submitted* job on
+            // both the Ok and Err paths before returning.
             let job: Job = unsafe { std::mem::transmute(job) };
-            self.sender
-                .as_ref()
-                .expect("pool is shut down")
-                .send(job)
-                .expect("worker channel closed");
+            match self.submit(job) {
+                Ok(()) => submitted += 1,
+                Err(e) => {
+                    submit_err = Some(e);
+                    break;
+                }
+            }
         }
         drop(done_tx);
-        let mut panicked = false;
-        for _ in 0..n {
-            panicked |= done_rx.recv().expect("scope barrier broken");
+        let mut panicked = Vec::new();
+        for _ in 0..submitted {
+            match done_rx.recv() {
+                Ok((i, p)) => {
+                    if p {
+                        panicked.push(i);
+                    }
+                }
+                // Unreachable (each submitted job holds a guard), but
+                // never block past the guards we will actually get.
+                Err(_) => break,
+            }
         }
-        assert!(!panicked, "a shard job panicked");
+        if let Some(e) = submit_err {
+            return Err(e);
+        }
+        panicked.sort_unstable();
+        Ok(panicked)
     }
 
     /// Run `f(i)` for `i ∈ 0..n` across the pool and wait for all.
-    pub fn scope_for_each<F>(&self, n: usize, f: F)
+    /// `Err(WorkerPanic)` if any job panicked (all jobs still ran to
+    /// completion or unwound before this returns).
+    pub fn scope_for_each<F>(&self, n: usize, f: F) -> Result<(), McError>
     where
         F: Fn(usize) + Send + Sync + 'static,
     {
         let f = Arc::new(f);
-        let (done_tx, done_rx) = mpsc::channel();
+        let (done_tx, done_rx) = mpsc::channel::<(usize, bool)>();
+        let mut submitted = 0usize;
+        let mut submit_err = None;
         for i in 0..n {
             let f = Arc::clone(&f);
-            let done = done_tx.clone();
-            self.execute(move || {
+            let done = Done(done_tx.clone(), i);
+            let result = self.execute(move || {
+                let _done = done;
                 f(i);
-                let _ = done.send(());
             });
+            match result {
+                Ok(()) => submitted += 1,
+                Err(e) => {
+                    submit_err = Some(e);
+                    break;
+                }
+            }
         }
         drop(done_tx);
-        for _ in 0..n {
-            done_rx.recv().expect("worker panicked");
+        let mut panicked = false;
+        for _ in 0..submitted {
+            match done_rx.recv() {
+                Ok((_, p)) => panicked |= p,
+                Err(_) => break,
+            }
+        }
+        if let Some(e) = submit_err {
+            return Err(e);
+        }
+        if panicked {
+            return Err(McError::WorkerPanic);
+        }
+        Ok(())
+    }
+
+    /// Stop accepting jobs, drain the queue, and join every worker.
+    /// Subsequent submissions return `Err(ShuttingDown)`. Idempotent;
+    /// `Drop` calls this too.
+    pub fn shutdown(&mut self) {
+        self.sender.take();
+        for w in self.workers.drain(..) {
+            // Panic-safe even if a worker died: a failed join only
+            // means that worker is already gone.
+            let _ = w.join();
         }
     }
 }
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        // Close the channel, then join every worker.
-        self.sender.take();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.shutdown();
     }
 }
 
@@ -170,7 +241,8 @@ mod tests {
             pool.execute(move || {
                 c.fetch_add(1, Ordering::SeqCst);
                 tx.send(()).unwrap();
-            });
+            })
+            .unwrap();
         }
         for _ in 0..100 {
             rx.recv().unwrap();
@@ -186,10 +258,26 @@ mod tests {
         let h = Arc::clone(&hits);
         pool.scope_for_each(50, move |i| {
             h[i].fetch_add(1, Ordering::SeqCst);
-        });
+        })
+        .unwrap();
         for (i, a) in hits.iter().enumerate() {
             assert_eq!(a.load(Ordering::SeqCst), 1, "index {i}");
         }
+    }
+
+    #[test]
+    fn scope_for_each_reports_panics_as_typed_error() {
+        let pool = ThreadPool::new(2);
+        let err = pool
+            .scope_for_each(8, |i| {
+                if i == 5 {
+                    panic!("boom");
+                }
+            })
+            .unwrap_err();
+        assert_eq!(err, McError::WorkerPanic);
+        // and the pool is still fully usable afterwards
+        pool.scope_for_each(8, |_| {}).unwrap();
     }
 
     #[test]
@@ -200,10 +288,13 @@ mod tests {
         // whole point is that this needs no Arc and no 'static
         let offset = 100u64;
         let off = &offset;
-        pool.scope_shards(&mut shards, |i, slot| {
-            assert_eq!(slot.0, i, "job index must match slot index");
-            slot.1 = i as u64 + off;
-        });
+        let panicked = pool
+            .scope_shards(&mut shards, |i, slot| {
+                assert_eq!(slot.0, i, "job index must match slot index");
+                slot.1 = i as u64 + off;
+            })
+            .unwrap();
+        assert!(panicked.is_empty());
         for (i, s) in shards.iter().enumerate() {
             assert_eq!(s.1, i as u64 + 100, "slot {i}");
         }
@@ -213,27 +304,53 @@ mod tests {
     fn scope_shards_empty_is_noop() {
         let pool = ThreadPool::new(2);
         let mut shards: Vec<u32> = vec![];
-        pool.scope_shards(&mut shards, |_, _| unreachable!());
+        assert!(pool.scope_shards(&mut shards, |_, _| unreachable!()).unwrap().is_empty());
     }
 
     #[test]
     fn scope_shards_more_jobs_than_workers() {
         let pool = ThreadPool::new(2);
         let mut shards = vec![0usize; 64];
-        pool.scope_shards(&mut shards, |i, s| *s = i * i);
+        pool.scope_shards(&mut shards, |i, s| *s = i * i).unwrap();
         assert!(shards.iter().enumerate().all(|(i, &s)| s == i * i));
     }
 
     #[test]
-    #[should_panic(expected = "a shard job panicked")]
-    fn scope_shards_propagates_panics() {
+    fn scope_shards_reports_exactly_the_panicked_indices() {
         let pool = ThreadPool::new(3);
-        let mut shards = vec![0u8; 5];
-        pool.scope_shards(&mut shards, |i, _| {
-            if i == 3 {
-                panic!("boom");
-            }
-        });
+        let mut shards = vec![0u8; 7];
+        let panicked = pool
+            .scope_shards(&mut shards, |i, s| {
+                if i == 2 || i == 5 {
+                    panic!("boom {i}");
+                }
+                *s = 1;
+            })
+            .unwrap();
+        assert_eq!(panicked, vec![2, 5]);
+        // healthy shards completed; panicked shards untouched
+        for (i, &s) in shards.iter().enumerate() {
+            assert_eq!(s != 0, !panicked.contains(&i), "shard {i}");
+        }
+        // workers survived the panics: a follow-up pass is clean
+        let clean = pool.scope_shards(&mut shards, |_, s| *s = 2).unwrap();
+        assert!(clean.is_empty());
+        assert!(shards.iter().all(|&s| s == 2));
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_typed_error_not_panic() {
+        let mut pool = ThreadPool::new(2);
+        pool.execute(|| {}).unwrap();
+        pool.shutdown();
+        assert_eq!(pool.execute(|| {}).unwrap_err(), McError::ShuttingDown);
+        let mut shards = vec![0u8; 3];
+        assert_eq!(
+            pool.scope_shards(&mut shards, |_, _| {}).unwrap_err(),
+            McError::ShuttingDown
+        );
+        assert_eq!(pool.scope_for_each(3, |_| {}).unwrap_err(), McError::ShuttingDown);
+        pool.shutdown(); // idempotent
     }
 
     #[test]
@@ -241,8 +358,18 @@ mod tests {
         let pool = ThreadPool::new(2);
         pool.execute(|| {
             std::thread::sleep(std::time::Duration::from_millis(10));
-        });
+        })
+        .unwrap();
         drop(pool); // must not hang or panic
+    }
+
+    #[test]
+    fn drop_is_panic_safe_after_job_panics() {
+        let pool = ThreadPool::new(2);
+        for _ in 0..4 {
+            pool.execute(|| panic!("boom")).unwrap();
+        }
+        drop(pool); // must not hang or propagate the job panics
     }
 
     #[test]

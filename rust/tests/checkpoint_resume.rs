@@ -43,11 +43,11 @@ fn midtrain_roundtrip_preserves_predictions_and_resume_matches_straight_run() {
 
     // uninterrupted 4-epoch run (2 workers: the sharded engine)
     let full = ParallelTrainer::new(config(4, 0.05, 2), Featurizer::Identity);
-    let (m_full, rep_full) = full.fit(&train, &test);
+    let (m_full, rep_full) = full.fit(&train, &test).unwrap();
 
     // first half, checkpointed to disk mid-training
     let half = ParallelTrainer::new(config(2, 0.05, 2), Featurizer::Identity);
-    let (m_half, _) = half.fit(&train, &test);
+    let (m_half, _) = half.fit(&train, &test).unwrap();
     let path = tmp_path("identity.mck");
     Checkpoint { feature_config: None, model: m_half.clone(), meta: BTreeMap::new() }
         .with_epoch(2)
@@ -67,7 +67,7 @@ fn midtrain_roundtrip_preserves_predictions_and_resume_matches_straight_run() {
 
     // resume epochs 2..4 → bit-identical to the straight run
     let cursor = ck.epoch().unwrap();
-    let (m_res, rep_res) = full.fit_resume(ck.model, cursor, &train, &test);
+    let (m_res, rep_res) = full.fit_resume(ck.model, cursor, &train, &test).unwrap();
     assert_eq!(m_res.w().data(), m_full.w().data(), "resumed weights diverge");
     assert_eq!(m_res.b(), m_full.b());
     assert_eq!(rep_res.history.len(), 2);
@@ -87,10 +87,10 @@ fn midtrain_roundtrip_with_feature_config_resumes_exactly() {
     };
 
     let full = ParallelTrainer::new(config(2, 0.002, 3), Featurizer::McKernel(map()));
-    let (m_full, rep_full) = full.fit(&train, &test);
+    let (m_full, rep_full) = full.fit(&train, &test).unwrap();
 
     let half = ParallelTrainer::new(config(1, 0.002, 3), Featurizer::McKernel(map()));
-    let (m_half, _) = half.fit(&train, &test);
+    let (m_half, _) = half.fit(&train, &test).unwrap();
     let path = tmp_path("mckernel.mck");
     Checkpoint {
         feature_config: Some(map().config().clone()),
@@ -109,8 +109,41 @@ fn midtrain_roundtrip_with_feature_config_resumes_exactly() {
     )));
     let resumer = ParallelTrainer::new(config(2, 0.002, 3), rebuilt);
     let cursor = ck.epoch().unwrap();
-    let (m_res, rep_res) = resumer.fit_resume(ck.model, cursor, &train, &test);
+    let (m_res, rep_res) = resumer.fit_resume(ck.model, cursor, &train, &test).unwrap();
     assert_eq!(m_res.w().data(), m_full.w().data(), "kernel resume diverges");
     assert_eq!(rep_res.final_test_accuracy, rep_full.final_test_accuracy);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn fit_auto_recovers_a_killed_run_bit_identically() {
+    let (train, test) = datasets(80, 30);
+    let path = tmp_path("auto.mck");
+    let _ = std::fs::remove_file(&path);
+
+    // the run that never dies
+    let full = ParallelTrainer::new(config(4, 0.05, 2), Featurizer::Identity);
+    let (m_full, _) = full.fit(&train, &test).unwrap();
+
+    // a "killed" run: only 2 of the 4 epochs happen, autosaving as it
+    // goes (simulated by configuring fewer epochs on the same seed)
+    let killed = ParallelTrainer::new(config(2, 0.05, 2), Featurizer::Identity);
+    killed.fit_auto(&path, &train, &test).unwrap();
+    assert_eq!(Checkpoint::load(&path).unwrap().epoch(), Some(2));
+
+    // rerunning the full command picks up the cursor and finishes
+    let rerun = ParallelTrainer::new(config(4, 0.05, 2), Featurizer::Identity);
+    let (m_rec, rep) = rerun.fit_auto(&path, &train, &test).unwrap();
+    assert_eq!(rep.history.len(), 2, "only the missing epochs are replayed");
+    assert_eq!(rep.history[0].epoch, 2);
+    assert_eq!(m_rec.w().data(), m_full.w().data(), "recovered weights diverge");
+    assert_eq!(m_rec.b(), m_full.b());
+
+    // a third invocation finds a complete checkpoint: evaluate only
+    let again = ParallelTrainer::new(config(4, 0.05, 2), Featurizer::Identity);
+    let (m_done, rep_done) = again.fit_auto(&path, &train, &test).unwrap();
+    assert!(rep_done.history.is_empty(), "nothing left to train");
+    assert_eq!(m_done.w().data(), m_full.w().data());
+    assert!(rep_done.final_test_accuracy.is_finite());
     let _ = std::fs::remove_file(&path);
 }

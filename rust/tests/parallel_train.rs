@@ -60,7 +60,7 @@ fn n_workers_match_serial_oracle_identity_features() {
     let (_, oracle) = Trainer::new(config(3, 0.05, 1), Featurizer::Identity).fit(&train, &test);
     for workers in [1usize, 2, 4] {
         let trainer = ParallelTrainer::new(config(3, 0.05, workers), Featurizer::Identity);
-        let (_, report) = trainer.fit(&train, &test);
+        let (_, report) = trainer.fit(&train, &test).unwrap();
         assert!(
             (report.final_test_accuracy - oracle.final_test_accuracy).abs() <= 1e-5,
             "workers={workers}: parallel {} vs oracle {}",
@@ -76,7 +76,7 @@ fn n_workers_match_serial_oracle_mckernel_features() {
     let (_, oracle) = Trainer::new(config(2, 0.002, 1), kernel_featurizer()).fit(&train, &test);
     for workers in [1usize, 3] {
         let trainer = ParallelTrainer::new(config(2, 0.002, workers), kernel_featurizer());
-        let (_, report) = trainer.fit(&train, &test);
+        let (_, report) = trainer.fit(&train, &test).unwrap();
         assert!(
             (report.final_test_accuracy - oracle.final_test_accuracy).abs() <= 1e-5,
             "workers={workers}: parallel {} vs oracle {}",
@@ -92,8 +92,9 @@ fn repeated_runs_are_bit_identical_per_worker_count() {
     for workers in [1usize, 2, 4] {
         let mut cfg = config(2, 0.05, workers);
         cfg.eval_every_epoch = true; // every epoch's test accuracy in history
-        let (m1, r1) = ParallelTrainer::new(cfg.clone(), Featurizer::Identity).fit(&train, &test);
-        let (m2, r2) = ParallelTrainer::new(cfg, Featurizer::Identity).fit(&train, &test);
+        let (m1, r1) =
+            ParallelTrainer::new(cfg.clone(), Featurizer::Identity).fit(&train, &test).unwrap();
+        let (m2, r2) = ParallelTrainer::new(cfg, Featurizer::Identity).fit(&train, &test).unwrap();
         assert!(
             histories_bit_identical(&r1.history, &r2.history),
             "workers={workers}: histories diverge:\n{:?}\nvs\n{:?}",
@@ -110,8 +111,9 @@ fn shard_count_invariance_of_final_accuracy() {
     let (train, test) = datasets(200, 80);
     let mut accs = Vec::new();
     for workers in [1usize, 2, 4] {
-        let (_, report) =
-            ParallelTrainer::new(config(3, 0.05, workers), Featurizer::Identity).fit(&train, &test);
+        let (_, report) = ParallelTrainer::new(config(3, 0.05, workers), Featurizer::Identity)
+            .fit(&train, &test)
+            .unwrap();
         accs.push(report.final_test_accuracy);
     }
     for (i, acc) in accs.iter().enumerate() {
@@ -130,7 +132,7 @@ fn more_workers_than_rows_and_ragged_tail() {
     let (train, test) = datasets(23, 20);
     let (_, oracle) = Trainer::new(config(2, 0.05, 1), Featurizer::Identity).fit(&train, &test);
     let trainer = ParallelTrainer::new(config(2, 0.05, 8), Featurizer::Identity);
-    let (_, report) = trainer.fit(&train, &test);
+    let (_, report) = trainer.fit(&train, &test).unwrap();
     assert_eq!(report.history.len(), 2);
     assert!(report.history.iter().all(|r| r.train_loss.is_finite()));
     assert!(
@@ -146,7 +148,7 @@ fn report_metadata_matches_serial_trainer() {
     let (train, test) = datasets(40, 20);
     let (_, serial) = Trainer::new(config(1, 0.05, 1), Featurizer::Identity).fit(&train, &test);
     let (_, parallel) =
-        ParallelTrainer::new(config(1, 0.05, 2), Featurizer::Identity).fit(&train, &test);
+        ParallelTrainer::new(config(1, 0.05, 2), Featurizer::Identity).fit(&train, &test).unwrap();
     assert_eq!(parallel.featurizer, serial.featurizer);
     assert_eq!(parallel.param_count, serial.param_count);
     assert_eq!(parallel.history.len(), serial.history.len());
