@@ -43,6 +43,8 @@ fn main() -> anyhow::Result<()> {
         seed,
         eval_every_epoch: false,
         verbose: false,
+        workers: 1,
+        cache_bytes: None,
     };
 
     let t0 = std::time::Instant::now();

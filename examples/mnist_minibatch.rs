@@ -49,6 +49,8 @@ fn main() -> anyhow::Result<()> {
         seed,
         eval_every_epoch: false,
         verbose: args.flag("verbose"),
+        workers: 1,
+        cache_bytes: None,
     };
 
     let runtime = if backend == "pjrt" { Some(Runtime::new(args.get_or("artifacts", "artifacts"))?) } else { None };

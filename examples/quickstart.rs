@@ -51,6 +51,8 @@ fn main() {
         seed: 1,
         eval_every_epoch: true,
         verbose: true,
+        workers: 1,
+        cache_bytes: None,
     };
     let trainer = Trainer::new(config, Featurizer::McKernel(fm));
     let (model, report) = trainer.fit(&train, &test);

@@ -1,0 +1,98 @@
+//! Feature-cache payoff curve: cached vs uncached batch featurization
+//! across hit-rate regimes (unique-stream worst case → full-replay
+//! steady state). A hit costs one MurmurHash3 over the row plus a
+//! memcpy; a miss costs that overhead *on top of* the FWHT pipeline —
+//! so the table quantifies both the win and the worst-case tax (see
+//! EXPERIMENTS.md "Feature cache").
+//!
+//! Usage: cargo bench --bench bench_cache [-- --quick]
+
+use mckernel::benchkit::{bench, BenchConfig, Report};
+use mckernel::hash::HashRng;
+use mckernel::linalg::Matrix;
+use mckernel::mckernel::cache::entry_cost;
+use mckernel::mckernel::{CacheKey, ExpansionEngine, FeatureCache, McKernelFactory};
+use mckernel::obs::MetricsRegistry;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cfg = if quick { BenchConfig::quick() } else { BenchConfig::default() };
+    let input_dim = 784; // MNIST geometry, pads to 1024
+    let batch = 64usize;
+    let batches = if quick { 8 } else { 32 };
+    let e = 4usize;
+
+    let map = McKernelFactory::new(input_dim)
+        .expansions(e)
+        .sigma(1.0)
+        .rbf_matern(40)
+        .seed(1)
+        .build();
+    let fd = map.feature_dim();
+    let mut feats = Matrix::zeros(batch, fd);
+
+    let mut eng_u = ExpansionEngine::new(&map, batch);
+    let key = CacheKey::new(map.config(), eng_u.plan());
+
+    // Regimes, shaped by replay fraction AND byte budget (a huge
+    // budget would turn any cyclic replay into all-hits after one
+    // pass): "all-miss" undersizes the cache so the cyclic unique
+    // stream thrashes LRU — every lookup pays hash + probe + insert +
+    // evict on top of the engine; "mixed" keeps the hot pool resident
+    // while unique rows thrash; "steady" holds everything (serving
+    // with repeated inputs, or training epochs after the first).
+    let cost = entry_cost(input_dim, fd);
+    let regimes: [(&str, f64, usize); 3] = [
+        ("all-miss", 0.0, 32 * cost),
+        ("mixed", 0.5, 4 * batch * cost),
+        ("steady", 1.0, 256 << 20),
+    ];
+    let mut report = Report::new(
+        &format!("Feature cache, 784→1024 E={e} batch={batch} (ms/batch)"),
+        &["uncached", "cached", "speedup", "hit rate"],
+    );
+    for (label, replay, capacity) in regimes {
+        let mut rng = HashRng::new(11, replay.to_bits());
+        let pool = Matrix::from_fn(batch, input_dim, |_, _| rng.next_f32() - 0.5);
+        let inputs: Vec<Matrix> = (0..batches)
+            .map(|_| {
+                Matrix::from_fn(batch, input_dim, |r, c| {
+                    // per-row choice: replay from the hot pool or draw
+                    // a row unique across the whole stream
+                    if (r as f64 + 0.5) / batch as f64 <= replay {
+                        pool.row(r)[c]
+                    } else {
+                        rng.next_f32() - 0.5
+                    }
+                })
+            })
+            .collect();
+
+        let uncached = bench("cache/uncached", &cfg, |i| {
+            eng_u.execute_matrix(&map, &inputs[i % batches], &mut feats);
+        });
+
+        let reg = MetricsRegistry::new();
+        let cache = FeatureCache::with_registry(capacity, 8, &reg);
+        let mut eng_c = ExpansionEngine::new(&map, batch);
+        for xb in &inputs {
+            cache.execute_matrix(key, &mut eng_c, &map, xb, &mut feats);
+        }
+        let cached = bench("cache/cached", &cfg, |i| {
+            cache.execute_matrix(key, &mut eng_c, &map, &inputs[i % batches], &mut feats);
+        });
+        let total = cache.hits() + cache.misses();
+        let hit_rate = if total > 0 { cache.hits() as f64 / total as f64 } else { 0.0 };
+        report.add_row(
+            &format!("{label} (replay={replay:.1})"),
+            &[
+                uncached.median_ms(),
+                cached.median_ms(),
+                uncached.stats.median / cached.stats.median,
+                hit_rate,
+            ],
+        );
+    }
+    println!("{}", report.to_table());
+    report.write_csv("bench_results/feature_cache.csv").ok();
+}

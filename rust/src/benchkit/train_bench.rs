@@ -61,6 +61,7 @@ pub fn compare_train_paths(
         eval_every_epoch: false,
         verbose: false,
         workers,
+        cache_bytes: None,
     };
     let serial_trainer =
         Trainer::new(TrainConfig { workers: 1, ..tc.clone() }, Featurizer::Identity);

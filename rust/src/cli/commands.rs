@@ -27,6 +27,7 @@ COMMANDS:
   features   featurize one synthetic sample and print stats
   fwht       run one FWHT and report timing
   bench      write BENCH_*.json perf snapshots (per-row vs batched)
+  cache-bench  feature-cache drill: bit-identity, hit/miss accounting, timing
   stats      drive the instrumented paths and export a metrics snapshot
   gen-data   write a synthetic dataset as IDX files
   info       list AOT artifacts (requires `make artifacts`)
@@ -48,6 +49,8 @@ COMMON OPTIONS:
   --checkpoint PATH         model file to write/read
   --resume                  with train: autosave to --checkpoint every
                             epoch and resume from it if present
+  --cache / --cache-mb N    content-addressed feature cache on train /
+                            serve paths (budget in MiB)        [64]
   --csv PATH                write per-epoch history CSV
 
 Run `mckernel <command> --help` for details.";
@@ -102,6 +105,17 @@ pub fn build_map(args: &Args, input_dim: usize) -> Result<Option<Arc<crate::mcke
     Ok(Some(Arc::new(factory.build())))
 }
 
+/// Shared `--cache` / `--cache-mb` parsing: either flag opts into the
+/// content-addressed feature cache; `--cache-mb N` sets the byte
+/// budget (default 64 MiB).
+pub fn cache_bytes_from(args: &Args) -> Result<Option<usize>> {
+    if args.flag("cache") || args.get("cache-mb").is_some() {
+        Ok(Some(args.positive_or("cache-mb", 64)? << 20))
+    } else {
+        Ok(None)
+    }
+}
+
 /// Shared TrainConfig from flags.
 pub fn train_config(args: &Args, default_lr: f32) -> Result<TrainConfig> {
     Ok(TrainConfig {
@@ -116,6 +130,7 @@ pub fn train_config(args: &Args, default_lr: f32) -> Result<TrainConfig> {
         eval_every_epoch: !args.flag("final-eval-only"),
         verbose: !args.flag("quiet"),
         workers: args.positive_or("workers", 1)?,
+        cache_bytes: cache_bytes_from(args)?,
     })
 }
 
@@ -421,6 +436,134 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `mckernel cache-bench` — deterministic feature-cache drill plus
+/// timing. Phase 1 replays batches drawn from a fixed pool of unique
+/// rows through a cached and an uncached engine side by side,
+/// enforcing the cache invariants (bit-identical output, exact
+/// hit+miss accounting, byte budget respected). Phase 2 times the
+/// steady-state hit regime against the uncached engine and writes
+/// `BENCH_cache.json` (`--out`) in the shared bench schema.
+pub fn cmd_cache_bench(args: &Args) -> Result<()> {
+    use crate::benchkit::{bench, BenchConfig};
+    use crate::linalg::Matrix;
+    use crate::mckernel::{CacheKey, ExpansionEngine, FeatureCache};
+
+    let quick = args.flag("quick");
+    let cfg = if quick { BenchConfig::quick() } else { BenchConfig::default() };
+    let out = args.get_or("out", "BENCH_cache.json");
+    let input_dim: usize = args.parse_or("input-dim", 64usize)?;
+    let e: usize = args.parse_or("expansions", 2usize)?;
+    let batch: usize = args.positive_or("batch", 32)?;
+    let unique: usize = args.positive_or("unique", if quick { 64 } else { 256 })?;
+    let batches: usize = args.positive_or("batches", if quick { 32 } else { 256 })?;
+    let cache_mb: usize = args.positive_or("cache-mb", 64)?;
+    let cache_bytes = cache_mb << 20;
+
+    let map = McKernelFactory::new(input_dim)
+        .expansions(e)
+        .sigma(1.0)
+        .rbf_matern(40)
+        .seed(1)
+        .build();
+    let fd = map.feature_dim();
+    let mut rng = crate::hash::HashRng::new(9, 0xCB);
+    let pool = Matrix::from_fn(unique, input_dim, |_, _| rng.next_f32() - 0.5);
+    // deterministic replay: batch b draws rows (b·batch + 7r) mod
+    // unique from the pool, so repeats start inside the first pass
+    let batch_rows = |b: usize| {
+        Matrix::from_fn(batch, input_dim, |r, c| pool.row((b * batch + r * 7) % unique)[c])
+    };
+
+    // Phase 1: invariants, on a private registry for exact counts.
+    let reg = MetricsRegistry::new();
+    let cache = FeatureCache::with_registry(cache_bytes, 8, &reg);
+    let mut cached_eng = ExpansionEngine::new(&map, batch);
+    let mut plain_eng = ExpansionEngine::new(&map, batch);
+    let key = CacheKey::new(map.config(), cached_eng.plan());
+    let mut want = Matrix::zeros(batch, fd);
+    let mut got = Matrix::zeros(batch, fd);
+    let verify_batches = batches.min(16);
+    for b in 0..verify_batches {
+        let xb = batch_rows(b);
+        plain_eng.execute_matrix(&map, &xb, &mut want);
+        cache.execute_matrix(key, &mut cached_eng, &map, &xb, &mut got);
+        ensure!(want.data() == got.data(), "cached path diverged from engine on batch {b}");
+    }
+    let lookups = (verify_batches * batch) as u64;
+    ensure!(
+        cache.hits() + cache.misses() == lookups,
+        "accounting broken: {} hits + {} misses != {lookups} lookups",
+        cache.hits(),
+        cache.misses()
+    );
+    ensure!(cache.hits() > 0, "replayed pool produced no cache hits");
+    ensure!(
+        cache.bytes() <= cache_bytes,
+        "cache overran its budget: {} > {cache_bytes}",
+        cache.bytes()
+    );
+    ensure!(
+        reg.counter_value("cache.hits") == Some(cache.hits()),
+        "registry view disagrees with cache accessors"
+    );
+
+    // Phase 2: timing. Warm a fresh cache to steady state first so the
+    // cached numbers measure the hit regime, not pool fill.
+    let inputs: Vec<Matrix> = (0..batches).map(batch_rows).collect();
+    let timing_reg = MetricsRegistry::new();
+    let tcache = FeatureCache::with_registry(cache_bytes, 8, &timing_reg);
+    let mut eng_c = ExpansionEngine::new(&map, batch);
+    let mut feats = Matrix::zeros(batch, fd);
+    for xb in &inputs {
+        tcache.execute_matrix(key, &mut eng_c, &map, xb, &mut feats);
+    }
+    let cached = bench("cache/cached", &cfg, |i| {
+        tcache.execute_matrix(key, &mut eng_c, &map, &inputs[i % batches], &mut feats);
+    });
+    let mut eng_u = ExpansionEngine::new(&map, batch);
+    let uncached = bench("cache/uncached", &cfg, |i| {
+        eng_u.execute_matrix(&map, &inputs[i % batches], &mut feats);
+    });
+    let total = tcache.hits() + tcache.misses();
+    let hit_rate = if total > 0 { tcache.hits() as f64 / total as f64 } else { 0.0 };
+    ensure!(tcache.hits() > tcache.misses(), "steady state should be hit-dominated");
+    let speedup = uncached.stats.median / cached.stats.median;
+    println!(
+        "cache (batch={batch}, unique={unique}, n={}, E={e}): uncached {:.3} ms  \
+         cached {:.3} ms  speedup {:.2}x  hit rate {:.3}  evictions {}",
+        map.padded_dim(),
+        uncached.median_ms(),
+        cached.median_ms(),
+        speedup,
+        hit_rate,
+        tcache.evictions()
+    );
+    write_bench_json(
+        &out,
+        &[
+            ("bench", Json::Str("cache".into())),
+            ("input_dim", Json::Num(input_dim as f64)),
+            ("n", Json::Num(map.padded_dim() as f64)),
+            ("expansions", Json::Num(e as f64)),
+            ("batch", Json::Num(batch as f64)),
+            ("unique_rows", Json::Num(unique as f64)),
+            ("batches", Json::Num(batches as f64)),
+            ("cache_mb", Json::Num(cache_mb as f64)),
+            ("hit_rate", Json::Num(hit_rate)),
+            ("hits", Json::Num(tcache.hits() as f64)),
+            ("misses", Json::Num(tcache.misses() as f64)),
+            ("evictions", Json::Num(tcache.evictions() as f64)),
+            ("resident_bytes", Json::Num(tcache.bytes() as f64)),
+            ("uncached_ms", Json::Num(uncached.median_ms())),
+            ("cached_ms", Json::Num(cached.median_ms())),
+            ("speedup", Json::Num(speedup)),
+            ("uncached", uncached.stats.to_dist_json_ns()),
+            ("cached", cached.stats.to_dist_json_ns()),
+        ],
+    )?;
+    Ok(())
+}
+
 fn write_bench_json(path: &str, fields: &[(&str, Json)]) -> Result<()> {
     let obj: BTreeMap<String, Json> =
         fields.iter().map(|(k, v)| (k.to_string(), v.clone())).collect();
@@ -482,6 +625,7 @@ pub fn cmd_stats(args: &Args) -> Result<()> {
             eval_every_epoch: false,
             verbose: false,
             workers,
+            cache_bytes: None,
         };
         let _ = ParallelTrainer::new(cfg, Featurizer::Identity).fit(&train, &test);
     }
@@ -494,13 +638,15 @@ pub fn cmd_stats(args: &Args) -> Result<()> {
         for _ in p.iter() {}
     }
 
-    // 4. Feature server (latency/batch-occupancy/deadline-miss).
+    // 4. Feature server (latency/batch-occupancy/deadline-miss) with
+    //    the feature cache on: the 7 distinct request rows repeat, so
+    //    the snapshot carries non-trivial `cache.*` counters too.
     {
         let _g = obs::span("stats.serve");
         let map = Arc::new(McKernelFactory::new(16).expansions(1).rbf().seed(7).build());
         let server = FeatureServer::start(
             map,
-            ServerConfig::new(8, Duration::from_micros(100)),
+            ServerConfig::new(8, Duration::from_micros(100)).cache_bytes(1 << 20),
         );
         for i in 0..requests {
             let row = vec![(i % 7) as f32 * 0.1; 16];
@@ -571,10 +717,12 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let wait_us: u64 = args.parse_or("max-wait-us", 200u64)?;
     let requests: usize = args.parse_or("requests", 1000usize)?;
     let clients: usize = args.parse_or("clients", 8usize)?;
-    let server = FeatureServer::start(
-        Arc::clone(&map),
-        ServerConfig::new(max_batch, Duration::from_micros(wait_us)),
-    );
+    let mut config = ServerConfig::new(max_batch, Duration::from_micros(wait_us));
+    let cached = cache_bytes_from(args)?;
+    if let Some(b) = cached {
+        config = config.cache_bytes(b);
+    }
+    let server = FeatureServer::start(Arc::clone(&map), config);
     let t0 = std::time::Instant::now();
     let per_client = requests / clients;
     let handles: Vec<_> = (0..clients)
@@ -601,6 +749,17 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         (per_client * clients) as f64 / secs,
         stats.mean_batch_size()
     );
+    if cached.is_some() {
+        // cache metrics record unconditionally into the global
+        // registry (the cache itself is the opt-in)
+        let g = crate::obs::global();
+        println!(
+            "cache: {} hits / {} misses ({} evictions)",
+            g.counter_value("cache.hits").unwrap_or(0),
+            g.counter_value("cache.misses").unwrap_or(0),
+            g.counter_value("cache.evictions").unwrap_or(0),
+        );
+    }
     server.shutdown();
     Ok(())
 }
@@ -808,6 +967,7 @@ fn chaos_trainer(seed: u64, quick: bool) -> Result<Json> {
         eval_every_epoch: false,
         verbose: false,
         workers: 4,
+        cache_bytes: None,
     };
     let (clean, _) = ParallelTrainer::new(cfg.clone(), Featurizer::Identity)
         .fit(&train, &test)
@@ -882,6 +1042,7 @@ pub fn run(args: Args) -> Result<()> {
                 "features" => cmd_features(&rest),
                 "fwht" => cmd_fwht(&rest),
                 "bench" => cmd_bench(&rest),
+                "cache-bench" => cmd_cache_bench(&rest),
                 "stats" => cmd_stats(&rest),
                 "gen-data" => cmd_gen_data(&rest),
                 "info" => cmd_info(&rest),
@@ -950,6 +1111,47 @@ mod tests {
     #[test]
     fn unknown_command_is_error() {
         assert!(run(args(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn cache_flags_parse() {
+        assert_eq!(cache_bytes_from(&args(&[])).unwrap(), None);
+        assert_eq!(cache_bytes_from(&args(&["--cache"])).unwrap(), Some(64 << 20));
+        assert_eq!(
+            cache_bytes_from(&args(&["--cache-mb", "8"])).unwrap(),
+            Some(8 << 20)
+        );
+        assert!(cache_bytes_from(&args(&["--cache-mb", "0"])).is_err());
+        assert_eq!(
+            train_config(&args(&["--cache"]), 0.01).unwrap().cache_bytes,
+            Some(64 << 20)
+        );
+        assert_eq!(train_config(&args(&[]), 0.01).unwrap().cache_bytes, None);
+    }
+
+    #[test]
+    fn cache_bench_drill_holds_invariants_and_writes_json() {
+        let dir = std::env::temp_dir()
+            .join(format!("mckernel_cache_bench_cmd_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("BENCH_cache.json");
+        let a = args(&[
+            "--quick", "--input-dim", "16", "--expansions", "1", "--batch", "8",
+            "--unique", "24", "--batches", "8", "--out", out.to_str().unwrap(),
+        ]);
+        cmd_cache_bench(&a).unwrap();
+        let json = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        let hit_rate = json.get("hit_rate").and_then(Json::as_f64).unwrap();
+        assert!(hit_rate > 0.5, "steady-state replay should be hit-dominated: {hit_rate}");
+        assert!(json.get("speedup").and_then(Json::as_f64).is_some());
+        for key in ["cached", "uncached"] {
+            let dist = json.get(key).unwrap();
+            for field in ["count", "mean", "p50", "p95", "p99"] {
+                assert!(dist.get(field).and_then(Json::as_f64).is_some(), "{key}.{field}");
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -109,7 +109,7 @@ impl Prefetcher {
                         aborted.inc();
                         return;
                     }
-                    stall_ns.record(t_send.elapsed().as_nanos() as u64);
+                    stall_ns.record(obs::elapsed_ns(t_send));
                 }
             })
             .expect("spawn prefetch thread");

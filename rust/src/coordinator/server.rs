@@ -23,7 +23,8 @@
 
 use crate::fault::{FaultPlan, FaultSite, McError};
 use crate::linalg::Matrix;
-use crate::mckernel::{ExpansionEngine, McKernel};
+use crate::mckernel::cache::DEFAULT_SHARDS;
+use crate::mckernel::{CacheKey, ExpansionEngine, FeatureCache, McKernel};
 use crate::obs::{self, Counter, Gauge, Hist, HistSnapshot, MetricsRegistry};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -51,6 +52,10 @@ pub struct ServerConfig {
     /// Deterministic chaos schedule (None in production: one pointer
     /// test per batch).
     pub faults: Option<Arc<FaultPlan>>,
+    /// Opt-in content-addressed feature cache
+    /// ([`crate::mckernel::FeatureCache`]): byte budget for memoizing
+    /// feature rows of repeated inputs. `None` disables caching.
+    pub cache_bytes: Option<usize>,
 }
 
 impl ServerConfig {
@@ -63,6 +68,7 @@ impl ServerConfig {
             max_queue: 1024,
             deadline: Duration::from_secs(30),
             faults: None,
+            cache_bytes: None,
         }
     }
 
@@ -81,6 +87,13 @@ impl ServerConfig {
     /// Install a chaos schedule.
     pub fn faults(mut self, plan: Arc<FaultPlan>) -> ServerConfig {
         self.faults = Some(plan);
+        self
+    }
+
+    /// Enable the content-addressed feature cache with this byte
+    /// budget.
+    pub fn cache_bytes(mut self, bytes: usize) -> ServerConfig {
+        self.cache_bytes = Some(bytes);
         self
     }
 }
@@ -321,9 +334,14 @@ impl FeatureServer {
             deadline: config.deadline,
         });
         let feature_dim = map.feature_dim();
+        // The cache is built against the same registry as the stats so
+        // `cache.*` and `server.*` land in one snapshot.
+        let cache = config
+            .cache_bytes
+            .map(|b| Arc::new(FeatureCache::with_registry(b, DEFAULT_SHARDS, registry)));
         let handle = std::thread::Builder::new()
             .name("mckernel-feature-server".into())
-            .spawn(move || Self::serve(map, rx, config, stats))
+            .spawn(move || Self::serve(map, rx, config, stats, cache))
             .expect("spawn server thread");
         FeatureServer { tx: Some(tx), handle: Some(handle), shared, feature_dim }
     }
@@ -334,10 +352,16 @@ impl FeatureServer {
     /// `WorkerPanic` — and later requests are served by the restarted
     /// loop). On orderly exit, drain still-queued requests with
     /// `ShuttingDown` so no admitted request is left waiting.
-    fn serve(map: Arc<McKernel>, rx: Receiver<Msg>, config: ServerConfig, stats: ServerStats) {
+    fn serve(
+        map: Arc<McKernel>,
+        rx: Receiver<Msg>,
+        config: ServerConfig,
+        stats: ServerStats,
+        cache: Option<Arc<FeatureCache>>,
+    ) {
         loop {
             let exit = catch_unwind(AssertUnwindSafe(|| {
-                Self::serve_loop(&map, &rx, &config, &stats)
+                Self::serve_loop(&map, &rx, &config, &stats, cache.as_deref())
             }));
             match exit {
                 Ok(()) => break,
@@ -362,10 +386,15 @@ impl FeatureServer {
         rx: &Receiver<Msg>,
         config: &ServerConfig,
         stats: &ServerStats,
+        cache: Option<&FeatureCache>,
     ) {
         // One compiled engine for the loop's lifetime: scratch and
         // feature buffer pooled across every coalesced batch.
         let mut engine = ExpansionEngine::new(map, config.max_batch);
+        // Cache id, fixed for the loop: quarantine rebuilds the engine
+        // with the same (config, rows hint), so the plan — and the
+        // key — never changes.
+        let cache_key = CacheKey::new(map.config(), engine.plan());
         let mut feats = Matrix::zeros(0, 0);
         let mut shutting_down = false;
         loop {
@@ -426,7 +455,10 @@ impl FeatureServer {
                         panic!("injected fault: serve-loop worker panic");
                     }
                 }
-                engine.execute_matrix(map, &xb, &mut feats);
+                match cache {
+                    Some(c) => c.execute_matrix(cache_key, &mut engine, map, &xb, &mut feats),
+                    None => engine.execute_matrix(map, &xb, &mut feats),
+                }
             }));
             if run.is_err() {
                 // Quarantine: the batch's requests get WorkerPanic,
@@ -438,7 +470,7 @@ impl FeatureServer {
                 feats = Matrix::zeros(0, 0);
                 for req in pending {
                     stats.requests.inc();
-                    stats.latency_ns.record(req.t0.elapsed().as_nanos() as u64);
+                    stats.latency_ns.record(obs::elapsed_ns(req.t0));
                     let _ = req.reply.send(Err(McError::WorkerPanic));
                 }
                 if shutting_down {
@@ -458,7 +490,7 @@ impl FeatureServer {
             }
             for (r, req) in pending.into_iter().enumerate() {
                 stats.requests.inc();
-                stats.latency_ns.record(req.t0.elapsed().as_nanos() as u64);
+                stats.latency_ns.record(obs::elapsed_ns(req.t0));
                 let row = feats.row(r);
                 let reply = match row.iter().position(|v| !v.is_finite()) {
                     Some(index) => Err(McError::NonFinite { index }),

@@ -48,6 +48,8 @@ pub mod streams {
     pub const SHUFFLE: u64 = 0x5F;
     /// Deterministic fault injection (`fault::FaultPlan`).
     pub const FAULT: u64 = 0xFA;
+    /// Content-addressed feature cache keys (`mckernel::cache`).
+    pub const CACHE: u64 = 0xCE;
 }
 
 impl HashRng {

@@ -1,0 +1,584 @@
+//! Content-addressed feature cache in front of the expansion engine.
+//!
+//! The expansion `φ(x)` is a *deterministic* function of
+//! `(McKernelConfig, x)` — every coefficient is hash-derived (paper
+//! §3/§7), so for workloads with repeated inputs the FWHT + trig
+//! pipeline recomputes bit-identical rows per request. A
+//! [`FeatureCache`] memoizes whole feature rows keyed by
+//! `(expansion identity, row content)`:
+//!
+//! * the **cache id** ([`CacheKey`]) hashes the full config
+//!   (dimensions, expansions, σ, kernel, seed) plus the plan facts
+//!   that reach the output bits (padded dim, dispatch, normalization).
+//!   Tile lane count is deliberately excluded: the engine is
+//!   bit-invariant to row grouping, so engines compiled with different
+//!   row hints share entries;
+//! * the **row hash** is seeded MurmurHash3 over the id and the row's
+//!   `f32::to_bits` image. The hash is never trusted alone — every
+//!   entry stores its key bytes and a lookup verifies id and row
+//!   bit-for-bit before serving, so a (vanishingly unlikely) 128-bit
+//!   collision degrades to a miss, never to wrong features.
+//!
+//! Entries hold verbatim engine output (post-scale folded and all), so
+//! a cache-enabled path is bit-identical to the uncached engine: hits
+//! replay stored rows, misses are gathered into one engine call — row
+//! grouping is execution-invariant — and scattered back. Capacity is
+//! bounded in **bytes**; each of the `shards` independently holds an
+//! exact-LRU list under its own mutex (the server's concurrent submit
+//! path never serializes on one lock) and evicts from its tail, so
+//! total residency never exceeds the configured budget. Accounting is
+//! exported as `cache.{hits,misses,evictions,bytes}` through the
+//! `obs` registry; like the server counters these record
+//! unconditionally — the cache itself is opt-in.
+
+use super::engine::ExpansionEngine;
+use super::factory::McKernelConfig;
+use super::feature_map::McKernel;
+use super::kernel::Kernel;
+use super::plan::{ExpansionPlan, FwhtDispatch};
+use crate::hash::hash_rng::streams;
+use crate::hash::murmur3_x64_128;
+use crate::linalg::Matrix;
+use crate::obs::{self, Counter, Gauge, MetricsRegistry};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Default shard count (8 strikes a balance: enough locks that the
+/// server's batch loop and a worker pool rarely collide, few enough
+/// that a small byte budget is not fragmented into useless slices).
+pub const DEFAULT_SHARDS: usize = 8;
+
+/// Sentinel index for the intrusive LRU list.
+const NIL: usize = usize::MAX;
+
+/// Fixed per-entry bookkeeping charge (slot struct, map entry, two
+/// box headers) added on top of the key/value payload when an entry
+/// is billed against the byte budget. An estimate, deliberately on
+/// the generous side — the budget is a residency bound, not an
+/// allocator audit.
+const ENTRY_OVERHEAD: usize = 96;
+
+/// The expansion-identity half of a cache key: one hash word covering
+/// everything that determines output bits for a given input row.
+///
+/// Computed once per consumer (engine setup), copied into every
+/// lookup. Two maps differing in any coefficient-relevant field —
+/// seed, σ, kernel, dimensions, expansions — or in output treatment —
+/// dispatch, normalization — get disjoint ids and therefore never
+/// share entries, even inside one shared [`FeatureCache`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheKey {
+    id: u64,
+}
+
+impl CacheKey {
+    /// Derive the id for `config` executed under `plan`.
+    pub fn new(config: &McKernelConfig, plan: &ExpansionPlan) -> CacheKey {
+        let (ktag, kt) = match config.kernel {
+            Kernel::Rbf => (0u64, 0u64),
+            Kernel::RbfMatern { t } => (1u64, t as u64),
+        };
+        let dispatch = match plan.dispatch() {
+            FwhtDispatch::Batched => 0u64,
+            FwhtDispatch::PerRow => 1u64,
+        };
+        let words = [
+            config.input_dim as u64,
+            config.expansions as u64,
+            config.sigma.to_bits(),
+            ktag,
+            kt,
+            config.seed,
+            plan.padded_dim() as u64,
+            dispatch,
+            plan.is_normalized() as u64,
+        ];
+        let mut buf = [0u8; 9 * 8];
+        for (i, w) in words.iter().enumerate() {
+            buf[i * 8..(i + 1) * 8].copy_from_slice(&w.to_le_bytes());
+        }
+        let (id, _) = murmur3_x64_128(&buf, streams::CACHE);
+        CacheKey { id }
+    }
+
+    /// The raw id word (stable for equal `(config, plan)` inputs).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+}
+
+/// One cached feature row plus its verification key and LRU links.
+struct Slot {
+    hash: (u64, u64),
+    id: u64,
+    row: Box<[f32]>,
+    feats: Box<[f32]>,
+    prev: usize,
+    next: usize,
+}
+
+impl Slot {
+    fn cost(&self) -> usize {
+        entry_cost(self.row.len(), self.feats.len())
+    }
+}
+
+/// Byte charge for one entry with the given key/value widths.
+pub fn entry_cost(row_len: usize, feat_len: usize) -> usize {
+    ENTRY_OVERHEAD + 4 * (row_len + feat_len)
+}
+
+/// Bit-exact row comparison (the collision check: `to_bits` equality,
+/// so `-0.0` and `0.0` are distinct keys and NaN payloads compare by
+/// representation — exactly how the engine would see them).
+fn rows_equal(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// What one shard-level insert did (rolled up into the counters once
+/// per `execute` call).
+#[derive(Default)]
+struct InsertOutcome {
+    evicted: u64,
+    bytes_delta: i64,
+}
+
+/// One lock's worth of cache: slab-backed slots threaded on an
+/// intrusive doubly-linked list (head = MRU, tail = LRU) plus a
+/// hash → slot index map. All list surgery is O(1); eviction order is
+/// exact, not sampled.
+struct Shard {
+    map: HashMap<(u64, u64), usize>,
+    slots: Vec<Option<Slot>>,
+    free: Vec<usize>,
+    head: usize,
+    tail: usize,
+    bytes: usize,
+}
+
+impl Shard {
+    fn new() -> Shard {
+        Shard {
+            map: HashMap::new(),
+            slots: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            bytes: 0,
+        }
+    }
+
+    fn slot(&self, i: usize) -> &Slot {
+        self.slots[i].as_ref().expect("linked slot occupied")
+    }
+
+    fn slot_mut(&mut self, i: usize) -> &mut Slot {
+        self.slots[i].as_mut().expect("linked slot occupied")
+    }
+
+    fn detach(&mut self, i: usize) {
+        let (prev, next) = {
+            let s = self.slot(i);
+            (s.prev, s.next)
+        };
+        match prev {
+            NIL => self.head = next,
+            p => self.slot_mut(p).next = next,
+        }
+        match next {
+            NIL => self.tail = prev,
+            n => self.slot_mut(n).prev = prev,
+        }
+    }
+
+    fn push_front(&mut self, i: usize) {
+        let old_head = self.head;
+        {
+            let s = self.slot_mut(i);
+            s.prev = NIL;
+            s.next = old_head;
+        }
+        match old_head {
+            NIL => self.tail = i,
+            h => self.slot_mut(h).prev = i,
+        }
+        self.head = i;
+    }
+
+    /// Serve a hit into `out` (verifying id + row bits first) and
+    /// promote the entry to MRU. Returns false on miss — including
+    /// the verified-collision case, which must not touch LRU order.
+    fn get_into(&mut self, hash: (u64, u64), id: u64, row: &[f32], out: &mut [f32]) -> bool {
+        let Some(&i) = self.map.get(&hash) else { return false };
+        {
+            let s = self.slot(i);
+            if s.id != id || !rows_equal(&s.row, row) || s.feats.len() != out.len() {
+                return false;
+            }
+            out.copy_from_slice(&s.feats);
+        }
+        if self.head != i {
+            self.detach(i);
+            self.push_front(i);
+        }
+        true
+    }
+
+    /// Insert (or refresh) an entry, then evict from the LRU tail
+    /// until this shard is back under `budget`. Entries that alone
+    /// exceed the budget are skipped — caching them would evict the
+    /// whole shard for a row unlikely to repeat before its own
+    /// eviction.
+    fn insert(
+        &mut self,
+        hash: (u64, u64),
+        id: u64,
+        row: &[f32],
+        feats: &[f32],
+        budget: usize,
+    ) -> InsertOutcome {
+        let mut outcome = InsertOutcome::default();
+        let cost = entry_cost(row.len(), feats.len());
+        if cost > budget {
+            return outcome;
+        }
+        if let Some(&i) = self.map.get(&hash) {
+            // Same 128-bit hash already resident: refresh in place
+            // (the common case is the same row re-inserted by a
+            // concurrent miss; the pathological case is a true
+            // collision, where last-writer-wins is still correct
+            // because every lookup verifies the stored key).
+            let old = self.slot(i).cost();
+            {
+                let s = self.slot_mut(i);
+                s.id = id;
+                s.row = row.into();
+                s.feats = feats.into();
+            }
+            self.bytes = self.bytes - old + cost;
+            outcome.bytes_delta += cost as i64 - old as i64;
+            if self.head != i {
+                self.detach(i);
+                self.push_front(i);
+            }
+        } else {
+            let slot = Slot {
+                hash,
+                id,
+                row: row.into(),
+                feats: feats.into(),
+                prev: NIL,
+                next: NIL,
+            };
+            let i = match self.free.pop() {
+                Some(i) => {
+                    self.slots[i] = Some(slot);
+                    i
+                }
+                None => {
+                    self.slots.push(Some(slot));
+                    self.slots.len() - 1
+                }
+            };
+            self.map.insert(hash, i);
+            self.push_front(i);
+            self.bytes += cost;
+            outcome.bytes_delta += cost as i64;
+        }
+        while self.bytes > budget {
+            let victim = self.tail;
+            debug_assert_ne!(victim, NIL, "over budget with empty LRU list");
+            self.detach(victim);
+            let slot = self.slots[victim].take().expect("tail slot occupied");
+            self.map.remove(&slot.hash);
+            self.free.push(victim);
+            self.bytes -= slot.cost();
+            outcome.evicted += 1;
+            outcome.bytes_delta -= slot.cost() as i64;
+        }
+        outcome
+    }
+}
+
+/// Metric handles for the cache, registered under `cache.*` — the
+/// same compatibility-view pattern as `coordinator::ServerStats`, so
+/// a `MetricsRegistry::snapshot_json` consumer and these accessors
+/// always agree.
+#[derive(Debug, Clone)]
+struct CacheMetrics {
+    hits: Arc<Counter>,
+    misses: Arc<Counter>,
+    evictions: Arc<Counter>,
+    bytes: Arc<Gauge>,
+}
+
+impl CacheMetrics {
+    fn register(reg: &MetricsRegistry) -> CacheMetrics {
+        CacheMetrics {
+            hits: reg.counter("cache.hits"),
+            misses: reg.counter("cache.misses"),
+            evictions: reg.counter("cache.evictions"),
+            bytes: reg.gauge("cache.bytes"),
+        }
+    }
+}
+
+/// Sharded, byte-bounded, content-addressed LRU over feature rows.
+/// See the module docs for the key scheme and the bit-identity
+/// argument. One instance may be shared by any number of consumers
+/// and configs — entry isolation rides on the [`CacheKey`] id.
+pub struct FeatureCache {
+    shards: Vec<Mutex<Shard>>,
+    /// Per-shard byte budget (`capacity / shards`, floor — the total
+    /// can only undershoot the configured capacity, never exceed it).
+    shard_budget: usize,
+    capacity: usize,
+    metrics: CacheMetrics,
+}
+
+impl std::fmt::Debug for FeatureCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FeatureCache")
+            .field("capacity", &self.capacity)
+            .field("shards", &self.shards.len())
+            .field("bytes", &self.bytes())
+            .finish()
+    }
+}
+
+impl FeatureCache {
+    /// Cache with `capacity_bytes` total budget, [`DEFAULT_SHARDS`]
+    /// shards, reporting into the global registry.
+    pub fn new(capacity_bytes: usize) -> FeatureCache {
+        FeatureCache::with_registry(capacity_bytes, DEFAULT_SHARDS, obs::global())
+    }
+
+    /// Fully-specified constructor — the test-isolation seam (inject
+    /// a private registry for deterministic counts, shards = 1 for
+    /// exact whole-cache LRU order).
+    pub fn with_registry(
+        capacity_bytes: usize,
+        shards: usize,
+        registry: &MetricsRegistry,
+    ) -> FeatureCache {
+        let shards = shards.max(1);
+        FeatureCache {
+            shards: (0..shards).map(|_| Mutex::new(Shard::new())).collect(),
+            shard_budget: capacity_bytes / shards,
+            capacity: capacity_bytes,
+            metrics: CacheMetrics::register(registry),
+        }
+    }
+
+    /// Configured total byte budget.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Current resident payload bytes across all shards.
+    pub fn bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().bytes).sum()
+    }
+
+    /// Current entry count across all shards.
+    pub fn entries(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
+    }
+
+    /// Lifetime hit count.
+    pub fn hits(&self) -> u64 {
+        self.metrics.hits.get()
+    }
+
+    /// Lifetime miss count.
+    pub fn misses(&self) -> u64 {
+        self.metrics.misses.get()
+    }
+
+    /// Lifetime eviction count.
+    pub fn evictions(&self) -> u64 {
+        self.metrics.evictions.get()
+    }
+
+    fn row_hash(&self, key: CacheKey, row: &[f32], buf: &mut Vec<u8>) -> (u64, u64) {
+        buf.clear();
+        buf.extend_from_slice(&key.id.to_le_bytes());
+        for v in row {
+            buf.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        murmur3_x64_128(buf, streams::CACHE)
+    }
+
+    fn shard_of(&self, hash: (u64, u64)) -> usize {
+        // High word of the second hash half: the map key uses the full
+        // 128 bits, so reusing low bits for shard choice is harmless,
+        // but the high word keeps the two selections independent.
+        ((hash.1 >> 32) as usize) % self.shards.len()
+    }
+
+    /// Cache-fronted [`ExpansionEngine::execute`]: serve every row
+    /// already resident (bit-verbatim), gather the misses into one
+    /// engine call, scatter the fresh rows back into `out`, and insert
+    /// them. Bit-identical to the uncached engine for any mix of hits
+    /// and misses — the engine pipeline is invariant to row grouping.
+    #[allow(clippy::too_many_arguments)] // mirrors ExpansionEngine::execute + the key
+    pub fn execute(
+        &self,
+        key: CacheKey,
+        engine: &mut ExpansionEngine,
+        map: &McKernel,
+        xs: &[f32],
+        rows: usize,
+        src_cols: usize,
+        out: &mut [f32],
+    ) {
+        let fd = engine.plan().feature_dim();
+        assert_eq!(xs.len(), rows * src_cols, "input length");
+        assert_eq!(out.len(), rows * fd, "output length");
+        if rows == 0 {
+            return;
+        }
+        let mut keybuf: Vec<u8> = Vec::with_capacity(8 + src_cols * 4);
+        let mut misses: Vec<(usize, (u64, u64))> = Vec::new();
+        let mut hits = 0u64;
+        for r in 0..rows {
+            let row = &xs[r * src_cols..(r + 1) * src_cols];
+            let hash = self.row_hash(key, row, &mut keybuf);
+            let served = self.shards[self.shard_of(hash)].lock().unwrap().get_into(
+                hash,
+                key.id,
+                row,
+                &mut out[r * fd..(r + 1) * fd],
+            );
+            if served {
+                hits += 1;
+            } else {
+                misses.push((r, hash));
+            }
+        }
+        let miss_count = misses.len() as u64;
+        if !misses.is_empty() {
+            let mut miss_x: Vec<f32> = Vec::with_capacity(misses.len() * src_cols);
+            for &(r, _) in &misses {
+                miss_x.extend_from_slice(&xs[r * src_cols..(r + 1) * src_cols]);
+            }
+            let mut miss_out = vec![0.0f32; misses.len() * fd];
+            engine.execute(map, &miss_x, misses.len(), src_cols, &mut miss_out);
+            let mut evicted = 0u64;
+            let mut bytes_delta = 0i64;
+            for (k, &(r, hash)) in misses.iter().enumerate() {
+                let feats = &miss_out[k * fd..(k + 1) * fd];
+                out[r * fd..(r + 1) * fd].copy_from_slice(feats);
+                let row = &xs[r * src_cols..(r + 1) * src_cols];
+                let outcome = self.shards[self.shard_of(hash)].lock().unwrap().insert(
+                    hash,
+                    key.id,
+                    row,
+                    feats,
+                    self.shard_budget,
+                );
+                evicted += outcome.evicted;
+                bytes_delta += outcome.bytes_delta;
+            }
+            if evicted > 0 {
+                self.metrics.evictions.add(evicted);
+            }
+            self.metrics.bytes.add(bytes_delta);
+        }
+        self.metrics.hits.add(hits);
+        self.metrics.misses.add(miss_count);
+    }
+
+    /// Matrix-shaped convenience over [`FeatureCache::execute`].
+    pub fn execute_matrix(
+        &self,
+        key: CacheKey,
+        engine: &mut ExpansionEngine,
+        map: &McKernel,
+        x: &Matrix,
+        out: &mut Matrix,
+    ) {
+        assert_eq!(out.shape(), (x.rows(), engine.plan().feature_dim()), "output shape");
+        let (rows, src_cols) = x.shape();
+        self.execute(key, engine, map, x.data(), rows, src_cols, out.data_mut());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mckernel::McKernelFactory;
+
+    fn map(dim: usize) -> McKernel {
+        McKernelFactory::new(dim).expansions(1).sigma(1.0).rbf().seed(5).build()
+    }
+
+    fn cache(capacity: usize) -> (FeatureCache, MetricsRegistry) {
+        let reg = MetricsRegistry::new();
+        let c = FeatureCache::with_registry(capacity, 1, &reg);
+        (c, reg)
+    }
+
+    #[test]
+    fn repeat_rows_hit_and_match_engine_output() {
+        let m = map(12);
+        let fd = m.feature_dim();
+        let mut eng = ExpansionEngine::new(&m, 4);
+        let key = CacheKey::new(m.config(), eng.plan());
+        let (c, _) = cache(1 << 20);
+        let xs: Vec<f32> = (0..3 * 12).map(|i| (i % 7) as f32 * 0.1).collect();
+        let mut want = vec![0.0f32; 3 * fd];
+        ExpansionEngine::new(&m, 4).execute(&m, &xs, 3, 12, &mut want);
+        let mut got = vec![0.0f32; 3 * fd];
+        c.execute(key, &mut eng, &m, &xs, 3, 12, &mut got);
+        assert_eq!(got, want);
+        assert_eq!((c.hits(), c.misses()), (0, 3));
+        got.fill(0.0);
+        c.execute(key, &mut eng, &m, &xs, 3, 12, &mut got);
+        assert_eq!(got, want);
+        assert_eq!((c.hits(), c.misses()), (3, 3));
+        assert_eq!(c.entries(), 3);
+    }
+
+    #[test]
+    fn oversized_entries_are_not_cached() {
+        let m = map(12);
+        let fd = m.feature_dim();
+        let mut eng = ExpansionEngine::new(&m, 1);
+        let key = CacheKey::new(m.config(), eng.plan());
+        // budget below one entry's cost: nothing sticks, nothing evicts
+        let (c, _) = cache(entry_cost(12, fd) - 1);
+        let xs: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let mut out = vec![0.0f32; fd];
+        c.execute(key, &mut eng, &m, &xs, 1, 12, &mut out);
+        c.execute(key, &mut eng, &m, &xs, 1, 12, &mut out);
+        assert_eq!((c.hits(), c.misses(), c.evictions()), (0, 2, 0));
+        assert_eq!((c.entries(), c.bytes()), (0, 0));
+    }
+
+    #[test]
+    fn cache_ids_separate_configs_and_plans() {
+        let a = map(12);
+        let b = McKernelFactory::new(12).expansions(1).sigma(1.0).rbf().seed(6).build();
+        let pa = ExpansionPlan::new(a.config(), 4);
+        let pb = ExpansionPlan::new(b.config(), 4);
+        assert_ne!(CacheKey::new(a.config(), &pa), CacheKey::new(b.config(), &pb));
+        // lanes excluded: different row hints share an id
+        let pa_wide = ExpansionPlan::new(a.config(), 64);
+        assert_eq!(CacheKey::new(a.config(), &pa), CacheKey::new(a.config(), &pa_wide));
+        // normalization reaches the output bits, so it splits the id
+        let pn = ExpansionPlan::new(a.config(), 4).normalized();
+        assert_ne!(CacheKey::new(a.config(), &pa), CacheKey::new(a.config(), &pn));
+    }
+
+    #[test]
+    fn zero_rows_is_a_no_op() {
+        let m = map(8);
+        let mut eng = ExpansionEngine::new(&m, 2);
+        let key = CacheKey::new(m.config(), eng.plan());
+        let (c, _) = cache(1 << 16);
+        let mut out: Vec<f32> = vec![];
+        c.execute(key, &mut eng, &m, &[], 0, 8, &mut out);
+        assert_eq!((c.hits(), c.misses()), (0, 0));
+    }
+}

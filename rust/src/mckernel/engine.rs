@@ -49,7 +49,7 @@ fn stamp(on: bool) -> Option<Instant> {
 #[inline]
 fn lap(t: Option<Instant>, acc: &mut u64) {
     if let Some(t) = t {
-        *acc += t.elapsed().as_nanos() as u64;
+        *acc += obs::elapsed_ns(t);
     }
 }
 

@@ -17,6 +17,7 @@
 //! a trained model is reproduced from `(seed, config)` alone — the
 //! paper's compact-distribution story (§7).
 
+pub mod cache;
 pub mod diag;
 pub mod engine;
 pub mod expansion;
@@ -26,6 +27,7 @@ pub mod kernel;
 pub mod mmd;
 pub mod plan;
 
+pub use cache::{CacheKey, FeatureCache};
 pub use engine::ExpansionEngine;
 pub use expansion::FastfoodBlock;
 pub use factory::{McKernelConfig, McKernelFactory};

@@ -114,8 +114,20 @@ impl Hist {
         if count == 0 {
             return HistSnapshot { count: 0, sum: 0, min: 0, max: 0, p50: 0.0, p95: 0.0, p99: 0.0 };
         }
-        let min = self.min.load(Ordering::Relaxed);
-        let max = self.max.load(Ordering::Relaxed);
+        let mut min = self.min.load(Ordering::Relaxed);
+        let mut max = self.max.load(Ordering::Relaxed);
+        // A concurrent record() may have bumped `count` without having
+        // stored its min/max yet, leaving the bounds inverted (fresh
+        // histogram: min = u64::MAX > max = 0; or only one of the two
+        // stores visible). `f64::clamp` panics on min > max, so repair
+        // the pair from whichever store landed before clamping.
+        if min > max {
+            if min == u64::MAX {
+                min = max;
+            } else {
+                max = min;
+            }
+        }
         // Bucket interpolation can land just outside the observed
         // range (e.g. one sample at 100 sits in bucket [96, 112), so
         // the raw p50 is 96); the true empirical percentile always
@@ -338,6 +350,41 @@ mod tests {
         let s = h.snapshot();
         assert!(s.p50 >= s.min as f64 && s.p99 <= s.max as f64);
         assert!(s.p50 <= s.p95 && s.p95 <= s.p99);
+    }
+
+    #[test]
+    fn snapshot_tolerates_half_published_record() {
+        // Race regression: snapshot() between a record()'s count
+        // increment and its min/max stores used to see count > 0 with
+        // min = u64::MAX > max = 0 and panic inside f64::clamp. Spin
+        // fresh histograms so every iteration crosses the window where
+        // the summary atomics are still at their initial values.
+        for round in 0..200u64 {
+            let h = std::sync::Arc::new(Hist::new());
+            let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+            let recorder = {
+                let h = std::sync::Arc::clone(&h);
+                let stop = std::sync::Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    let mut i = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        // large values keep min/max far from their
+                        // initial 0 / u64::MAX sentinels
+                        h.record((1 << 40) + round * 1000 + i);
+                        i += 1;
+                    }
+                })
+            };
+            for _ in 0..50 {
+                let s = h.snapshot();
+                assert!(s.min <= s.max, "inverted bounds escaped repair");
+                for p in [s.p50, s.p95, s.p99] {
+                    assert!(p.is_finite());
+                }
+            }
+            stop.store(true, Ordering::Relaxed);
+            recorder.join().unwrap();
+        }
     }
 
     #[test]

@@ -34,6 +34,15 @@ pub use registry::{Counter, Gauge, MetricsRegistry};
 pub use span::{span, trace_off, trace_to, SpanGuard};
 
 use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Nanoseconds elapsed since `t0` as the `u64` every histogram
+/// records — the one place the `u128 → u64` cast lives. Saturates at
+/// `u64::MAX` (≈584 years) instead of truncating high bits.
+#[inline]
+pub fn elapsed_ns(t0: Instant) -> u64 {
+    u64::try_from(t0.elapsed().as_nanos()).unwrap_or(u64::MAX)
+}
 
 static GLOBAL: OnceLock<MetricsRegistry> = OnceLock::new();
 

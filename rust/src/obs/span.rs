@@ -74,7 +74,7 @@ pub fn span(name: &'static str) -> SpanGuard {
 impl Drop for SpanGuard {
     fn drop(&mut self) {
         let Some(start) = self.start else { return };
-        let dur_ns = start.elapsed().as_nanos() as u64;
+        let dur_ns = super::elapsed_ns(start);
         if let Some(h) = &self.hist {
             h.record(dur_ns);
         }

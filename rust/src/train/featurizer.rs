@@ -9,7 +9,8 @@
 //! [`Featurizer::make_engine`] and reuse it every mini-batch.
 
 use crate::linalg::Matrix;
-use crate::mckernel::{ExpansionEngine, McKernel, McKernelConfig};
+use crate::mckernel::plan::ExpansionPlan;
+use crate::mckernel::{CacheKey, ExpansionEngine, FeatureCache, McKernel, McKernelConfig};
 use crate::util::ThreadPool;
 use std::sync::Arc;
 
@@ -27,6 +28,11 @@ pub struct FeatureEngine {
     engine: Option<ExpansionEngine>,
     workers: Vec<ExpansionEngine>,
     out: Matrix,
+    /// Optional content-addressed feature cache and this map's cache
+    /// id (see [`crate::mckernel::cache`]); every execute routes
+    /// through the cache when present. The id excludes the lane
+    /// count, so engines with different row hints share entries.
+    cache: Option<(Arc<FeatureCache>, CacheKey)>,
 }
 
 /// Maps a `(batch, pixels)` matrix to the classifier's input space.
@@ -74,11 +80,34 @@ impl Featurizer {
     /// of about `rows_hint` rows — one per worker/loop, reused every
     /// mini-batch. Cheap: engines compile lazily on first use.
     pub fn make_engine(&self, rows_hint: usize) -> FeatureEngine {
+        self.make_engine_cached(rows_hint, None)
+    }
+
+    /// Like [`Featurizer::make_engine`] but routing every execute
+    /// through `cache` when one is given (identity ignores it — there
+    /// is nothing to memoize). The cache id is derived eagerly from
+    /// the map's plan; the batch-vs-row dispatch depends only on the
+    /// geometry, never the row hint, so engines built with any hint —
+    /// including the parallel variant's per-task engines — share one
+    /// id and therefore one entry population.
+    pub fn make_engine_cached(
+        &self,
+        rows_hint: usize,
+        cache: Option<Arc<FeatureCache>>,
+    ) -> FeatureEngine {
+        let cache = match (self, cache) {
+            (Featurizer::Identity, _) | (_, None) => None,
+            (Featurizer::McKernel(m) | Featurizer::McKernelParallel(m, _), Some(c)) => {
+                let key = CacheKey::new(m.config(), &ExpansionPlan::new(m.config(), rows_hint));
+                Some((c, key))
+            }
+        };
         FeatureEngine {
             rows_hint,
             engine: None,
             workers: Vec::new(),
             out: Matrix::zeros(0, 0),
+            cache,
         }
     }
 
@@ -105,7 +134,10 @@ impl Featurizer {
                 let eng = engine
                     .engine
                     .get_or_insert_with(|| ExpansionEngine::new(m, hint));
-                eng.execute(m, xs, rows, d, out);
+                match &engine.cache {
+                    Some((c, key)) => c.execute(*key, eng, m, xs, rows, d, out),
+                    None => eng.execute(m, xs, rows, d, out),
+                }
             }
         }
     }
@@ -126,7 +158,10 @@ impl Featurizer {
                 let eng = engine
                     .engine
                     .get_or_insert_with(|| ExpansionEngine::new(m, hint));
-                eng.execute_matrix(m, x, &mut engine.out);
+                match &engine.cache {
+                    Some((c, key)) => c.execute_matrix(*key, eng, m, x, &mut engine.out),
+                    None => eng.execute_matrix(m, x, &mut engine.out),
+                }
                 &engine.out
             }
             Featurizer::McKernelParallel(m, pool) => {
@@ -155,6 +190,10 @@ impl Featurizer {
                 let in_ptr = SendConstPtr(x.data().as_ptr());
                 let eng_ptr = SendEnginePtr(engine.workers.as_mut_ptr());
                 let m2 = Arc::clone(m);
+                // Cache handle shared by every task: the id is lane-
+                // independent and the per-shard locks absorb the
+                // concurrent lookups/inserts.
+                let cache = engine.cache.clone();
                 pool.scope_for_each(tasks, move |t| {
                     // force whole-struct capture (edition-2021 would
                     // otherwise capture the raw-pointer fields, which
@@ -178,7 +217,10 @@ impl Featurizer {
                     let seg = unsafe {
                         std::slice::from_raw_parts_mut(out_ptr.0.add(lo * fd), (hi - lo) * fd)
                     };
-                    eng.execute(&m2, xs, hi - lo, d, seg);
+                    match &cache {
+                        Some((c, key)) => c.execute(*key, eng, &m2, xs, hi - lo, d, seg),
+                        None => eng.execute(&m2, xs, hi - lo, d, seg),
+                    }
                 })
                 // `apply_into`'s contract has no error channel; a
                 // panicking engine task here is an internal bug (the

@@ -54,6 +54,22 @@ impl EpochRecord {
         )
     }
 
+    /// Record for an epoch that processed **zero batches** (e.g.
+    /// `drop_last` with fewer rows than a batch): every per-batch
+    /// average is pinned to 0.0 instead of dividing 0/0 into NaN.
+    /// Evaluation still runs, so `test_accuracy` and wall time are
+    /// real measurements.
+    pub fn empty(epoch: usize, test_accuracy: f64, seconds: f64) -> EpochRecord {
+        EpochRecord {
+            epoch,
+            train_loss: 0.0,
+            train_accuracy: 0.0,
+            test_accuracy,
+            seconds,
+            rows_per_s: 0.0,
+        }
+    }
+
     /// `rows / secs`, guarded against zero/degenerate denominators.
     pub fn throughput(rows: usize, secs: f64) -> f64 {
         if secs > 0.0 {
@@ -114,6 +130,15 @@ mod tests {
             r.to_csv_row().split(',').count()
         );
         assert!(EpochRecord::csv_header().ends_with(",rows_per_s"));
+    }
+
+    #[test]
+    fn empty_record_is_finite_and_serializable() {
+        let r = EpochRecord::empty(2, 0.1, 0.5);
+        for v in [r.train_loss, r.train_accuracy, r.test_accuracy, r.seconds, r.rows_per_s] {
+            assert!(v.is_finite());
+        }
+        assert_eq!(r.to_csv_row(), "2,0.000000,0.000000,0.100000,0.500,0.0");
     }
 
     #[test]

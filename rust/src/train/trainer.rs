@@ -61,6 +61,13 @@ pub struct TrainConfig {
     /// The serial [`Trainer`] ignores this — it is the 1-worker
     /// correctness oracle.
     pub workers: usize,
+    /// Opt-in content-addressed feature cache
+    /// ([`crate::mckernel::FeatureCache`]): byte budget for memoizing
+    /// feature rows across epochs (the same rows recur every epoch, so
+    /// epochs after the first can be nearly FWHT-free when the train
+    /// set fits the budget). `None` disables caching. Bit-identical to
+    /// the uncached path either way.
+    pub cache_bytes: Option<usize>,
 }
 
 impl Default for TrainConfig {
@@ -73,6 +80,7 @@ impl Default for TrainConfig {
             eval_every_epoch: true,
             verbose: false,
             workers: 1,
+            cache_bytes: None,
         }
     }
 }
@@ -118,7 +126,9 @@ impl Trainer {
         let batcher = Batcher::new(self.config.batch_size, self.config.seed);
         // One expansion engine for the whole run: pooled scratch and
         // pooled feature matrix, reused every mini-batch.
-        let mut engine = self.featurizer.make_engine(self.config.batch_size);
+        let cache =
+            self.config.cache_bytes.map(|b| Arc::new(crate::mckernel::FeatureCache::new(b)));
+        let mut engine = self.featurizer.make_engine_cached(self.config.batch_size, cache);
         let mut history = Vec::with_capacity(self.config.epochs);
         let metrics = TrainerObs::resolve_if_enabled();
 
@@ -144,9 +154,13 @@ impl Trainer {
                 loss_sum += loss as f64;
                 loss_batches += 1;
             }
-            let train_secs = t0.elapsed().as_secs_f64();
+            // One clock reading feeds both the ns histogram and the
+            // seconds-based throughput (the old f64 round trip
+            // `(secs * 1e9) as u64` lost ns precision).
+            let train_ns = obs::elapsed_ns(t0);
+            let train_secs = train_ns as f64 * 1e-9;
             if let Some(m) = &metrics {
-                m.epoch_ns.record((train_secs * 1e9) as u64);
+                m.epoch_ns.record(train_ns);
                 m.rows.add(train_count as u64);
             }
             let test_acc = if self.config.eval_every_epoch || epoch + 1 == self.config.epochs {
@@ -154,13 +168,19 @@ impl Trainer {
             } else {
                 f64::NAN
             };
-            let rec = EpochRecord {
-                epoch,
-                train_loss: loss_sum / loss_batches.max(1) as f64,
-                train_accuracy: train_hits as f64 / train_count.max(1) as f64,
-                test_accuracy: test_acc,
-                seconds: t0.elapsed().as_secs_f64(),
-                rows_per_s: EpochRecord::throughput(train_count, train_secs),
+            let rec = if loss_batches == 0 {
+                // drop_last (or an empty dataset) produced no batches:
+                // emit an explicit empty record, never 0/0.
+                EpochRecord::empty(epoch, test_acc, t0.elapsed().as_secs_f64())
+            } else {
+                EpochRecord {
+                    epoch,
+                    train_loss: loss_sum / loss_batches as f64,
+                    train_accuracy: train_hits as f64 / train_count.max(1) as f64,
+                    test_accuracy: test_acc,
+                    seconds: t0.elapsed().as_secs_f64(),
+                    rows_per_s: EpochRecord::throughput(train_count, train_secs),
+                }
             };
             if self.config.verbose {
                 eprintln!(
@@ -408,6 +428,11 @@ impl ParallelTrainer {
         let mut opt = Sgd::new(self.config.sgd);
         let batcher = Batcher::new(self.config.batch_size, self.config.seed);
         let max_shard = self.config.batch_size.div_ceil(workers);
+        // One cache shared by every worker slot: the key excludes the
+        // lane count, so all shard engines address the same entries,
+        // and per-shard locks absorb the concurrent lookups.
+        let cache =
+            self.config.cache_bytes.map(|b| Arc::new(crate::mckernel::FeatureCache::new(b)));
         let mut slots: Vec<WorkerSlot> = (0..workers)
             .map(|_| WorkerSlot {
                 idx: 0,
@@ -416,7 +441,7 @@ impl ParallelTrainer {
                 feats: vec![0.0; max_shard * fdim],
                 delta: vec![0.0; max_shard * classes],
                 grads: Gradients::zeros(classes, fdim),
-                engine: self.featurizer.make_engine(max_shard),
+                engine: self.featurizer.make_engine_cached(max_shard, cache.clone()),
                 loss_sum: 0.0,
                 hits: 0,
             })
@@ -489,7 +514,7 @@ impl ParallelTrainer {
                         slot.loss_sum = ls;
                         slot.hits = h;
                         if let (Some(hist), Some(t)) = (&shard_ns, t_shard) {
-                            hist.record(t.elapsed().as_nanos() as u64);
+                            hist.record(obs::elapsed_ns(t));
                         }
                     };
                     let mut failed = self
@@ -511,7 +536,11 @@ impl ParallelTrainer {
                         // rebuild it; the shard math itself recomputes
                         // bit-identically from the inputs.
                         for &i in &failed {
-                            slots[i].engine = self.featurizer.make_engine(max_shard);
+                            // The shared cache survives quarantine: it
+                            // only stores rows an execute *completed*,
+                            // so its contents are never suspect.
+                            slots[i].engine =
+                                self.featurizer.make_engine_cached(max_shard, cache.clone());
                         }
                         // Resubmit exactly the failed shards to the
                         // surviving pool (panic-contained workers stay
@@ -543,7 +572,7 @@ impl ParallelTrainer {
                 let inv = 1.0 / rows as f32;
                 slots[0].grads.scale(inv);
                 if let (Some(m), Some(t)) = (&metrics, t_reduce) {
-                    m.reduce_ns.record(t.elapsed().as_nanos() as u64);
+                    m.reduce_ns.record(obs::elapsed_ns(t));
                 }
                 loss_sum += slots[0].loss_sum / rows as f64;
                 train_hits += slots[0].hits;
@@ -551,9 +580,12 @@ impl ParallelTrainer {
                 loss_batches += 1;
                 opt.step(&mut model, &slots[0].grads);
             }
-            let train_secs = t0.elapsed().as_secs_f64();
+            // Single clock reading for both the ns histogram and the
+            // seconds-based throughput (see the serial trainer).
+            let train_ns = obs::elapsed_ns(t0);
+            let train_secs = train_ns as f64 * 1e-9;
             if let Some(m) = &metrics {
-                m.epoch_ns.record((train_secs * 1e9) as u64);
+                m.epoch_ns.record(train_ns);
                 m.rows.add(train_count as u64);
             }
             let test_acc = if self.config.eval_every_epoch || epoch + 1 == total_epochs {
@@ -561,13 +593,17 @@ impl ParallelTrainer {
             } else {
                 f64::NAN
             };
-            let rec = EpochRecord {
-                epoch,
-                train_loss: loss_sum / loss_batches.max(1) as f64,
-                train_accuracy: train_hits as f64 / train_count.max(1) as f64,
-                test_accuracy: test_acc,
-                seconds: t0.elapsed().as_secs_f64(),
-                rows_per_s: EpochRecord::throughput(train_count, train_secs),
+            let rec = if loss_batches == 0 {
+                EpochRecord::empty(epoch, test_acc, t0.elapsed().as_secs_f64())
+            } else {
+                EpochRecord {
+                    epoch,
+                    train_loss: loss_sum / loss_batches as f64,
+                    train_accuracy: train_hits as f64 / train_count.max(1) as f64,
+                    test_accuracy: test_acc,
+                    seconds: t0.elapsed().as_secs_f64(),
+                    rows_per_s: EpochRecord::throughput(train_count, train_secs),
+                }
             };
             if self.config.verbose {
                 eprintln!(
@@ -635,6 +671,7 @@ mod tests {
             eval_every_epoch: false,
             verbose: false,
             workers: 1,
+            cache_bytes: None,
         }
     }
 
@@ -718,6 +755,56 @@ mod tests {
         assert_eq!(m_res.b(), m_full.b());
         assert_eq!(rep.history.len(), 2);
         assert_eq!(rep.history[0].epoch, 2);
+    }
+
+    #[test]
+    fn cached_training_is_bit_identical_to_uncached() {
+        let (train, test) = datasets(40, 10);
+        let fm = Arc::new(
+            McKernelFactory::new(784).expansions(1).sigma(8.0).rbf().seed(1).build(),
+        );
+        let plain = Trainer::new(quick_config(3, 0.002), Featurizer::McKernel(Arc::clone(&fm)));
+        let (m_plain, _) = plain.fit(&train, &test);
+        let mut cfg = quick_config(3, 0.002);
+        cfg.cache_bytes = Some(32 << 20);
+        let cached = Trainer::new(cfg, Featurizer::McKernel(fm));
+        let (m_cached, _) = cached.fit(&train, &test);
+        assert_eq!(m_plain.w().data(), m_cached.w().data());
+        assert_eq!(m_plain.b(), m_cached.b());
+    }
+
+    #[test]
+    fn empty_dataset_epochs_are_finite() {
+        // Zero training rows → every epoch sees zero batches; the
+        // report must carry explicit empty records, not NaN.
+        let (train, test) = datasets(0, 20);
+        let trainer = Trainer::new(quick_config(2, 0.05), Featurizer::Identity);
+        let (_, report) = trainer.fit(&train, &test);
+        assert_eq!(report.history.len(), 2);
+        for r in &report.history {
+            assert_eq!((r.train_loss, r.train_accuracy, r.rows_per_s), (0.0, 0.0, 0.0));
+            assert!(r.seconds.is_finite());
+        }
+        let mut cfg = quick_config(2, 0.05);
+        cfg.workers = 2;
+        let par = ParallelTrainer::new(cfg, Featurizer::Identity);
+        let (_, report) = par.fit(&train, &test).unwrap();
+        assert!(report.history.iter().all(|r| r.train_loss == 0.0 && r.rows_per_s == 0.0));
+    }
+
+    #[test]
+    fn drop_last_short_dataset_yields_empty_epochs() {
+        // 5 rows with batch 10 under drop_last: batches_per_epoch = 0.
+        let (train, test) = datasets(5, 10);
+        assert_eq!(Batcher::new(10, 1).drop_last().batches_per_epoch(train.len()), 0);
+        let trainer = Trainer::new(quick_config(1, 0.05), Featurizer::Identity);
+        // the default batcher keeps the ragged tail, so this run still
+        // trains; the explicit empty-record path is what we pin here
+        let (_, report) = trainer.fit(&train, &test);
+        assert!(report.history.iter().all(|r| r.train_loss.is_finite()));
+        let empty = EpochRecord::empty(0, 0.5, 0.01);
+        assert_eq!(empty.rows_per_s, 0.0);
+        assert!(!empty.to_csv_row().contains("NaN"));
     }
 
     #[test]

@@ -218,6 +218,7 @@ fn trainer_config() -> TrainConfig {
         eval_every_epoch: false,
         verbose: false,
         workers: 4,
+        cache_bytes: None,
     }
 }
 

@@ -1,0 +1,277 @@
+//! Feature-cache invariants (PR 8): a cache-enabled path must be
+//! bit-identical to the uncached engine across kernels, odd batch
+//! sizes and non-pow2 dims; eviction is exact LRU under a byte
+//! budget; hit/miss accounting is exact even under concurrency; maps
+//! differing only in seed never share entries; and the `cache.*`
+//! counters surface through `MetricsRegistry::snapshot_json`.
+
+use mckernel::coordinator::{FeatureServer, ServerConfig};
+use mckernel::linalg::Matrix;
+use mckernel::mckernel::cache::entry_cost;
+use mckernel::mckernel::{
+    CacheKey, ExpansionEngine, FeatureCache, Kernel, McKernel, McKernelFactory,
+};
+use mckernel::obs::MetricsRegistry;
+use mckernel::train::Featurizer;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn build(dim: usize, e: usize, kernel: Kernel, seed: u64) -> McKernel {
+    let f = McKernelFactory::new(dim).expansions(e).sigma(1.3).seed(seed);
+    match kernel {
+        Kernel::Rbf => f.rbf(),
+        Kernel::RbfMatern { t } => f.rbf_matern(t),
+    }
+    .build()
+}
+
+fn batch(rows: usize, dim: usize, salt: usize) -> Matrix {
+    Matrix::from_fn(rows, dim, |r, c| {
+        (((r * 31 + c * 7 + salt * 13) % 23) as f32 - 11.0) * 0.07
+    })
+}
+
+/// One row as a 1×dim matrix (distinct per `j`).
+fn row(dim: usize, j: usize) -> Matrix {
+    Matrix::from_fn(1, dim, |_, c| ((c * 5 + j * 17) % 19) as f32 * 0.11)
+}
+
+fn isolated(capacity: usize, shards: usize) -> (FeatureCache, MetricsRegistry) {
+    let reg = MetricsRegistry::new();
+    let c = FeatureCache::with_registry(capacity, shards, &reg);
+    (c, reg)
+}
+
+#[test]
+fn cached_path_is_bit_identical_across_kernels_and_shapes() {
+    for kernel in [Kernel::Rbf, Kernel::RbfMatern { t: 40 }] {
+        // non-pow2 dims (padded to 16 and 32) and odd batch sizes
+        for &dim in &[12usize, 20] {
+            let map = build(dim, 2, kernel, 21);
+            let fd = map.feature_dim();
+            let mut cached_eng = ExpansionEngine::new(&map, 8);
+            let mut plain_eng = ExpansionEngine::new(&map, 8);
+            let key = CacheKey::new(map.config(), cached_eng.plan());
+            let (cache, _) = isolated(1 << 20, 4);
+            for (pass, &rows) in [1usize, 3, 7, 5, 3].iter().enumerate() {
+                let x = batch(rows, dim, rows);
+                let mut want = Matrix::zeros(rows, fd);
+                let mut got = Matrix::zeros(rows, fd);
+                plain_eng.execute_matrix(&map, &x, &mut want);
+                cache.execute_matrix(key, &mut cached_eng, &map, &x, &mut got);
+                assert_eq!(
+                    got.data(),
+                    want.data(),
+                    "{kernel:?} dim={dim} rows={rows} pass={pass}"
+                );
+            }
+            // second full replay: now hit-dominated, still identical
+            let before = cache.hits();
+            for &rows in &[1usize, 3, 7, 5, 3] {
+                let x = batch(rows, dim, rows);
+                let mut want = Matrix::zeros(rows, fd);
+                let mut got = Matrix::zeros(rows, fd);
+                plain_eng.execute_matrix(&map, &x, &mut want);
+                cache.execute_matrix(key, &mut cached_eng, &map, &x, &mut got);
+                assert_eq!(got.data(), want.data(), "{kernel:?} dim={dim} replay");
+            }
+            assert!(cache.hits() > before, "{kernel:?} dim={dim}: replay produced no hits");
+        }
+    }
+}
+
+#[test]
+fn eviction_is_exact_lru_order() {
+    let map = build(16, 1, Kernel::Rbf, 5);
+    let fd = map.feature_dim();
+    let mut eng = ExpansionEngine::new(&map, 1);
+    let key = CacheKey::new(map.config(), eng.plan());
+    // room for exactly two entries, one shard so the LRU list is global
+    let cost = entry_cost(16, fd);
+    let (cache, _) = isolated(2 * cost, 1);
+    let mut out = Matrix::zeros(1, fd);
+    let mut run = |j: usize| {
+        let x = row(16, j);
+        cache.execute_matrix(key, &mut eng, &map, &x, &mut out);
+    };
+    run(0); // A: miss
+    run(1); // B: miss — resident {A, B}, A is LRU
+    run(0); // A: hit — B becomes LRU
+    run(2); // C: miss — evicts B, resident {A, C}
+    assert_eq!((cache.hits(), cache.misses(), cache.evictions()), (1, 3, 1));
+    assert_eq!((cache.entries(), cache.bytes()), (2, 2 * cost));
+    run(0); // A: still resident
+    run(2); // C: still resident
+    assert_eq!((cache.hits(), cache.misses()), (3, 3));
+    run(1); // B: the evicted one — must miss (and evict the new tail)
+    assert_eq!((cache.hits(), cache.misses(), cache.evictions()), (3, 4, 2));
+    assert_eq!(cache.entries(), 2);
+}
+
+#[test]
+fn residency_never_exceeds_the_byte_budget() {
+    let map = build(12, 1, Kernel::Rbf, 9);
+    let fd = map.feature_dim();
+    let mut eng = ExpansionEngine::new(&map, 1);
+    let key = CacheKey::new(map.config(), eng.plan());
+    let cost = entry_cost(12, fd);
+    let capacity = 4 * cost + cost / 2; // four entries fit, five don't
+    let (cache, _) = isolated(capacity, 1);
+    let mut out = Matrix::zeros(1, fd);
+    for j in 0..12 {
+        let x = row(12, j);
+        cache.execute_matrix(key, &mut eng, &map, &x, &mut out);
+        assert!(cache.bytes() <= capacity, "insert {j}: {} > {capacity}", cache.bytes());
+        assert!(cache.entries() <= 4, "insert {j}: {} entries", cache.entries());
+    }
+    assert_eq!(cache.misses(), 12);
+    assert_eq!(cache.evictions(), 8);
+    assert_eq!(cache.bytes(), 4 * cost);
+}
+
+#[test]
+fn concurrent_lookups_account_exactly_and_stay_bit_identical() {
+    let map = Arc::new(build(20, 1, Kernel::RbfMatern { t: 40 }, 3));
+    let fd = map.feature_dim();
+    let reg = MetricsRegistry::new();
+    let cache = Arc::new(FeatureCache::with_registry(1 << 20, 8, &reg));
+    let threads = 4;
+    let iters = 25;
+    let per_batch = 4;
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let map = Arc::clone(&map);
+            let cache = Arc::clone(&cache);
+            std::thread::spawn(move || {
+                let mut cached_eng = ExpansionEngine::new(&map, per_batch);
+                let mut plain_eng = ExpansionEngine::new(&map, per_batch);
+                let key = CacheKey::new(map.config(), cached_eng.plan());
+                let mut want = Matrix::zeros(per_batch, fd);
+                let mut got = Matrix::zeros(per_batch, fd);
+                // rows drawn from a pool of 8 shared across threads
+                let pool: Vec<Matrix> = (0..8).map(|j| row(20, j)).collect();
+                for i in 0..iters {
+                    let x = Matrix::from_fn(per_batch, 20, |r, c| {
+                        pool[(t + i + r * 3) % 8].row(0)[c]
+                    });
+                    plain_eng.execute_matrix(&map, &x, &mut want);
+                    cache.execute_matrix(key, &mut cached_eng, &map, &x, &mut got);
+                    assert_eq!(got.data(), want.data(), "thread {t} iter {i}");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let lookups = (threads * iters * per_batch) as u64;
+    assert_eq!(cache.hits() + cache.misses(), lookups);
+    assert!(cache.hits() > cache.misses(), "8-row pool should be hit-dominated");
+    assert_eq!(cache.evictions(), 0);
+    assert_eq!(reg.counter_value("cache.hits"), Some(cache.hits()));
+    assert_eq!(reg.counter_value("cache.misses"), Some(cache.misses()));
+}
+
+#[test]
+fn maps_differing_only_in_seed_never_share_entries() {
+    let a = build(12, 1, Kernel::Rbf, 1);
+    let b = build(12, 1, Kernel::Rbf, 2);
+    let fd = a.feature_dim();
+    let mut eng_a = ExpansionEngine::new(&a, 4);
+    let mut eng_b = ExpansionEngine::new(&b, 4);
+    let key_a = CacheKey::new(a.config(), eng_a.plan());
+    let key_b = CacheKey::new(b.config(), eng_b.plan());
+    assert_ne!(key_a, key_b);
+    let (cache, _) = isolated(1 << 20, 2);
+    let x = batch(4, 12, 0);
+    let mut out_a = Matrix::zeros(4, fd);
+    let mut out_b = Matrix::zeros(4, fd);
+    // same inputs through both maps sharing one cache
+    cache.execute_matrix(key_a, &mut eng_a, &a, &x, &mut out_a);
+    cache.execute_matrix(key_b, &mut eng_b, &b, &x, &mut out_b);
+    assert_eq!(cache.entries(), 8, "disjoint ids must not collapse entries");
+    assert_eq!(cache.misses(), 8);
+    // and each map's resident rows replay its own features, not the
+    // other's
+    let mut want = Matrix::zeros(4, fd);
+    ExpansionEngine::new(&a, 4).execute_matrix(&a, &x, &mut want);
+    let mut replay = Matrix::zeros(4, fd);
+    cache.execute_matrix(key_a, &mut eng_a, &a, &x, &mut replay);
+    assert_eq!(replay.data(), want.data());
+    ExpansionEngine::new(&b, 4).execute_matrix(&b, &x, &mut want);
+    cache.execute_matrix(key_b, &mut eng_b, &b, &x, &mut replay);
+    assert_eq!(replay.data(), want.data());
+    assert_ne!(out_a.data(), out_b.data(), "different seeds, different features");
+    assert_eq!(cache.hits(), 8);
+}
+
+#[test]
+fn cache_metrics_surface_in_snapshot_json() {
+    let map = build(12, 1, Kernel::Rbf, 7);
+    let fd = map.feature_dim();
+    let mut eng = ExpansionEngine::new(&map, 2);
+    let key = CacheKey::new(map.config(), eng.plan());
+    let (cache, reg) = isolated(1 << 16, 2);
+    let x = batch(2, 12, 1);
+    let mut out = Matrix::zeros(2, fd);
+    cache.execute_matrix(key, &mut eng, &map, &x, &mut out);
+    cache.execute_matrix(key, &mut eng, &map, &x, &mut out);
+    let snap = reg.snapshot_json().to_string();
+    for name in ["cache.hits", "cache.misses", "cache.evictions", "cache.bytes"] {
+        assert!(snap.contains(&format!("\"{name}\"")), "snapshot missing {name}: {snap}");
+    }
+    assert_eq!(reg.counter_value("cache.hits"), Some(2));
+    assert_eq!(reg.counter_value("cache.misses"), Some(2));
+}
+
+#[test]
+fn featurizer_engine_with_cache_matches_uncached() {
+    let map = Arc::new(build(20, 2, Kernel::RbfMatern { t: 40 }, 11));
+    let f = Featurizer::McKernel(Arc::clone(&map));
+    let reg = MetricsRegistry::new();
+    let cache = Arc::new(FeatureCache::with_registry(1 << 20, 2, &reg));
+    let mut plain = f.make_engine(8);
+    let mut cached = f.make_engine_cached(8, Some(cache));
+    let x = batch(6, 20, 4);
+    let want = f.apply_into(&x, &mut plain).clone();
+    let got = f.apply_into(&x, &mut cached).clone();
+    assert_eq!(got.data(), want.data());
+    // second pass is all hits and still identical
+    let got2 = f.apply_into(&x, &mut cached).clone();
+    assert_eq!(got2.data(), want.data());
+    assert_eq!(reg.counter_value("cache.hits"), Some(6));
+    assert_eq!(reg.counter_value("cache.misses"), Some(6));
+}
+
+#[test]
+fn server_with_cache_replies_bit_identical_and_records_hits() {
+    let map = Arc::new(build(12, 2, Kernel::Rbf, 17));
+    let reg_plain = MetricsRegistry::new();
+    let reg_cached = MetricsRegistry::new();
+    let plain = FeatureServer::start_with_registry(
+        Arc::clone(&map),
+        ServerConfig::new(4, Duration::from_micros(50)),
+        &reg_plain,
+    );
+    let cached = FeatureServer::start_with_registry(
+        Arc::clone(&map),
+        ServerConfig::new(4, Duration::from_micros(50)).cache_bytes(1 << 20),
+        &reg_cached,
+    );
+    // 3 distinct rows, 8 rounds: repeats hit from round two onward
+    for round in 0..8 {
+        for j in 0..3 {
+            let x = row(12, j).data().to_vec();
+            let want = plain.transform(x.clone()).unwrap();
+            let got = cached.transform(x).unwrap();
+            assert_eq!(got, want, "round {round} row {j}");
+        }
+    }
+    let hits = reg_cached.counter_value("cache.hits").unwrap();
+    let misses = reg_cached.counter_value("cache.misses").unwrap();
+    assert_eq!(hits + misses, 24);
+    assert!(hits >= 21, "3 unique rows over 24 requests: got {hits} hits");
+    assert_eq!(reg_plain.counter_value("cache.hits"), None, "uncached server registers none");
+    plain.shutdown();
+    cached.shutdown();
+}

@@ -33,6 +33,7 @@ fn config(epochs: usize, lr: f32, workers: usize) -> TrainConfig {
         eval_every_epoch: false,
         verbose: false,
         workers,
+        cache_bytes: None,
     }
 }
 

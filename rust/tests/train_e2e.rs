@@ -28,6 +28,7 @@ fn config(epochs: usize, lr: f32) -> TrainConfig {
         eval_every_epoch: false,
         verbose: false,
         workers: 1,
+        cache_bytes: None,
     }
 }
 
@@ -140,6 +141,7 @@ fn momentum_and_clip_paths_run() {
         eval_every_epoch: true,
         verbose: false,
         workers: 1,
+        cache_bytes: None,
     };
     let (_, rep) = Trainer::new(cfg, Featurizer::Identity).fit(&train, &test);
     assert_eq!(rep.history.len(), 2);
