@@ -74,4 +74,11 @@ fn main() {
         cmp.rows_per_s(),
         cmp.max_abs_err
     );
+    println!(
+        "simd ({}): {:.3} ms/batch  vs scalar tiled {:.2}x  (max |scalar−simd| {:.2e})",
+        mckernel::util::simd::level().name(),
+        cmp.simd.median_ms(),
+        cmp.simd_speedup(),
+        cmp.simd_max_abs_err
+    );
 }

@@ -8,8 +8,9 @@
 //! Usage: cargo bench --bench bench_fwht [-- --ablation] [-- --quick]
 
 use mckernel::benchkit::{bench, BenchConfig, Report};
-use mckernel::fwht::{iterative, optimized, reference};
+use mckernel::fwht::{iterative, optimized, reference, simd};
 use mckernel::hash::HashRng;
+use mckernel::util::simd as simd_caps;
 
 fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
     let mut r = HashRng::new(seed, 0xBE);
@@ -22,16 +23,21 @@ fn main() {
     let quick = args.iter().any(|a| a == "--quick");
     let cfg = if quick { BenchConfig::quick() } else { BenchConfig::default() };
 
-    // ---- Table 1: mckernel vs spiral-like baseline -------------------
+    // ---- Table 1: mckernel vs SIMD vs spiral-like baseline -----------
     let mut table1 = Report::new(
         "Table 1 — Fast Walsh Hadamard, time per transform (ms)",
-        &["mckernel", "spiral(recursive)", "speedup"],
+        &["mckernel", "simd", "spiral(recursive)", "speedup", "simd speedup"],
     );
-    println!("running Table 1 sizes 2^10..2^20 …");
+    println!(
+        "running Table 1 sizes 2^10..2^20 … (simd level: {})",
+        simd_caps::level().name()
+    );
     for log_n in 10..=20 {
         let n = 1usize << log_n;
         let mut data = rand_vec(n, log_n as u64);
         let mck = bench("mckernel", &cfg, |_| optimized::fwht(&mut data));
+        let mut data_s = rand_vec(n, log_n as u64 + 200);
+        let vec = bench("simd", &cfg, |_| simd::fwht(&mut data_s));
         // Spiral executes a precomputed plan; timing plan-build each
         // call would be unfair — build once, execute per iteration
         // (matches Spiral's published methodology).
@@ -40,7 +46,13 @@ fn main() {
         let spiral = bench("spiral", &cfg, |_| plan.execute(&mut data2));
         table1.add_row(
             &format!("{n}"),
-            &[mck.median_ms(), spiral.median_ms(), spiral.stats.median / mck.stats.median],
+            &[
+                mck.median_ms(),
+                vec.median_ms(),
+                spiral.median_ms(),
+                spiral.stats.median / mck.stats.median,
+                mck.stats.median / vec.stats.median,
+            ],
         );
     }
     println!("{}", table1.to_table());

@@ -1,41 +1,55 @@
-//! Shared per-row vs batched feature-pipeline comparison, used by the
-//! `bench_features` binary and the `mckernel bench` CLI subcommand so
-//! the printed table and the machine-readable JSON snapshot can never
-//! diverge. Both paths execute through `mckernel::engine` — the
-//! per-row baseline via the plan's explicit per-row override, the
-//! batched path via the plan the engine would compile anyway — so the
-//! numbers track exactly what the library ships.
+//! Shared per-row vs batched vs SIMD feature-pipeline comparison, used
+//! by the `bench_features` binary and the `mckernel bench` CLI
+//! subcommand so the printed table and the machine-readable JSON
+//! snapshot can never diverge. All paths execute through
+//! `mckernel::engine` — the per-row baseline via the plan's explicit
+//! per-row override, the scalar and SIMD tiled paths via explicitly
+//! forced plans — so the numbers track exactly what the library ships.
 
 use super::runner::{bench, BenchConfig, BenchResult};
 use crate::linalg::Matrix;
-use crate::mckernel::{ExpansionEngine, McKernel};
+use crate::mckernel::{DispatchForce, ExpansionEngine, ExpansionPlan, McKernel};
 
-/// Timings + output deviation of the two feature paths on one batch.
+/// Timings + output deviations of the three feature paths on one batch.
 pub struct FeatureComparison {
     /// Per-row libm oracle (plan forced onto `FwhtDispatch::PerRow`).
     pub per_row: BenchResult,
-    /// Batched engine pipeline (the compiled default).
+    /// Scalar tiled pipeline (plan forced onto `FwhtDispatch::Batched`).
     pub batched: BenchResult,
+    /// SIMD tiled pipeline (plan forced onto `FwhtDispatch::Simd`; on
+    /// CPUs without a vector unit its kernels run their scalar
+    /// fallbacks, so the timing degenerates to ≈`batched`).
+    pub simd: BenchResult,
     /// Max |per-row − batched| over all features (trig-kernel budget).
     pub max_abs_err: f32,
+    /// Max |batched − simd| over all features (≤1e-6 contract: FWHT is
+    /// bit-identical, only the trig rounding may differ).
+    pub simd_max_abs_err: f32,
     /// Rows in the timed batch.
     pub rows: usize,
 }
 
 impl FeatureComparison {
-    /// Median-over-median speedup of the batched path.
+    /// Median-over-median speedup of the scalar tiled path over the
+    /// per-row oracle.
     pub fn speedup(&self) -> f64 {
         self.per_row.stats.median / self.batched.stats.median
     }
 
-    /// Batched throughput in rows per second.
+    /// Median-over-median speedup of the SIMD path over the scalar
+    /// tiled path (≈1.0 on CPUs without a vector unit).
+    pub fn simd_speedup(&self) -> f64 {
+        self.batched.stats.median / self.simd.stats.median
+    }
+
+    /// Best tiled throughput in rows per second (SIMD if it wins).
     pub fn rows_per_s(&self) -> f64 {
-        self.rows as f64 / self.batched.stats.median
+        self.rows as f64 / self.batched.stats.median.min(self.simd.stats.median)
     }
 }
 
-/// Time the per-row oracle vs the batched engine on the same batch
-/// and report the max output deviation between them.
+/// Time the per-row oracle vs the scalar and SIMD tiled engines on the
+/// same batch and report the max output deviations between them.
 pub fn compare_feature_paths(map: &McKernel, x: &Matrix, cfg: &BenchConfig) -> FeatureComparison {
     let rows = x.rows();
     let mut out_rows = Matrix::zeros(rows, map.feature_dim());
@@ -44,16 +58,32 @@ pub fn compare_feature_paths(map: &McKernel, x: &Matrix, cfg: &BenchConfig) -> F
         oracle.execute_matrix(map, x, &mut out_rows)
     });
     let mut out_batch = Matrix::zeros(rows, map.feature_dim());
-    let mut engine = ExpansionEngine::new(map, rows);
+    let mut engine = ExpansionEngine::with_plan(ExpansionPlan::new_forced(
+        map.config(),
+        rows,
+        DispatchForce::Scalar,
+    ));
     let batched = bench("features/batched", cfg, |_| {
         engine.execute_matrix(map, x, &mut out_batch)
     });
-    let max_abs_err = out_rows
-        .data()
-        .iter()
-        .zip(out_batch.data())
-        .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()));
-    FeatureComparison { per_row, batched, max_abs_err, rows }
+    let mut out_simd = Matrix::zeros(rows, map.feature_dim());
+    let mut simd_engine = ExpansionEngine::with_plan(ExpansionPlan::new_forced(
+        map.config(),
+        rows,
+        DispatchForce::Simd,
+    ));
+    let simd = bench("features/simd", cfg, |_| {
+        simd_engine.execute_matrix(map, x, &mut out_simd)
+    });
+    let max_abs = |a: &Matrix, b: &Matrix| {
+        a.data()
+            .iter()
+            .zip(b.data())
+            .fold(0.0f32, |m, (p, q)| m.max((p - q).abs()))
+    };
+    let max_abs_err = max_abs(&out_rows, &out_batch);
+    let simd_max_abs_err = max_abs(&out_batch, &out_simd);
+    FeatureComparison { per_row, batched, simd, max_abs_err, simd_max_abs_err, rows }
 }
 
 #[cfg(test)]
@@ -67,7 +97,10 @@ mod tests {
         let x = Matrix::from_fn(4, 16, |r, c| (r + c) as f32 * 0.1);
         let cmp = compare_feature_paths(&map, &x, &BenchConfig::quick());
         assert!(cmp.max_abs_err < 1e-5, "err {}", cmp.max_abs_err);
+        // the PR 9 contract, enforced on every bench run too
+        assert!(cmp.simd_max_abs_err <= 1e-6, "simd err {}", cmp.simd_max_abs_err);
         assert!(cmp.speedup() > 0.0);
+        assert!(cmp.simd_speedup() > 0.0);
         assert!(cmp.rows_per_s() > 0.0);
         assert_eq!(cmp.rows, 4);
     }

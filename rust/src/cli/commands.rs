@@ -26,7 +26,7 @@ COMMANDS:
   predict    evaluate a saved checkpoint on a dataset split
   features   featurize one synthetic sample and print stats
   fwht       run one FWHT and report timing
-  bench      write BENCH_*.json perf snapshots (per-row vs batched)
+  bench      write BENCH_*.json perf snapshots (per-row vs batched vs SIMD)
   cache-bench  feature-cache drill: bit-identity, hit/miss accounting, timing
   stats      drive the instrumented paths and export a metrics snapshot
   gen-data   write a synthetic dataset as IDX files
@@ -51,6 +51,10 @@ COMMON OPTIONS:
                             epoch and resume from it if present
   --cache / --cache-mb N    content-addressed feature cache on train /
                             serve paths (budget in MiB)        [64]
+  --dispatch auto|scalar|simd
+                            force the expansion engine's tiled arm
+                            (auto = runtime feature detection; also
+                            settable via MCKERNEL_DISPATCH)    [auto]
   --csv PATH                write per-epoch history CSV
 
 Run `mckernel <command> --help` for details.";
@@ -289,7 +293,7 @@ pub fn cmd_fwht(args: &Args) -> Result<()> {
                     reference::fwht_recursive(&mut data)
                 }),
             ),
-            other => bail!("bad --engine '{other}' (iterative|mckernel|batch|naive|spiral)"),
+            other => bail!("bad --engine '{other}' (iterative|mckernel|batch|simd|naive|spiral)"),
         }
     };
     println!(
@@ -331,16 +335,21 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
     let mut rng = crate::hash::HashRng::new(7, 0xBE);
     let x = Matrix::from_fn(batch, input_dim, |_, _| rng.next_f32() - 0.5);
 
-    // per-row oracle vs batched pipeline on the same batch (shared
-    // harness with bench_features so table and JSON can't diverge)
+    // per-row oracle vs scalar vs SIMD tiled pipelines on the same
+    // batch (shared harness with bench_features so table and JSON
+    // can't diverge)
     let cmp = compare_feature_paths(&map, &x, &cfg);
     println!(
         "features (batch={batch}, n={n}, E={e}): per-row {:.3} ms  batched {:.3} ms  \
-         speedup {:.2}x  max |err| {:.2e}",
+         simd {:.3} ms  speedup {:.2}x  simd speedup {:.2}x  max |err| {:.2e}  \
+         simd |err| {:.2e}",
         cmp.per_row.median_ms(),
         cmp.batched.median_ms(),
+        cmp.simd.median_ms(),
         cmp.speedup(),
-        cmp.max_abs_err
+        cmp.simd_speedup(),
+        cmp.max_abs_err,
+        cmp.simd_max_abs_err
     );
     write_bench_json(
         &format!("{out_dir}/BENCH_features.json"),
@@ -352,11 +361,16 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
             ("expansions", Json::Num(e as f64)),
             ("per_row_ms", Json::Num(cmp.per_row.median_ms())),
             ("batched_ms", Json::Num(cmp.batched.median_ms())),
+            ("simd_ms", Json::Num(cmp.simd.median_ms())),
             ("speedup", Json::Num(cmp.speedup())),
+            ("simd_speedup", Json::Num(cmp.simd_speedup())),
+            ("simd_level", Json::Str(crate::util::simd::level().name().into())),
             ("rows_per_s", Json::Num(cmp.rows_per_s())),
             ("max_abs_err", Json::Num(cmp.max_abs_err as f64)),
+            ("simd_max_abs_err", Json::Num(cmp.simd_max_abs_err as f64)),
             ("per_row", cmp.per_row.stats.to_dist_json_ns()),
             ("batched", cmp.batched.stats.to_dist_json_ns()),
+            ("simd", cmp.simd.stats.to_dist_json_ns()),
         ],
     )?;
 
@@ -382,12 +396,23 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
             *v *= inv_n;
         }
     });
+    let mut simd_buf: Vec<f32> = (0..batch * n).map(|i| (i % 13) as f32 - 6.0).collect();
+    let fwht_simd = bench("fwht/simd", &cfg, |_| {
+        crate::fwht::simd::fwht_batch(&mut simd_buf, batch, n);
+        for v in simd_buf.iter_mut() {
+            *v *= inv_n;
+        }
+    });
     let fwht_speedup = fwht_rows.stats.median / fwht_batched.stats.median;
+    let fwht_simd_speedup = fwht_batched.stats.median / fwht_simd.stats.median;
     println!(
-        "fwht (rows={batch}, n={n}): per-row {:.3} ms  batched {:.3} ms  speedup {:.2}x",
+        "fwht (rows={batch}, n={n}): per-row {:.3} ms  batched {:.3} ms  simd {:.3} ms  \
+         speedup {:.2}x  simd speedup {:.2}x",
         fwht_rows.median_ms(),
         fwht_batched.median_ms(),
-        fwht_speedup
+        fwht_simd.median_ms(),
+        fwht_speedup,
+        fwht_simd_speedup
     );
     write_bench_json(
         &format!("{out_dir}/BENCH_fwht.json"),
@@ -397,10 +422,17 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
             ("n", Json::Num(n as f64)),
             ("per_row_ms", Json::Num(fwht_rows.median_ms())),
             ("batched_ms", Json::Num(fwht_batched.median_ms())),
+            ("simd_ms", Json::Num(fwht_simd.median_ms())),
             ("speedup", Json::Num(fwht_speedup)),
-            ("transforms_per_s", Json::Num(batch as f64 / fwht_batched.stats.median)),
+            ("simd_speedup", Json::Num(fwht_simd_speedup)),
+            ("simd_level", Json::Str(crate::util::simd::level().name().into())),
+            (
+                "transforms_per_s",
+                Json::Num(batch as f64 / fwht_batched.stats.median.min(fwht_simd.stats.median)),
+            ),
             ("per_row", fwht_rows.stats.to_dist_json_ns()),
             ("batched", fwht_batched.stats.to_dist_json_ns()),
+            ("simd", fwht_simd.stats.to_dist_json_ns()),
         ],
     )?;
 
@@ -433,6 +465,24 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
             ("parallel", tcmp.parallel.stats.to_dist_json_ns()),
         ],
     )?;
+
+    // Compact scalar-vs-SIMD median summary — the table EXPERIMENTS.md
+    // records from the first toolchain-bearing CI run.
+    println!();
+    println!(
+        "scalar vs simd medians (level={}, rows={batch}, n={n}):",
+        crate::util::simd::level().name()
+    );
+    println!("  {:<10} {:>12} {:>12} {:>9}", "kernel", "scalar ms", "simd ms", "speedup");
+    for (kernel, scalar_ms, simd_ms) in [
+        ("fwht", fwht_batched.median_ms(), fwht_simd.median_ms()),
+        ("features", cmp.batched.median_ms(), cmp.simd.median_ms()),
+    ] {
+        println!(
+            "  {kernel:<10} {scalar_ms:>12.4} {simd_ms:>12.4} {:>8.2}x",
+            scalar_ms / simd_ms
+        );
+    }
     Ok(())
 }
 
@@ -1036,6 +1086,14 @@ pub fn run(args: Args) -> Result<()> {
         }
         Some(cmd) => {
             let rest = args.rest();
+            // Dispatch force is process-global (the plan's one knob):
+            // resolve it up front so every engine any subcommand builds
+            // compiles onto the requested arm.
+            if let Some(d) = rest.get("dispatch") {
+                let force = crate::mckernel::DispatchForce::parse(d)
+                    .with_context(|| format!("bad --dispatch '{d}' (auto|scalar|simd)"))?;
+                crate::mckernel::set_dispatch_force(force);
+            }
             match cmd {
                 "train" => cmd_train(&rest),
                 "predict" => cmd_predict(&rest),
@@ -1181,11 +1239,12 @@ mod tests {
             .unwrap();
         assert_eq!(train.get("workers").and_then(Json::as_f64), Some(2.0));
         assert!(train.get("acc_delta").and_then(Json::as_f64).is_some());
-        // each file embeds nested dists in the shared obs schema
+        // each file embeds nested dists in the shared obs schema,
+        // including the PR 9 `simd` leg
         for (name, keys) in [
-            ("BENCH_features.json", ["per_row", "batched"]),
-            ("BENCH_fwht.json", ["per_row", "batched"]),
-            ("BENCH_train.json", ["serial", "parallel"]),
+            ("BENCH_features.json", &["per_row", "batched", "simd"][..]),
+            ("BENCH_fwht.json", &["per_row", "batched", "simd"][..]),
+            ("BENCH_train.json", &["serial", "parallel"][..]),
         ] {
             let json = Json::parse(&std::fs::read_to_string(dir.join(name)).unwrap()).unwrap();
             for key in keys {
@@ -1198,7 +1257,26 @@ mod tests {
                 }
             }
         }
+        // the simd legs carry their scalar-relative numbers + level tag
+        for name in ["BENCH_features.json", "BENCH_fwht.json"] {
+            let json = Json::parse(&std::fs::read_to_string(dir.join(name)).unwrap()).unwrap();
+            assert!(json.get("simd_ms").and_then(Json::as_f64).is_some(), "{name}");
+            assert!(json.get("simd_speedup").and_then(Json::as_f64).is_some(), "{name}");
+            assert!(json.get("simd_level").is_some(), "{name}");
+        }
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dispatch_flag_rejects_unknown_values() {
+        let a = args(&["fwht", "--log-n", "4", "--dispatch", "bogus"]);
+        assert!(run(a).is_err());
+    }
+
+    #[test]
+    fn fwht_accepts_the_simd_engine() {
+        let a = args(&["fwht", "--log-n", "6", "--engine", "simd"]);
+        run(a).unwrap();
     }
 
     #[test]

@@ -58,7 +58,7 @@ pub fn fwht_colmajor(tile: &mut [f32], n: usize, lanes: usize) {
 
 /// Gather `lanes` rows of a row-major `(lanes, n)` slice into a
 /// column-major tile.
-fn load_tile(rows: &[f32], n: usize, lanes: usize, tile: &mut [f32]) {
+pub(crate) fn load_tile(rows: &[f32], n: usize, lanes: usize, tile: &mut [f32]) {
     for (l, row) in rows.chunks_exact(n).enumerate() {
         for (j, &v) in row.iter().enumerate() {
             tile[j * lanes + l] = v;
@@ -67,7 +67,7 @@ fn load_tile(rows: &[f32], n: usize, lanes: usize, tile: &mut [f32]) {
 }
 
 /// Scatter a column-major tile back into row-major rows.
-fn store_tile(tile: &[f32], n: usize, lanes: usize, rows: &mut [f32]) {
+pub(crate) fn store_tile(tile: &[f32], n: usize, lanes: usize, rows: &mut [f32]) {
     for (l, row) in rows.chunks_exact_mut(n).enumerate() {
         for (j, v) in row.iter_mut().enumerate() {
             *v = tile[j * lanes + l];

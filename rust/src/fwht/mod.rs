@@ -8,7 +8,7 @@
 //! ```
 //!
 //! `H·c` factors into `log₂ n` butterfly stages (`paper Eq. 12-13`),
-//! giving `O(n log n)` time. Three **production engines** are
+//! giving `O(n log n)` time. Four **production engines** are
 //! provided — the set `mckernel::plan::ExpansionPlan` selects
 //! between — plus a reference module of test oracles:
 //!
@@ -20,6 +20,11 @@
 //! * [`batch`] — `rows` transforms in lockstep on column-major tiles
 //!   (batch dimension innermost), the mini-batch hot path; bit-identical
 //!   to [`optimized`] per row.
+//! * [`simd`] — the batch tile engine with explicit `std::arch`
+//!   butterflies (AVX2 8-wide / NEON 4-wide), runtime-detected with a
+//!   scalar fallback; bit-identical to [`batch`] and [`optimized`]
+//!   (butterflies are pure adds/subs — vectorizing them cannot change
+//!   rounding).
 //! * [`reference`] — the `O(n²)` naïve oracle and the Spiral-like
 //!   recursive baseline. Test/bench oracles only; never dispatched to
 //!   by the expansion plan.
@@ -34,6 +39,7 @@ pub mod batch;
 pub mod iterative;
 pub mod optimized;
 pub mod reference;
+pub mod simd;
 
 pub use batch::{fwht_batch, fwht_colmajor, tile_lanes};
 
@@ -42,7 +48,7 @@ pub use optimized::fwht as fwht_fast;
 
 /// Which production FWHT engine to run (CLI / bench selectable; the
 /// expansion plan picks between [`Engine::Optimized`] per row and
-/// [`Engine::Batch`] tiles). The reference oracles
+/// [`Engine::Batch`]/[`Engine::Simd`] tiles). The reference oracles
 /// ([`reference::fwht_naive`], [`reference::fwht_recursive`]) are
 /// deliberately *not* variants: nothing in the library may dispatch
 /// to them.
@@ -59,11 +65,16 @@ pub enum Engine {
     /// dispatching `PerRow` — keep that in mind when reading large-n
     /// CLI/bench numbers for it.
     Batch,
+    /// The batch tile engine driven through explicit AVX2/NEON
+    /// butterflies (runtime-detected; scalar fallback elsewhere).
+    /// Bit-identical to Batch and Optimized.
+    Simd,
 }
 
 impl Engine {
     /// All production engines, for sweeps.
-    pub const ALL: [Engine; 3] = [Engine::Iterative, Engine::Optimized, Engine::Batch];
+    pub const ALL: [Engine; 4] =
+        [Engine::Iterative, Engine::Optimized, Engine::Batch, Engine::Simd];
 
     /// Human name (used by benches and the CLI).
     pub fn name(self) -> &'static str {
@@ -71,6 +82,7 @@ impl Engine {
             Engine::Iterative => "iterative",
             Engine::Optimized => "mckernel",
             Engine::Batch => "batch",
+            Engine::Simd => "simd",
         }
     }
 
@@ -80,12 +92,13 @@ impl Engine {
             "iterative" => Some(Engine::Iterative),
             "optimized" | "mckernel" => Some(Engine::Optimized),
             "batch" => Some(Engine::Batch),
+            "simd" => Some(Engine::Simd),
             _ => None,
         }
     }
 
     /// Run this engine in place on `data` (`data.len()` must be a
-    /// power of two). The batch engine treats `data` as a single row.
+    /// power of two). The batch engines treat `data` as a single row.
     pub fn run(self, data: &mut [f32]) {
         match self {
             Engine::Iterative => iterative::fwht(data),
@@ -94,6 +107,7 @@ impl Engine {
                 let n = data.len();
                 batch::fwht_batch(data, 1, n);
             }
+            Engine::Simd => simd::fwht(data),
         }
     }
 }

@@ -1,0 +1,361 @@
+//! Explicit-intrinsics FWHT butterflies (AVX2 / NEON), runtime
+//! dispatched — the kernels behind `mckernel::plan::FwhtDispatch::Simd`.
+//!
+//! The scalar passes in [`super::optimized`] already walk contiguous
+//! dual/quad streams precisely so the compiler *can* vectorize them;
+//! this module removes the "can" by issuing the vector adds/subs
+//! explicitly: 8 f32 lanes per op on AVX2, 4 on NEON, with a scalar
+//! remainder loop for stream tails shorter than a register. Because a
+//! butterfly is nothing but independent elementwise `x+y` / `x−y`
+//! (IEEE ops identical scalar or vectorized, no re-association, no
+//! FMA), every engine here is **bit-identical** to its scalar twin —
+//! the differential tests assert exact equality, not a tolerance.
+//!
+//! Entry points mirror `fwht::batch`: [`fwht_colmajor`] runs the stage
+//! schedule over a column-major `(n, lanes)` tile (stride = coefficient
+//! stride × lane count, exactly like the scalar tile engine, so the
+//! per-lane arithmetic DAG is unchanged), [`fwht`] is the single-row
+//! form, [`fwht_batch`] streams row-major matrices through transpose
+//! tiles. Each checks the cached [`crate::util::simd::level`] once and
+//! falls back to the scalar engines when no vector unit is present, so
+//! a *forced* SIMD dispatch still runs — and still matches the scalar
+//! arm bit-for-bit — on machines without AVX2/NEON.
+
+use super::batch;
+use super::optimized::{radix2_pass as radix2_scalar, radix4_pass as radix4_scalar};
+use crate::util::simd::{level, SimdLevel};
+
+/// One radix-2 butterfly stage at stride `h`, vector-widened.
+/// Bit-identical to [`super::optimized::radix2_pass`].
+pub fn radix2_pass(data: &mut [f32], h: usize) {
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: level() == Avx2 only after is_x86_feature_detected!.
+        SimdLevel::Avx2 => unsafe { avx2::radix2_pass(data, h) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: level() == Neon only after runtime NEON detection.
+        SimdLevel::Neon => unsafe { neon::radix2_pass(data, h) },
+        _ => radix2_scalar(data, h),
+    }
+}
+
+/// Two fused butterfly stages (strides `h`, `2h`), vector-widened.
+/// Bit-identical to [`super::optimized::radix4_pass`].
+pub fn radix4_pass(data: &mut [f32], h: usize) {
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: level() == Avx2 only after is_x86_feature_detected!.
+        SimdLevel::Avx2 => unsafe { avx2::radix4_pass(data, h) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: level() == Neon only after runtime NEON detection.
+        SimdLevel::Neon => unsafe { neon::radix4_pass(data, h) },
+        _ => radix4_scalar(data, h),
+    }
+}
+
+/// All `log₂ n` butterfly stages over a column-major `(n, lanes)` tile
+/// in place — the same stage schedule as [`batch::fwht_colmajor`]
+/// (radix-2 parity pass, then fused radix-4 sweeps), driven through
+/// the vector passes. Bit-identical to the scalar tile engine, and
+/// therefore to the per-row optimized engine per lane.
+pub fn fwht_colmajor(tile: &mut [f32], n: usize, lanes: usize) {
+    assert!(n.is_power_of_two(), "FWHT length must be a power of two");
+    assert_eq!(tile.len(), n * lanes, "tile shape mismatch");
+    if n <= 1 || lanes == 0 {
+        return;
+    }
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: level() == Avx2 only after is_x86_feature_detected!.
+        SimdLevel::Avx2 => unsafe { avx2::fwht_colmajor(tile, n, lanes) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: level() == Neon only after runtime NEON detection.
+        SimdLevel::Neon => unsafe { neon::fwht_colmajor(tile, n, lanes) },
+        _ => batch::fwht_colmajor(tile, n, lanes),
+    }
+}
+
+/// Single-row in-place FWHT through the vector passes (the CLI/bench
+/// baseline form). A one-lane column-major tile *is* the row, so this
+/// is [`fwht_colmajor`] with `lanes == 1` — bit-identical to
+/// [`super::optimized::fwht`].
+pub fn fwht(data: &mut [f32]) {
+    let n = data.len();
+    fwht_colmajor(data, n, 1);
+}
+
+/// FWHT of every row of a row-major `(rows, n)` matrix via transpose
+/// tiles, exactly like [`batch::fwht_batch`] but with the vector
+/// butterflies. Bit-identical to the scalar batch engine.
+pub fn fwht_batch(data: &mut [f32], rows: usize, n: usize) {
+    assert!(n.is_power_of_two(), "row length must be a power of two");
+    assert_eq!(data.len(), rows * n, "buffer shape mismatch");
+    if n <= 1 {
+        return;
+    }
+    let lanes_max = batch::tile_lanes(n);
+    let mut tile = vec![0.0f32; n * lanes_max];
+    let mut base = 0;
+    while base < rows {
+        let lanes = lanes_max.min(rows - base);
+        let rows_slice = &mut data[base * n..(base + lanes) * n];
+        let tile = &mut tile[..n * lanes];
+        batch::load_tile(rows_slice, n, lanes, tile);
+        fwht_colmajor(tile, n, lanes);
+        batch::store_tile(tile, n, lanes, rows_slice);
+        base += lanes;
+    }
+}
+
+/// Shared stage schedule: parity radix-2 pass, then fused radix-4
+/// sweeps — identical to [`batch::fwht_colmajor`]'s loop. Generic over
+/// the pass kernels so each arch module monomorphizes it inside its
+/// `#[target_feature]` region.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+macro_rules! stage_schedule {
+    ($tile:expr, $n:expr, $lanes:expr, $r2:path, $r4:path) => {{
+        let stages = $n.trailing_zeros();
+        let mut h = $lanes;
+        if stages % 2 == 1 {
+            $r2($tile, h);
+            h *= 2;
+        }
+        while h < $n * $lanes {
+            $r4($tile, h);
+            h *= 4;
+        }
+    }};
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// Caller must guarantee the CPU supports AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn fwht_colmajor(tile: &mut [f32], n: usize, lanes: usize) {
+        stage_schedule!(tile, n, lanes, radix2_pass, radix4_pass);
+    }
+
+    /// # Safety
+    /// Caller must guarantee the CPU supports AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn radix2_pass(data: &mut [f32], h: usize) {
+        for pair in data.chunks_exact_mut(2 * h) {
+            let (a, b) = pair.split_at_mut(h);
+            let (ap, bp) = (a.as_mut_ptr(), b.as_mut_ptr());
+            let mut i = 0;
+            while i + 8 <= h {
+                // SAFETY: i + 8 <= h bounds both 8-float loads/stores.
+                let x = _mm256_loadu_ps(ap.add(i));
+                let y = _mm256_loadu_ps(bp.add(i));
+                _mm256_storeu_ps(ap.add(i), _mm256_add_ps(x, y));
+                _mm256_storeu_ps(bp.add(i), _mm256_sub_ps(x, y));
+                i += 8;
+            }
+            while i < h {
+                let (x, y) = (a[i], b[i]);
+                a[i] = x + y;
+                b[i] = x - y;
+                i += 1;
+            }
+        }
+    }
+
+    /// # Safety
+    /// Caller must guarantee the CPU supports AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn radix4_pass(data: &mut [f32], h: usize) {
+        for quad in data.chunks_exact_mut(4 * h) {
+            let (ab, cd) = quad.split_at_mut(2 * h);
+            let (a, b) = ab.split_at_mut(h);
+            let (c, d) = cd.split_at_mut(h);
+            let (ap, bp, cp, dp) =
+                (a.as_mut_ptr(), b.as_mut_ptr(), c.as_mut_ptr(), d.as_mut_ptr());
+            let mut i = 0;
+            while i + 8 <= h {
+                // SAFETY: i + 8 <= h bounds all four 8-float streams.
+                let va = _mm256_loadu_ps(ap.add(i));
+                let vb = _mm256_loadu_ps(bp.add(i));
+                let vc = _mm256_loadu_ps(cp.add(i));
+                let vd = _mm256_loadu_ps(dp.add(i));
+                let t0 = _mm256_add_ps(va, vb);
+                let t1 = _mm256_sub_ps(va, vb);
+                let t2 = _mm256_add_ps(vc, vd);
+                let t3 = _mm256_sub_ps(vc, vd);
+                _mm256_storeu_ps(ap.add(i), _mm256_add_ps(t0, t2));
+                _mm256_storeu_ps(bp.add(i), _mm256_add_ps(t1, t3));
+                _mm256_storeu_ps(cp.add(i), _mm256_sub_ps(t0, t2));
+                _mm256_storeu_ps(dp.add(i), _mm256_sub_ps(t1, t3));
+                i += 8;
+            }
+            while i < h {
+                let t0 = a[i] + b[i];
+                let t1 = a[i] - b[i];
+                let t2 = c[i] + d[i];
+                let t3 = c[i] - d[i];
+                a[i] = t0 + t2;
+                b[i] = t1 + t3;
+                c[i] = t0 - t2;
+                d[i] = t1 - t3;
+                i += 1;
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    /// # Safety
+    /// Caller must guarantee the CPU supports NEON.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn fwht_colmajor(tile: &mut [f32], n: usize, lanes: usize) {
+        stage_schedule!(tile, n, lanes, radix2_pass, radix4_pass);
+    }
+
+    /// # Safety
+    /// Caller must guarantee the CPU supports NEON.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn radix2_pass(data: &mut [f32], h: usize) {
+        for pair in data.chunks_exact_mut(2 * h) {
+            let (a, b) = pair.split_at_mut(h);
+            let (ap, bp) = (a.as_mut_ptr(), b.as_mut_ptr());
+            let mut i = 0;
+            while i + 4 <= h {
+                // SAFETY: i + 4 <= h bounds both 4-float loads/stores.
+                let x = vld1q_f32(ap.add(i));
+                let y = vld1q_f32(bp.add(i));
+                vst1q_f32(ap.add(i), vaddq_f32(x, y));
+                vst1q_f32(bp.add(i), vsubq_f32(x, y));
+                i += 4;
+            }
+            while i < h {
+                let (x, y) = (a[i], b[i]);
+                a[i] = x + y;
+                b[i] = x - y;
+                i += 1;
+            }
+        }
+    }
+
+    /// # Safety
+    /// Caller must guarantee the CPU supports NEON.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn radix4_pass(data: &mut [f32], h: usize) {
+        for quad in data.chunks_exact_mut(4 * h) {
+            let (ab, cd) = quad.split_at_mut(2 * h);
+            let (a, b) = ab.split_at_mut(h);
+            let (c, d) = cd.split_at_mut(h);
+            let (ap, bp, cp, dp) =
+                (a.as_mut_ptr(), b.as_mut_ptr(), c.as_mut_ptr(), d.as_mut_ptr());
+            let mut i = 0;
+            while i + 4 <= h {
+                // SAFETY: i + 4 <= h bounds all four 4-float streams.
+                let va = vld1q_f32(ap.add(i));
+                let vb = vld1q_f32(bp.add(i));
+                let vc = vld1q_f32(cp.add(i));
+                let vd = vld1q_f32(dp.add(i));
+                let t0 = vaddq_f32(va, vb);
+                let t1 = vsubq_f32(va, vb);
+                let t2 = vaddq_f32(vc, vd);
+                let t3 = vsubq_f32(vc, vd);
+                vst1q_f32(ap.add(i), vaddq_f32(t0, t2));
+                vst1q_f32(bp.add(i), vaddq_f32(t1, t3));
+                vst1q_f32(cp.add(i), vsubq_f32(t0, t2));
+                vst1q_f32(dp.add(i), vsubq_f32(t1, t3));
+                i += 4;
+            }
+            while i < h {
+                let t0 = a[i] + b[i];
+                let t1 = a[i] - b[i];
+                let t2 = c[i] + d[i];
+                let t3 = c[i] - d[i];
+                a[i] = t0 + t2;
+                b[i] = t1 + t3;
+                c[i] = t0 - t2;
+                d[i] = t1 - t3;
+                i += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fwht;
+    use crate::hash::HashRng;
+
+    fn random_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = HashRng::new(seed, 0x51);
+        (0..n).map(|_| r.next_f32() * 2.0 - 1.0).collect()
+    }
+
+    /// THE bit-identity pin: butterflies are adds/subs, so the SIMD
+    /// engines must equal the scalar engines exactly — including odd
+    /// stream tails shorter than a vector register (h % width != 0).
+    #[test]
+    fn passes_match_scalar_exactly() {
+        for h in [1usize, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 32, 100] {
+            let x2 = random_vec(2 * h * 3, h as u64);
+            let mut a = x2.clone();
+            let mut b = x2;
+            radix2_pass(&mut a, h);
+            radix2_scalar(&mut b, h);
+            assert_eq!(a, b, "radix2 h={h}");
+
+            let x4 = random_vec(4 * h * 2, 100 + h as u64);
+            let mut a = x4.clone();
+            let mut b = x4;
+            radix4_pass(&mut a, h);
+            radix4_scalar(&mut b, h);
+            assert_eq!(a, b, "radix4 h={h}");
+        }
+    }
+
+    #[test]
+    fn colmajor_matches_scalar_tile_engine_exactly() {
+        for (n, lanes) in [(1usize, 3usize), (2, 5), (16, 1), (16, 7), (64, 3), (1024, 32)] {
+            let x = random_vec(n * lanes, (n * 100 + lanes) as u64);
+            let mut a = x.clone();
+            let mut b = x;
+            fwht_colmajor(&mut a, n, lanes);
+            batch::fwht_colmajor(&mut b, n, lanes);
+            assert_eq!(a, b, "n={n} lanes={lanes}");
+        }
+    }
+
+    #[test]
+    fn single_row_matches_optimized_exactly() {
+        for n in [1usize, 2, 8, 64, 512, 4096] {
+            let x = random_vec(n, n as u64 + 7);
+            let mut a = x.clone();
+            let mut b = x;
+            fwht(&mut a);
+            fwht::fwht(&mut b);
+            assert_eq!(a, b, "n={n}");
+        }
+    }
+
+    #[test]
+    fn batch_matches_scalar_batch_exactly() {
+        for (rows, n) in [(1usize, 64usize), (3, 256), (33, 1024), (7, 16)] {
+            let x = random_vec(rows * n, (rows + n) as u64);
+            let mut a = x.clone();
+            let mut b = x;
+            fwht_batch(&mut a, rows, n);
+            batch::fwht_batch(&mut b, rows, n);
+            assert_eq!(a, b, "rows={rows} n={n}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_pow2_rejected() {
+        let mut x = vec![0.0f32; 12];
+        fwht(&mut x);
+    }
+}

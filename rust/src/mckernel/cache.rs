@@ -78,9 +78,12 @@ impl CacheKey {
             Kernel::Rbf => (0u64, 0u64),
             Kernel::RbfMatern { t } => (1u64, t as u64),
         };
+        // Simd gets its own word: its trig rounding differs from the
+        // scalar arms, so cached rows must never cross arms.
         let dispatch = match plan.dispatch() {
             FwhtDispatch::Batched => 0u64,
             FwhtDispatch::PerRow => 1u64,
+            FwhtDispatch::Simd => 2u64,
         };
         let words = [
             config.input_dim as u64,
@@ -569,6 +572,15 @@ mod tests {
         // normalization reaches the output bits, so it splits the id
         let pn = ExpansionPlan::new(a.config(), 4).normalized();
         assert_ne!(CacheKey::new(a.config(), &pa), CacheKey::new(a.config(), &pn));
+        // so does the dispatch arm: SIMD trig rounds differently from
+        // scalar, so the three arms get three disjoint ids
+        use crate::mckernel::plan::DispatchForce;
+        let ps = ExpansionPlan::new_forced(a.config(), 4, DispatchForce::Scalar);
+        let pv = ExpansionPlan::new_forced(a.config(), 4, DispatchForce::Simd);
+        let pr = ExpansionPlan::per_row(a.config());
+        assert_ne!(CacheKey::new(a.config(), &ps), CacheKey::new(a.config(), &pv));
+        assert_ne!(CacheKey::new(a.config(), &pv), CacheKey::new(a.config(), &pr));
+        assert_ne!(CacheKey::new(a.config(), &ps), CacheKey::new(a.config(), &pr));
     }
 
     #[test]

@@ -182,7 +182,11 @@ impl ExpansionEngine {
         let t_exec = stamp(timed);
         let stages = match self.plan.dispatch() {
             FwhtDispatch::PerRow => self.run_per_row(map, xs, rows, src_cols, out, timed),
-            FwhtDispatch::Batched => self.run_batched(map, xs, rows, src_cols, out, timed),
+            // One tiled pipeline, two kernel sets: run_tiled reads the
+            // scalar-vs-SIMD choice back off the plan.
+            FwhtDispatch::Batched | FwhtDispatch::Simd => {
+                self.run_tiled(map, xs, rows, src_cols, out, timed)
+            }
         };
         debug_assert!(
             std::ptr::eq(scratch_ptr, self.scratch.as_ptr()),
@@ -253,13 +257,18 @@ impl ExpansionEngine {
         st
     }
 
-    /// The batched pipeline: row-tiles of `plan.lanes()` rows stream
-    /// through the fused Fastfood passes (B on the transpose-in load,
-    /// Π∘G as contiguous stream copies), the calibration diagonal, the
-    /// polynomial trig map, and a transpose-out write with the post-
-    /// scale fused in — no separate normalization pass. Lanes never
-    /// interact, so results are independent of the tile grouping.
-    fn run_batched(
+    /// The tiled pipeline (`Batched` and `Simd` arms): row-tiles of
+    /// `plan.lanes()` rows stream through the fused Fastfood passes
+    /// (B on the transpose-in load, Π∘G as contiguous stream copies),
+    /// the calibration diagonal, the polynomial trig map, and a
+    /// transpose-out write with the post-scale fused in — no separate
+    /// normalization pass. Lanes never interact, so results are
+    /// independent of the tile grouping.
+    ///
+    /// The `Simd` arm is the same pipeline with the FWHT butterflies
+    /// and the trig map swapped for their `std::arch` twins; the FWHT
+    /// swap is bit-identical (adds/subs), the trig swap agrees ≤1e-6.
+    fn run_tiled(
         &mut self,
         map: &McKernel,
         xs: &[f32],
@@ -268,6 +277,7 @@ impl ExpansionEngine {
         out: &mut [f32],
         timed: bool,
     ) -> StageTimes {
+        let simd = self.plan.dispatch() == FwhtDispatch::Simd;
         let mut st = StageTimes::default();
         let n = self.plan.padded_dim();
         let fd = self.plan.feature_dim();
@@ -282,7 +292,7 @@ impl ExpansionEngine {
             let xslice = &xs[base * src_cols..(base + lanes) * src_cols];
             for (e, block) in map.blocks().iter().enumerate() {
                 let t = stamp(timed);
-                block.apply_tile(xslice, src_cols, lanes, tin, z);
+                block.apply_tile_with(xslice, src_cols, lanes, tin, z, simd);
                 // calibration diagonal: contiguous per-coefficient runs
                 let scale = block.scale();
                 for j in 0..n {
@@ -295,7 +305,11 @@ impl ExpansionEngine {
                 // polynomial trig over the whole tile; tin is free by
                 // now and becomes the cosine buffer
                 let t = stamp(timed);
-                fastmath::sin_cos_batch(&z[..nl], &mut sin[..nl], &mut tin[..nl]);
+                if simd {
+                    fastmath::sin_cos_batch_simd(&z[..nl], &mut sin[..nl], &mut tin[..nl]);
+                } else {
+                    fastmath::sin_cos_batch(&z[..nl], &mut sin[..nl], &mut tin[..nl]);
+                }
                 lap(t, &mut st.trig);
                 // transpose-out into the (cos, sin) halves, any output
                 // normalization fused into this single write

@@ -95,6 +95,25 @@ impl FastfoodBlock {
         tin: &mut [f32],
         tout: &mut [f32],
     ) {
+        self.apply_tile_with(xs, src_cols, lanes, tin, tout, false);
+    }
+
+    /// [`FastfoodBlock::apply_tile`] with the FWHT kernel selectable:
+    /// `simd == true` routes both Hadamard passes through the explicit
+    /// `fwht::simd` butterflies (the plan's `FwhtDispatch::Simd` arm),
+    /// `false` keeps the scalar tile engine. The two are bit-identical
+    /// — butterflies are pure adds/subs — so this flag can never change
+    /// results, only throughput; the diagonal/gather fusions are shared
+    /// either way.
+    pub fn apply_tile_with(
+        &self,
+        xs: &[f32],
+        src_cols: usize,
+        lanes: usize,
+        tin: &mut [f32],
+        tout: &mut [f32],
+        simd: bool,
+    ) {
         let n = self.n;
         assert!(src_cols <= n, "row width {src_cols} exceeds padded dim {n}");
         assert_eq!(xs.len(), lanes * src_cols, "tile input length");
@@ -114,7 +133,11 @@ impl FastfoodBlock {
         }
         tin[src_cols * lanes..].fill(0.0);
         // v = H v, all lanes in lockstep
-        fwht_colmajor(tin, n, lanes);
+        if simd {
+            fwht::simd::fwht_colmajor(tin, n, lanes);
+        } else {
+            fwht_colmajor(tin, n, lanes);
+        }
         // v = G Π v in one sweep
         for j in 0..n {
             let src = &tin[self.perm[j] as usize * lanes..][..lanes];
@@ -125,7 +148,11 @@ impl FastfoodBlock {
             }
         }
         // v = H v
-        fwht_colmajor(tout, n, lanes);
+        if simd {
+            fwht::simd::fwht_colmajor(tout, n, lanes);
+        } else {
+            fwht_colmajor(tout, n, lanes);
+        }
     }
 
     /// Accessors for cross-layer tests (Python L1/L2 must derive
@@ -271,6 +298,23 @@ mod tests {
             for j in 0..n {
                 assert_eq!(tout[j * lanes + l] * fb.scale()[j], out[j], "lane {l} coeff {j}");
             }
+        }
+    }
+
+    #[test]
+    fn apply_tile_with_simd_is_bit_identical() {
+        let n = 64;
+        let fb = block(6, n);
+        for (src_cols, lanes) in [(n, 5usize), (10, 3), (n, 1)] {
+            let mut rng = HashRng::new(13, 9);
+            let xs: Vec<f32> = (0..lanes * src_cols).map(|_| rng.next_f32() - 0.5).collect();
+            let mut tin_a = vec![0.0; n * lanes];
+            let mut tout_a = vec![0.0; n * lanes];
+            fb.apply_tile_with(&xs, src_cols, lanes, &mut tin_a, &mut tout_a, false);
+            let mut tin_b = vec![0.0; n * lanes];
+            let mut tout_b = vec![0.0; n * lanes];
+            fb.apply_tile_with(&xs, src_cols, lanes, &mut tin_b, &mut tout_b, true);
+            assert_eq!(tout_a, tout_b, "src_cols={src_cols} lanes={lanes}");
         }
     }
 

@@ -33,4 +33,4 @@ pub use expansion::FastfoodBlock;
 pub use factory::{McKernelConfig, McKernelFactory};
 pub use feature_map::McKernel;
 pub use kernel::Kernel;
-pub use plan::{ExpansionPlan, FwhtDispatch};
+pub use plan::{dispatch_force, set_dispatch_force, DispatchForce, ExpansionPlan, FwhtDispatch};

@@ -8,23 +8,25 @@
 //! shard trainer, the KRR solver, the prefetch pipeline and the
 //! feature server. An [`ExpansionPlan`] pins them all down up front;
 //! `mckernel::engine::ExpansionEngine` is the single executor that
-//! carries a plan plus its exactly-sized scratch pool. Future
-//! backends (SIMD intrinsics, GPU, quantized features) add a
-//! [`FwhtDispatch`] variant here and an executor arm there — no
-//! consumer changes.
+//! carries a plan plus its exactly-sized scratch pool. The SIMD
+//! backend (PR 9) is exactly that shape: [`FwhtDispatch::Simd`] here,
+//! one executor arm there, no consumer changes. Future backends (GPU,
+//! quantized features) follow the same seam.
+
+use std::sync::atomic::{AtomicU8, Ordering};
 
 use super::factory::McKernelConfig;
 use super::feature_map::McKernel;
 use crate::fwht::tile_lanes;
 use crate::util::pow2::next_pow2;
 
-/// Which execution path the plan compiled to — **the** batch-vs-row
-/// fallback decision point. Nothing outside `mckernel::{plan, engine}`
-/// may choose an FWHT engine for the expansion pipeline.
+/// Which execution path the plan compiled to — **the** dispatch
+/// decision point. Nothing outside `mckernel::{plan, engine}` may
+/// choose an FWHT engine for the expansion pipeline.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FwhtDispatch {
     /// Column-major row-tiles through `fwht::batch` with the
-    /// polynomial trig map — the mini-batch hot path.
+    /// polynomial trig map — the scalar mini-batch hot path.
     Batched,
     /// Per-row cache-blocked `fwht::optimized` with libm trig — the
     /// correctness oracle, and the fallback when the transform is too
@@ -32,6 +34,97 @@ pub enum FwhtDispatch {
     /// only add copies around the per-row engine's own cache
     /// blocking).
     PerRow,
+    /// The tiled path driven through explicit AVX2/NEON intrinsics
+    /// (`fwht::simd` butterflies + `fastmath::sin_cos_batch_simd`).
+    /// Auto-selected when the CPU supports a vector extension; the
+    /// kernels themselves carry scalar fallbacks, so a *forced* Simd
+    /// plan still executes correctly on machines without one.
+    Simd,
+}
+
+/// The forced-dispatch knob: overrides the plan's tiled-path choice
+/// for tests, the CLI (`--dispatch`), and CI matrix legs. `Auto` is
+/// runtime feature detection; `Scalar`/`Simd` pin the arm. The
+/// too-large-to-tile `PerRow` fallback and the explicit
+/// [`ExpansionPlan::per_row`] oracle are **not** affected — forcing
+/// selects between tiled arms, it never turns the oracle into
+/// something else.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchForce {
+    /// Pick `Simd` when the CPU supports it, else `Batched`.
+    Auto,
+    /// Always the scalar `Batched` arm.
+    Scalar,
+    /// Always the `Simd` arm (its kernels fall back internally on
+    /// non-vector CPUs, so the arm's selection logic is exercised
+    /// everywhere).
+    Simd,
+}
+
+impl DispatchForce {
+    /// Parse a knob value (CLI `--dispatch`, `MCKERNEL_DISPATCH` env).
+    pub fn parse(s: &str) -> Option<DispatchForce> {
+        match s {
+            "auto" => Some(DispatchForce::Auto),
+            "scalar" | "batched" => Some(DispatchForce::Scalar),
+            "simd" => Some(DispatchForce::Simd),
+            _ => None,
+        }
+    }
+
+    /// Stable name (CLI help, bench labels).
+    pub fn name(self) -> &'static str {
+        match self {
+            DispatchForce::Auto => "auto",
+            DispatchForce::Scalar => "scalar",
+            DispatchForce::Simd => "simd",
+        }
+    }
+}
+
+const FORCE_UNSET: u8 = u8::MAX;
+static FORCE: AtomicU8 = AtomicU8::new(FORCE_UNSET);
+
+fn encode_force(f: DispatchForce) -> u8 {
+    match f {
+        DispatchForce::Auto => 0,
+        DispatchForce::Scalar => 1,
+        DispatchForce::Simd => 2,
+    }
+}
+
+fn decode_force(v: u8) -> DispatchForce {
+    match v {
+        1 => DispatchForce::Scalar,
+        2 => DispatchForce::Simd,
+        _ => DispatchForce::Auto,
+    }
+}
+
+/// The process-wide dispatch force consulted by [`ExpansionPlan::new`].
+/// Seeded lazily from the `MCKERNEL_DISPATCH` environment variable
+/// (`auto` | `scalar` | `simd`; unset or unparseable → `Auto`) so CI
+/// matrix legs can pin the arm without plumbing a flag through every
+/// consumer; overridable at runtime via [`set_dispatch_force`].
+pub fn dispatch_force() -> DispatchForce {
+    let v = FORCE.load(Ordering::Relaxed);
+    if v != FORCE_UNSET {
+        return decode_force(v);
+    }
+    let f = std::env::var("MCKERNEL_DISPATCH")
+        .ok()
+        .and_then(|s| DispatchForce::parse(&s))
+        .unwrap_or(DispatchForce::Auto);
+    // Benign race: every contender reads the same environment.
+    FORCE.store(encode_force(f), Ordering::Relaxed);
+    f
+}
+
+/// Set the process-wide dispatch force (CLI `--dispatch`, tests).
+/// Affects plans compiled *after* the call; existing plans keep the
+/// arm they compiled to.
+pub fn set_dispatch_force(f: DispatchForce) {
+    FORCE.store(encode_force(f), Ordering::Relaxed);
 }
 
 /// A compiled execution plan for one feature-map geometry.
@@ -59,16 +152,43 @@ impl ExpansionPlan {
     /// correctly — the batched pipeline is invariant to how rows are
     /// grouped into tiles).
     ///
-    /// This constructor is the codebase's **only** batch-vs-per-row
-    /// dispatch decision.
+    /// This constructor (via [`ExpansionPlan::new_forced`]) is the
+    /// codebase's **only** dispatch decision; it honors the
+    /// process-wide [`dispatch_force`] knob.
     pub fn new(config: &McKernelConfig, rows_hint: usize) -> ExpansionPlan {
+        ExpansionPlan::new_forced(config, rows_hint, dispatch_force())
+    }
+
+    /// [`ExpansionPlan::new`] with an explicit force, bypassing the
+    /// process-wide knob — what the differential tests use to pin both
+    /// tiled arms side by side without global state.
+    ///
+    /// The too-large-to-tile geometry (`tile_lanes(n) == 1`) compiles
+    /// to `PerRow` under every force: there is no tiled arm to choose
+    /// between when tiling itself is off the table.
+    pub fn new_forced(
+        config: &McKernelConfig,
+        rows_hint: usize,
+        force: DispatchForce,
+    ) -> ExpansionPlan {
         config.validate();
         let n = next_pow2(config.input_dim);
         let full = tile_lanes(n);
         let (dispatch, lanes) = if full <= 1 {
             (FwhtDispatch::PerRow, 1)
         } else {
-            (FwhtDispatch::Batched, full.min(rows_hint.max(1)))
+            let arm = match force {
+                DispatchForce::Scalar => FwhtDispatch::Batched,
+                DispatchForce::Simd => FwhtDispatch::Simd,
+                DispatchForce::Auto => {
+                    if crate::util::simd::available() {
+                        FwhtDispatch::Simd
+                    } else {
+                        FwhtDispatch::Batched
+                    }
+                }
+            };
+            (arm, full.min(rows_hint.max(1)))
         };
         ExpansionPlan {
             input_dim: config.input_dim,
@@ -133,6 +253,12 @@ impl ExpansionPlan {
         self.dispatch
     }
 
+    /// Whether the plan compiled to a tiled arm (`Batched` or `Simd`)
+    /// rather than the per-row fallback/oracle.
+    pub fn is_tiled(&self) -> bool {
+        self.dispatch != FwhtDispatch::PerRow
+    }
+
     /// Whether the `1/√(n·E)` normalization is folded into the write.
     pub fn is_normalized(&self) -> bool {
         self.normalized
@@ -149,13 +275,14 @@ impl ExpansionPlan {
     }
 
     /// Exact scratch requirement of the executor, in f32 elements:
-    /// three `(n, lanes)` tiles for the batched path (transpose-in /
-    /// Ẑx / sine; the first doubles as the cosine buffer), or the
-    /// `(padded, tmp)` pair for the per-row path. The engine allocates
-    /// exactly this once and never reallocates during `execute`.
+    /// three `(n, lanes)` tiles for the tiled paths (transpose-in /
+    /// Ẑx / sine; the first doubles as the cosine buffer — Simd shares
+    /// the layout, it only changes the kernels), or the `(padded, tmp)`
+    /// pair for the per-row path. The engine allocates exactly this
+    /// once and never reallocates during `execute`.
     pub fn scratch_floats(&self) -> usize {
         match self.dispatch {
-            FwhtDispatch::Batched => 3 * self.padded_dim * self.lanes,
+            FwhtDispatch::Batched | FwhtDispatch::Simd => 3 * self.padded_dim * self.lanes,
             FwhtDispatch::PerRow => 2 * self.padded_dim,
         }
     }
@@ -164,12 +291,15 @@ impl ExpansionPlan {
     /// key the engine's observability metrics are grouped under
     /// (`engine.<fingerprint>.*`), e.g. `s784_n1024_e2_b32` for a
     /// batched 784→1024 two-expansion plan tiling 32 lanes, with a
-    /// `_norm` suffix when normalization is folded in. Equal plans
+    /// `_norm` suffix when normalization is folded in. The dispatch
+    /// tag (`b` / `r` / `s`) keeps metrics and cache keys from
+    /// colliding across arms whose rounding differs. Equal plans
     /// fingerprint equally on any machine.
     pub fn fingerprint(&self) -> String {
         let d = match self.dispatch {
             FwhtDispatch::Batched => "b",
             FwhtDispatch::PerRow => "r",
+            FwhtDispatch::Simd => "s",
         };
         let norm = if self.normalized { "_norm" } else { "" };
         format!(
@@ -203,34 +333,72 @@ mod tests {
     }
 
     #[test]
-    fn small_geometry_compiles_to_batched() {
+    fn small_geometry_compiles_to_a_tiled_arm() {
+        // `new` honors the process-wide force (CI pins it via
+        // MCKERNEL_DISPATCH), so assert the force-invariant facts here
+        // and pin exact arms with `new_forced` below.
         let p = ExpansionPlan::new(&config(784), 64);
         assert_eq!(p.padded_dim(), 1024);
         assert_eq!(p.feature_dim(), 2 * 1024 * 2);
-        assert_eq!(p.dispatch(), FwhtDispatch::Batched);
+        assert!(p.is_tiled());
         assert_eq!(p.lanes(), tile_lanes(1024));
         assert_eq!(p.scratch_floats(), 3 * 1024 * p.lanes());
         assert_eq!(p.post_scale(), 1.0);
     }
 
     #[test]
-    fn rows_hint_caps_lanes_but_not_dispatch() {
-        let p = ExpansionPlan::new(&config(784), 4);
-        assert_eq!(p.dispatch(), FwhtDispatch::Batched);
-        assert_eq!(p.lanes(), 4);
-        // hint 0 degrades to 1 lane, still batched
-        let p0 = ExpansionPlan::new(&config(784), 0);
-        assert_eq!(p0.lanes(), 1);
-        assert_eq!(p0.dispatch(), FwhtDispatch::Batched);
+    fn forced_dispatch_pins_the_tiled_arm() {
+        let s = ExpansionPlan::new_forced(&config(784), 64, DispatchForce::Scalar);
+        assert_eq!(s.dispatch(), FwhtDispatch::Batched);
+        let v = ExpansionPlan::new_forced(&config(784), 64, DispatchForce::Simd);
+        assert_eq!(v.dispatch(), FwhtDispatch::Simd);
+        // Simd shares the tiled layout: same lanes, same scratch.
+        assert_eq!(v.lanes(), s.lanes());
+        assert_eq!(v.scratch_floats(), s.scratch_floats());
+        // Auto = feature detection.
+        let a = ExpansionPlan::new_forced(&config(784), 64, DispatchForce::Auto);
+        let want = if crate::util::simd::available() {
+            FwhtDispatch::Simd
+        } else {
+            FwhtDispatch::Batched
+        };
+        assert_eq!(a.dispatch(), want);
     }
 
     #[test]
-    fn huge_transform_compiles_to_per_row() {
+    fn rows_hint_caps_lanes_but_not_dispatch() {
+        for force in [DispatchForce::Scalar, DispatchForce::Simd] {
+            let p = ExpansionPlan::new_forced(&config(784), 4, force);
+            assert!(p.is_tiled());
+            assert_eq!(p.lanes(), 4);
+            // hint 0 degrades to 1 lane, still tiled
+            let p0 = ExpansionPlan::new_forced(&config(784), 0, force);
+            assert_eq!(p0.lanes(), 1);
+            assert!(p0.is_tiled());
+        }
+    }
+
+    #[test]
+    fn huge_transform_compiles_to_per_row_under_every_force() {
         // next_pow2(40_000) = 65536 ⇒ tile_lanes == 1 ⇒ per-row path
-        let p = ExpansionPlan::new(&config(40_000), 64);
-        assert_eq!(p.dispatch(), FwhtDispatch::PerRow);
-        assert_eq!(p.lanes(), 1);
-        assert_eq!(p.scratch_floats(), 2 * 65536);
+        for force in [DispatchForce::Auto, DispatchForce::Scalar, DispatchForce::Simd] {
+            let p = ExpansionPlan::new_forced(&config(40_000), 64, force);
+            assert_eq!(p.dispatch(), FwhtDispatch::PerRow);
+            assert!(!p.is_tiled());
+            assert_eq!(p.lanes(), 1);
+            assert_eq!(p.scratch_floats(), 2 * 65536);
+        }
+    }
+
+    #[test]
+    fn force_parse_roundtrip() {
+        for f in [DispatchForce::Auto, DispatchForce::Scalar, DispatchForce::Simd] {
+            assert_eq!(DispatchForce::parse(f.name()), Some(f));
+        }
+        // "batched" is an accepted alias for the scalar tiled arm.
+        assert_eq!(DispatchForce::parse("batched"), Some(DispatchForce::Scalar));
+        assert_eq!(DispatchForce::parse("avx2"), None);
+        assert_eq!(DispatchForce::parse(""), None);
     }
 
     #[test]
@@ -247,11 +415,18 @@ mod tests {
 
     #[test]
     fn fingerprint_encodes_shape_and_dispatch() {
-        let p = ExpansionPlan::new(&config(784), 4);
+        let p = ExpansionPlan::new_forced(&config(784), 4, DispatchForce::Scalar);
         assert_eq!(p.fingerprint(), "s784_n1024_e2_b4");
+        let v = ExpansionPlan::new_forced(&config(784), 4, DispatchForce::Simd);
+        assert_eq!(v.fingerprint(), "s784_n1024_e2_s4");
         let r = ExpansionPlan::per_row(&config(784));
         assert_eq!(r.fingerprint(), "s784_n1024_e2_r1");
         assert_eq!(r.normalized().fingerprint(), "s784_n1024_e2_r1_norm");
+        // All three arms of one geometry are pairwise distinct — the
+        // metrics/cache-key separation the dispatch tag exists for.
+        assert_ne!(p.fingerprint(), v.fingerprint());
+        assert_ne!(p.fingerprint(), r.fingerprint());
+        assert_ne!(v.fingerprint(), r.fingerprint());
         // equal plans fingerprint equally; distinct shapes don't collide
         assert_eq!(
             ExpansionPlan::new(&config(784), 4).fingerprint(),
@@ -269,5 +444,7 @@ mod tests {
         let b = ExpansionPlan::new(&config(300), 10);
         assert_eq!(a, b);
         assert_ne!(a, ExpansionPlan::new(&config(300), 11));
+        // `new` is `new_forced` under the process-wide knob.
+        assert_eq!(a, ExpansionPlan::new_forced(&config(300), 10, dispatch_force()));
     }
 }

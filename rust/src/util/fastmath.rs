@@ -62,6 +62,180 @@ pub fn sin_cos_batch(x: &[f32], sin_out: &mut [f32], cos_out: &mut [f32]) {
     }
 }
 
+/// [`sin_cos_batch`] through explicit vector intrinsics (8-wide AVX2 /
+/// 4-wide NEON), runtime-dispatched with a scalar fallback — the trig
+/// leg of `mckernel::plan::FwhtDispatch::Simd`.
+///
+/// Same Cody–Waite constants, same polynomial coefficients, and the
+/// same multiply/add op order as [`sin_cos`] (no FMA contraction), so
+/// the scalar accuracy contract carries over. The single permitted
+/// divergence: the vector `q = round(x·2/π)` rounds half-**even**
+/// (`_mm256_round_ps` / `vrndnq_f32`) while the scalar `.round()`
+/// rounds half-away-from-zero. They disagree only when `x·2/π` lands
+/// exactly on `k + ½` — the boundary between two reduction intervals,
+/// where either quadrant choice is valid and the results differ by at
+/// most ~2× the polynomial error at `|r| = π/4` (≈2e-7). The
+/// differential tests pin SIMD-vs-scalar agreement at ≤1e-6.
+pub fn sin_cos_batch_simd(x: &[f32], sin_out: &mut [f32], cos_out: &mut [f32]) {
+    assert_eq!(x.len(), sin_out.len(), "sin output length");
+    assert_eq!(x.len(), cos_out.len(), "cos output length");
+    match crate::util::simd::level() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: level() == Avx2 only after is_x86_feature_detected!.
+        crate::util::simd::SimdLevel::Avx2 => unsafe {
+            avx2::sin_cos_batch(x, sin_out, cos_out)
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: level() == Neon only after runtime NEON detection.
+        crate::util::simd::SimdLevel::Neon => unsafe {
+            neon::sin_cos_batch(x, sin_out, cos_out)
+        },
+        _ => sin_cos_batch(x, sin_out, cos_out),
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{C1, C2, C3, FRAC_2_PI, PI2_A, PI2_B, PI2_C, S1, S2, S3};
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// Caller must guarantee the CPU supports AVX2; slices must be
+    /// equal-length (asserted by the public wrapper).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sin_cos_batch(x: &[f32], sin_out: &mut [f32], cos_out: &mut [f32]) {
+        let n = x.len();
+        let mut i = 0;
+        while i + 8 <= n {
+            // SAFETY: i + 8 <= n bounds the 8-float loads/stores.
+            let v = _mm256_loadu_ps(x.as_ptr().add(i));
+            let (s, c) = sin_cos8(v);
+            _mm256_storeu_ps(sin_out.as_mut_ptr().add(i), s);
+            _mm256_storeu_ps(cos_out.as_mut_ptr().add(i), c);
+            i += 8;
+        }
+        while i < n {
+            let (s, c) = super::sin_cos(x[i]);
+            sin_out[i] = s;
+            cos_out[i] = c;
+            i += 1;
+        }
+    }
+
+    /// Eight lanes of [`super::sin_cos`]: identical constants and op
+    /// order, explicit mul/add (no FMA) so lanes match the scalar
+    /// kernel bit-for-bit away from round-to-nearest ties in `q`.
+    ///
+    /// # Safety
+    /// Caller must guarantee the CPU supports AVX2.
+    #[target_feature(enable = "avx2")]
+    unsafe fn sin_cos8(x: __m256) -> (__m256, __m256) {
+        let q = _mm256_round_ps::<{ _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC }>(
+            _mm256_mul_ps(x, _mm256_set1_ps(FRAC_2_PI)),
+        );
+        // r = ((x − q·A) − q·B) − q·C
+        let mut r = _mm256_sub_ps(x, _mm256_mul_ps(q, _mm256_set1_ps(PI2_A)));
+        r = _mm256_sub_ps(r, _mm256_mul_ps(q, _mm256_set1_ps(PI2_B)));
+        r = _mm256_sub_ps(r, _mm256_mul_ps(q, _mm256_set1_ps(PI2_C)));
+        // q is integral, so the int conversion is exact.
+        let qi = _mm256_cvtps_epi32(q);
+        let r2 = _mm256_mul_ps(r, r);
+        // sp = r + r·r2·(S1 + r2·(S2 + r2·S3))
+        let mut sp = _mm256_add_ps(_mm256_set1_ps(S2), _mm256_mul_ps(r2, _mm256_set1_ps(S3)));
+        sp = _mm256_add_ps(_mm256_set1_ps(S1), _mm256_mul_ps(r2, sp));
+        sp = _mm256_add_ps(r, _mm256_mul_ps(_mm256_mul_ps(r, r2), sp));
+        // cp = (1 − 0.5·r2) + r2·r2·(C1 + r2·(C2 + r2·C3))
+        let mut cp = _mm256_add_ps(_mm256_set1_ps(C2), _mm256_mul_ps(r2, _mm256_set1_ps(C3)));
+        cp = _mm256_add_ps(_mm256_set1_ps(C1), _mm256_mul_ps(r2, cp));
+        cp = _mm256_add_ps(
+            _mm256_sub_ps(_mm256_set1_ps(1.0), _mm256_mul_ps(_mm256_set1_ps(0.5), r2)),
+            _mm256_mul_ps(_mm256_mul_ps(r2, r2), cp),
+        );
+        // Quadrant m = qi & 3 (identical to the scalar `(q as i32) & 3`
+        // for negative q too — two's complement). Swap sin/cos on odd
+        // m; sign = bit1 of m (sin) / of m+1 (cos) moved to bit 31.
+        let one = _mm256_set1_epi32(1);
+        let two = _mm256_set1_epi32(2);
+        let swap = _mm256_castsi256_ps(_mm256_cmpeq_epi32(_mm256_and_si256(qi, one), one));
+        let sm = _mm256_blendv_ps(sp, cp, swap);
+        let cm = _mm256_blendv_ps(cp, sp, swap);
+        let ssign = _mm256_slli_epi32::<30>(_mm256_and_si256(qi, two));
+        let csign = _mm256_slli_epi32::<30>(_mm256_and_si256(_mm256_add_epi32(qi, one), two));
+        let s = _mm256_xor_ps(sm, _mm256_castsi256_ps(ssign));
+        let c = _mm256_xor_ps(cm, _mm256_castsi256_ps(csign));
+        (s, c)
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{C1, C2, C3, FRAC_2_PI, PI2_A, PI2_B, PI2_C, S1, S2, S3};
+    use std::arch::aarch64::*;
+
+    /// # Safety
+    /// Caller must guarantee the CPU supports NEON; slices must be
+    /// equal-length (asserted by the public wrapper).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn sin_cos_batch(x: &[f32], sin_out: &mut [f32], cos_out: &mut [f32]) {
+        let n = x.len();
+        let mut i = 0;
+        while i + 4 <= n {
+            // SAFETY: i + 4 <= n bounds the 4-float loads/stores.
+            let v = vld1q_f32(x.as_ptr().add(i));
+            let (s, c) = sin_cos4(v);
+            vst1q_f32(sin_out.as_mut_ptr().add(i), s);
+            vst1q_f32(cos_out.as_mut_ptr().add(i), c);
+            i += 4;
+        }
+        while i < n {
+            let (s, c) = super::sin_cos(x[i]);
+            sin_out[i] = s;
+            cos_out[i] = c;
+            i += 1;
+        }
+    }
+
+    /// Four lanes of [`super::sin_cos`]: identical constants and op
+    /// order, explicit mul/add (no FMA).
+    ///
+    /// # Safety
+    /// Caller must guarantee the CPU supports NEON.
+    #[target_feature(enable = "neon")]
+    unsafe fn sin_cos4(x: float32x4_t) -> (float32x4_t, float32x4_t) {
+        let q = vrndnq_f32(vmulq_f32(x, vdupq_n_f32(FRAC_2_PI)));
+        // r = ((x − q·A) − q·B) − q·C
+        let mut r = vsubq_f32(x, vmulq_f32(q, vdupq_n_f32(PI2_A)));
+        r = vsubq_f32(r, vmulq_f32(q, vdupq_n_f32(PI2_B)));
+        r = vsubq_f32(r, vmulq_f32(q, vdupq_n_f32(PI2_C)));
+        // q is integral, so truncation toward zero is exact.
+        let qi = vcvtq_s32_f32(q);
+        let r2 = vmulq_f32(r, r);
+        // sp = r + r·r2·(S1 + r2·(S2 + r2·S3))
+        let mut sp = vaddq_f32(vdupq_n_f32(S2), vmulq_f32(r2, vdupq_n_f32(S3)));
+        sp = vaddq_f32(vdupq_n_f32(S1), vmulq_f32(r2, sp));
+        sp = vaddq_f32(r, vmulq_f32(vmulq_f32(r, r2), sp));
+        // cp = (1 − 0.5·r2) + r2·r2·(C1 + r2·(C2 + r2·C3))
+        let mut cp = vaddq_f32(vdupq_n_f32(C2), vmulq_f32(r2, vdupq_n_f32(C3)));
+        cp = vaddq_f32(vdupq_n_f32(C1), vmulq_f32(r2, cp));
+        cp = vaddq_f32(
+            vsubq_f32(vdupq_n_f32(1.0), vmulq_f32(vdupq_n_f32(0.5), r2)),
+            vmulq_f32(vmulq_f32(r2, r2), cp),
+        );
+        // Quadrant select/sign, same logic as the scalar kernel.
+        let one = vdupq_n_s32(1);
+        let two = vdupq_n_s32(2);
+        let swap = vceqq_s32(vandq_s32(qi, one), one);
+        let sm = vbslq_f32(swap, cp, sp);
+        let cm = vbslq_f32(swap, sp, cp);
+        let ssign = vreinterpretq_u32_s32(vshlq_n_s32::<30>(vandq_s32(qi, two)));
+        let csign =
+            vreinterpretq_u32_s32(vshlq_n_s32::<30>(vandq_s32(vaddq_s32(qi, one), two)));
+        let s = vreinterpretq_f32_u32(veorq_u32(vreinterpretq_u32_f32(sm), ssign));
+        let c = vreinterpretq_f32_u32(veorq_u32(vreinterpretq_u32_f32(cm), csign));
+        (s, c)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -150,5 +324,63 @@ mod tests {
         let mut s = vec![0.0f32; 3];
         let mut c = vec![0.0f32; 4];
         sin_cos_batch(&[0.0; 4], &mut s, &mut c);
+    }
+
+    /// The PR 9 accuracy contract: SIMD trig agrees with the scalar
+    /// kernel to ≤1e-6 everywhere (bit-identical away from the
+    /// measure-zero round-to-nearest ties in `q` — see the
+    /// `sin_cos_batch_simd` docs). Odd lengths exercise the scalar
+    /// remainder loop; length 0/1/lane-width are the edge shapes.
+    #[test]
+    fn simd_batch_matches_scalar_within_1e6() {
+        let mut r = HashRng::new(6, 0xFD);
+        for len in [0usize, 1, 3, 4, 7, 8, 9, 31, 257, 1000] {
+            let xs: Vec<f32> = (0..len).map(|_| (r.next_f32() - 0.5) * 1000.0).collect();
+            let mut ss = vec![0.0f32; len];
+            let mut cs = vec![0.0f32; len];
+            sin_cos_batch(&xs, &mut ss, &mut cs);
+            let mut sv = vec![0.0f32; len];
+            let mut cv = vec![0.0f32; len];
+            sin_cos_batch_simd(&xs, &mut sv, &mut cv);
+            for i in 0..len {
+                assert!(
+                    (ss[i] - sv[i]).abs() <= 1e-6,
+                    "sin({}) scalar={} simd={}",
+                    xs[i],
+                    ss[i],
+                    sv[i]
+                );
+                assert!(
+                    (cs[i] - cv[i]).abs() <= 1e-6,
+                    "cos({}) scalar={} simd={}",
+                    xs[i],
+                    cs[i],
+                    cv[i]
+                );
+            }
+        }
+    }
+
+    /// And against libm directly, same budget as the scalar kernel.
+    #[test]
+    fn simd_batch_matches_libm() {
+        let mut r = HashRng::new(7, 0xFE);
+        let xs: Vec<f32> = (0..20_000).map(|_| (r.next_f32() - 0.5) * 40.0).collect();
+        let mut s = vec![0.0f32; xs.len()];
+        let mut c = vec![0.0f32; xs.len()];
+        sin_cos_batch_simd(&xs, &mut s, &mut c);
+        for (i, &x) in xs.iter().enumerate() {
+            let xd = x as f64;
+            assert!((s[i] as f64 - xd.sin()).abs() < 1e-5, "sin({x})");
+            assert!((c[i] as f64 - xd.cos()).abs() < 1e-5, "cos({x})");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn simd_mismatched_lengths_rejected() {
+        let mut s = vec![0.0f32; 4];
+        let mut c = vec![0.0f32; 3];
+        sin_cos_batch_simd(&[0.0; 4], &mut s, &mut c);
     }
 }

@@ -1,10 +1,12 @@
 //! Small shared utilities: power-of-two helpers, fast vectorizable
-//! transcendentals, a minimal JSON parser/writer (for the artifact
-//! manifest — no serde offline), and a thread pool (no tokio offline).
+//! transcendentals, runtime SIMD capability detection, a minimal JSON
+//! parser/writer (for the artifact manifest — no serde offline), and a
+//! thread pool (no tokio offline).
 
 pub mod fastmath;
 pub mod json;
 pub mod pow2;
+pub mod simd;
 pub mod threadpool;
 
 pub use pow2::{is_pow2, log2_exact, next_pow2};

@@ -1,0 +1,135 @@
+//! Runtime SIMD capability detection, shared by the explicit-intrinsics
+//! kernels (`fwht::simd` butterflies, `util::fastmath` vectorized trig).
+//!
+//! Detection runs once per process (`is_x86_feature_detected!` /
+//! aarch64 mandatory-NEON) and is cached in an atomic, so kernel entry
+//! points pay one relaxed load. The *policy* decision — whether the
+//! expansion pipeline uses the SIMD arm at all — does not live here; it
+//! belongs to `mckernel::plan::ExpansionPlan`, which consults
+//! [`available`] under its `DispatchForce::Auto` mode. Kernels in the
+//! SIMD modules fall back to their scalar twins when the level is
+//! [`SimdLevel::Scalar`], so a plan *forced* onto the SIMD arm still
+//! executes correctly (and bit-identically for the add/sub butterflies)
+//! on machines without vector units.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// The instruction-set tier the running CPU supports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// No usable vector extension — SIMD entry points run their
+    /// portable scalar fallbacks.
+    Scalar,
+    /// x86_64 AVX2: 8 f32 lanes per vector.
+    Avx2,
+    /// aarch64 NEON: 4 f32 lanes per vector.
+    Neon,
+}
+
+impl SimdLevel {
+    /// f32 elements per vector register at this level.
+    pub fn lanes(self) -> usize {
+        match self {
+            SimdLevel::Scalar => 1,
+            SimdLevel::Avx2 => 8,
+            SimdLevel::Neon => 4,
+        }
+    }
+
+    /// Stable short name (bench/CLI labels, EXPERIMENTS records).
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Neon => "neon",
+        }
+    }
+}
+
+const UNKNOWN: u8 = u8::MAX;
+static LEVEL: AtomicU8 = AtomicU8::new(UNKNOWN);
+
+fn detect() -> SimdLevel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return SimdLevel::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return SimdLevel::Neon;
+        }
+    }
+    SimdLevel::Scalar
+}
+
+fn decode(v: u8) -> SimdLevel {
+    match v {
+        1 => SimdLevel::Avx2,
+        2 => SimdLevel::Neon,
+        _ => SimdLevel::Scalar,
+    }
+}
+
+fn encode(l: SimdLevel) -> u8 {
+    match l {
+        SimdLevel::Scalar => 0,
+        SimdLevel::Avx2 => 1,
+        SimdLevel::Neon => 2,
+    }
+}
+
+/// The detected level for this process (cached after the first call).
+pub fn level() -> SimdLevel {
+    let v = LEVEL.load(Ordering::Relaxed);
+    if v != UNKNOWN {
+        return decode(v);
+    }
+    let l = detect();
+    // Benign race: detect() is a pure function of the CPU, so every
+    // contender stores the same value.
+    LEVEL.store(encode(l), Ordering::Relaxed);
+    l
+}
+
+/// Whether any vector extension is available (what the plan's Auto
+/// dispatch consults).
+pub fn available() -> bool {
+    level() != SimdLevel::Scalar
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_is_cached_and_consistent() {
+        let a = level();
+        let b = level();
+        assert_eq!(a, b);
+        assert_eq!(available(), a != SimdLevel::Scalar);
+        assert_eq!(a.lanes() > 1, available());
+    }
+
+    #[test]
+    fn names_and_lanes() {
+        assert_eq!(SimdLevel::Scalar.lanes(), 1);
+        assert_eq!(SimdLevel::Avx2.lanes(), 8);
+        assert_eq!(SimdLevel::Neon.lanes(), 4);
+        assert_eq!(SimdLevel::Scalar.name(), "scalar");
+        assert_eq!(SimdLevel::Avx2.name(), "avx2");
+        assert_eq!(SimdLevel::Neon.name(), "neon");
+    }
+
+    #[test]
+    fn arch_matches_level() {
+        // The detected tier must be one the build target can express.
+        match level() {
+            SimdLevel::Avx2 => assert!(cfg!(target_arch = "x86_64")),
+            SimdLevel::Neon => assert!(cfg!(target_arch = "aarch64")),
+            SimdLevel::Scalar => {}
+        }
+    }
+}

@@ -7,7 +7,8 @@
 
 use mckernel::linalg::Matrix;
 use mckernel::mckernel::{
-    ExpansionEngine, ExpansionPlan, FwhtDispatch, Kernel, McKernel, McKernelFactory,
+    DispatchForce, ExpansionEngine, ExpansionPlan, FwhtDispatch, Kernel, McKernel,
+    McKernelFactory,
 };
 
 fn build(dim: usize, e: usize, kernel: Kernel) -> McKernel {
@@ -124,9 +125,11 @@ fn normalization_fold_equals_explicit_post_scale_exactly() {
 
 #[test]
 fn plan_is_the_single_dispatch_point() {
-    // small geometry compiles to the batched path…
+    // small geometry compiles to a tiled arm (which one depends on the
+    // dispatch force / CPU, but never the per-row fallback)…
     let small = ExpansionPlan::new(build(12, 1, Kernel::Rbf).config(), 8);
-    assert_eq!(small.dispatch(), FwhtDispatch::Batched);
+    assert!(small.is_tiled());
+    assert_ne!(small.dispatch(), FwhtDispatch::PerRow);
     // …huge geometry to the per-row fallback — consumers never see
     // the difference, they just execute the compiled plan
     let huge_cfg = mckernel::mckernel::McKernelConfig {
@@ -139,4 +142,71 @@ fn plan_is_the_single_dispatch_point() {
     let huge = ExpansionPlan::new(&huge_cfg, 8);
     assert_eq!(huge.dispatch(), FwhtDispatch::PerRow);
     assert_eq!(huge.lanes(), 1);
+}
+
+/// Run the same batch through explicitly forced scalar and SIMD tiled
+/// engines and return both outputs.
+fn forced_pair(map: &McKernel, x: &Matrix, rows_hint: usize) -> (Matrix, Matrix) {
+    let mut scalar = ExpansionEngine::with_plan(ExpansionPlan::new_forced(
+        map.config(),
+        rows_hint,
+        DispatchForce::Scalar,
+    ));
+    assert_eq!(scalar.plan().dispatch(), FwhtDispatch::Batched);
+    let mut simd = ExpansionEngine::with_plan(ExpansionPlan::new_forced(
+        map.config(),
+        rows_hint,
+        DispatchForce::Simd,
+    ));
+    assert_eq!(simd.plan().dispatch(), FwhtDispatch::Simd);
+    let mut a = Matrix::zeros(x.rows(), map.feature_dim());
+    scalar.execute_matrix(map, x, &mut a);
+    let mut b = Matrix::zeros(x.rows(), map.feature_dim());
+    simd.execute_matrix(map, x, &mut b);
+    (a, b)
+}
+
+#[test]
+fn simd_engine_tracks_scalar_engine_within_1e6() {
+    // both kernels × non-pow2 dims × odd batches, tail tiles and a
+    // lanes==1 tiled plan (rows_hint = 1): the SIMD arm's only licensed
+    // deviation is the trig rounding, bounded at 1e-6
+    for kernel in [Kernel::Rbf, Kernel::RbfMatern { t: 40 }] {
+        for &(dim, e) in &[(12usize, 1usize), (20, 3), (100, 2)] {
+            let map = build(dim, e, kernel);
+            for &(rows, hint) in &[(1usize, 1usize), (3, usize::MAX), (7, usize::MAX), (37, 16)] {
+                let x = Matrix::from_fn(rows, dim, |r, c| {
+                    (((r * 31 + c * 7) % 17) as f32 - 8.0) * 0.06
+                });
+                let (a, b) = forced_pair(&map, &x, hint);
+                for (i, (p, q)) in a.data().iter().zip(b.data()).enumerate() {
+                    assert!(
+                        (p - q).abs() <= 1e-6,
+                        "{kernel:?} dim={dim} E={e} rows={rows} hint={hint} i={i}: {p} vs {q}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_engine_is_grouping_invariant_like_scalar() {
+    // a row alone equals the same row inside a larger batch under the
+    // forced SIMD engine too — tail tiles reuse the same kernels
+    let map = build(20, 2, Kernel::Rbf);
+    let xs = Matrix::from_fn(9, 20, |r, c| ((r * 11 + c) % 13) as f32 * 0.05);
+    let mut engine = ExpansionEngine::with_plan(ExpansionPlan::new_forced(
+        map.config(),
+        9,
+        DispatchForce::Simd,
+    ));
+    let mut all = Matrix::zeros(9, map.feature_dim());
+    engine.execute_matrix(&map, &xs, &mut all);
+    let mut one = Matrix::zeros(1, map.feature_dim());
+    for r in 0..9 {
+        let row = Matrix::from_vec(1, 20, xs.row(r).to_vec());
+        engine.execute_matrix(&map, &row, &mut one);
+        assert_eq!(one.row(0), all.row(r), "row {r}");
+    }
 }

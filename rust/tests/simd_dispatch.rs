@@ -1,0 +1,137 @@
+//! SIMD dispatch invariants (PR 9): runtime detection picks the SIMD
+//! arm exactly when the CPU supports it, a forced dispatch always wins
+//! over detection, the per-row override survives any force, and the
+//! two hot kernels honor their accuracy contracts under both forced
+//! arms — FWHT bit-identical, sin_cos within 1e-6.
+//!
+//! Only `force_is_global_and_restorable` touches the process-global
+//! dispatch force; every other test pins the arm via
+//! `ExpansionPlan::new_forced` so this binary stays race-free under
+//! the default parallel test runner.
+
+use mckernel::fwht;
+use mckernel::hash::HashRng;
+use mckernel::mckernel::{
+    CacheKey, DispatchForce, ExpansionPlan, FwhtDispatch, Kernel, McKernelConfig,
+};
+use mckernel::util::{fastmath, simd};
+
+fn cfg(input_dim: usize) -> McKernelConfig {
+    McKernelConfig { input_dim, expansions: 2, sigma: 1.0, kernel: Kernel::Rbf, seed: 7 }
+}
+
+fn rand_vec(len: usize, seed: u64) -> Vec<f32> {
+    let mut r = HashRng::new(seed, 0xD1);
+    (0..len).map(|_| r.next_f32() * 2.0 - 1.0).collect()
+}
+
+#[test]
+fn auto_dispatch_matches_runtime_detection() {
+    let plan = ExpansionPlan::new_forced(&cfg(100), 8, DispatchForce::Auto);
+    let want = if simd::available() { FwhtDispatch::Simd } else { FwhtDispatch::Batched };
+    assert_eq!(plan.dispatch(), want);
+    // the detected level is stable and consistent with available()
+    let (first, second) = (simd::level(), simd::level());
+    assert_eq!(first, second);
+    assert_eq!(simd::available(), first != simd::SimdLevel::Scalar);
+}
+
+#[test]
+fn forced_dispatch_wins_over_detection() {
+    // Simd is honored even on CPUs where detection would say scalar
+    // (the kernels fall back internally); Scalar is honored even on
+    // CPUs with vector units — the knob always wins.
+    let s = ExpansionPlan::new_forced(&cfg(100), 8, DispatchForce::Scalar);
+    assert_eq!(s.dispatch(), FwhtDispatch::Batched);
+    let v = ExpansionPlan::new_forced(&cfg(100), 8, DispatchForce::Simd);
+    assert_eq!(v.dispatch(), FwhtDispatch::Simd);
+    // same geometry either way: only the kernel set differs
+    assert_eq!(s.lanes(), v.lanes());
+    assert_eq!(s.scratch_floats(), v.scratch_floats());
+}
+
+#[test]
+fn per_row_override_survives_every_force() {
+    let c = cfg(100);
+    let pr = ExpansionPlan::per_row(&c);
+    assert_eq!(pr.dispatch(), FwhtDispatch::PerRow);
+    // huge transforms fall back to per-row no matter what is forced
+    let huge = cfg(40_000);
+    for force in [DispatchForce::Auto, DispatchForce::Scalar, DispatchForce::Simd] {
+        let p = ExpansionPlan::new_forced(&huge, 8, force);
+        assert_eq!(p.dispatch(), FwhtDispatch::PerRow, "{force:?}");
+        assert_eq!(p.lanes(), 1);
+    }
+}
+
+#[test]
+fn force_is_global_and_restorable() {
+    // the only test in this binary that mutates the process-global
+    // force; restore it so a future in-binary reader sees no residue
+    let prev = mckernel::mckernel::dispatch_force();
+    for (force, want) in [
+        (DispatchForce::Scalar, FwhtDispatch::Batched),
+        (DispatchForce::Simd, FwhtDispatch::Simd),
+    ] {
+        mckernel::mckernel::set_dispatch_force(force);
+        assert_eq!(mckernel::mckernel::dispatch_force(), force);
+        let plan = ExpansionPlan::new(&cfg(100), 8);
+        assert_eq!(plan.dispatch(), want, "{force:?}");
+    }
+    mckernel::mckernel::set_dispatch_force(prev);
+}
+
+#[test]
+fn fingerprints_and_cache_keys_distinguish_the_arms() {
+    let c = cfg(784);
+    let s = ExpansionPlan::new_forced(&c, 4, DispatchForce::Scalar);
+    let v = ExpansionPlan::new_forced(&c, 4, DispatchForce::Simd);
+    let r = ExpansionPlan::per_row(&c);
+    assert!(s.fingerprint().contains("_b"), "{}", s.fingerprint());
+    assert!(v.fingerprint().contains("_s"), "{}", v.fingerprint());
+    assert!(r.fingerprint().contains("_r"), "{}", r.fingerprint());
+    let (ks, kv, kr) = (CacheKey::new(&c, &s), CacheKey::new(&c, &v), CacheKey::new(&c, &r));
+    assert_ne!(ks, kv);
+    assert_ne!(ks, kr);
+    assert_ne!(kv, kr);
+}
+
+#[test]
+fn simd_fwht_is_bit_identical_to_scalar() {
+    // single transforms across sizes including n=1 and n=2
+    for log_n in [0usize, 1, 3, 6, 10] {
+        let n = 1usize << log_n;
+        let base = rand_vec(n, log_n as u64);
+        let mut a = base.clone();
+        fwht::fwht_fast(&mut a);
+        let mut b = base.clone();
+        fwht::simd::fwht(&mut b);
+        assert_eq!(a, b, "n={n}");
+    }
+    // batched column-major tiles: odd row counts force tail tiles
+    for &(rows, n) in &[(1usize, 64usize), (3, 32), (7, 128), (37, 64)] {
+        let base = rand_vec(rows * n, (rows * n) as u64);
+        let mut a = base.clone();
+        fwht::fwht_batch(&mut a, rows, n);
+        let mut b = base;
+        fwht::simd::fwht_batch(&mut b, rows, n);
+        assert_eq!(a, b, "rows={rows} n={n}");
+    }
+}
+
+#[test]
+fn simd_sin_cos_stays_within_1e6_of_scalar() {
+    // odd lengths hit the vector body, the scalar tail and lanes==1
+    for len in [0usize, 1, 3, 7, 8, 9, 31, 257, 1000] {
+        let x: Vec<f32> =
+            rand_vec(len, len as u64 + 40).iter().map(|v| v * 300.0).collect();
+        let (mut ss, mut cs) = (vec![0.0f32; len], vec![0.0f32; len]);
+        fastmath::sin_cos_batch(&x, &mut ss, &mut cs);
+        let (mut sv, mut cv) = (vec![0.0f32; len], vec![0.0f32; len]);
+        fastmath::sin_cos_batch_simd(&x, &mut sv, &mut cv);
+        for i in 0..len {
+            assert!((ss[i] - sv[i]).abs() <= 1e-6, "sin len={len} i={i} x={}", x[i]);
+            assert!((cs[i] - cv[i]).abs() <= 1e-6, "cos len={len} i={i} x={}", x[i]);
+        }
+    }
+}
