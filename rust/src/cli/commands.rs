@@ -779,6 +779,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         .map(|c| {
             let client = server.client();
             let data = train.images().clone();
+            // analyze: allow(thread-spawn) -- load-drill clients must be independent OS threads, not pool jobs competing with the server
             std::thread::spawn(move || {
                 for i in 0..per_client {
                     let row = data.row((c * per_client + i) % data.rows()).to_vec();
@@ -879,6 +880,7 @@ fn chaos_accounting(seed: u64, requests: usize) -> Result<Json> {
         .map(|c| {
             let client = server.client();
             let otx = otx.clone();
+            // analyze: allow(thread-spawn) -- chaos drill needs real concurrent clients to exercise shedding and restarts
             std::thread::spawn(move || {
                 for i in 0..per {
                     let x = vec![((c * per + i) % 9) as f32 * 0.1; 16];

@@ -112,6 +112,7 @@ impl Prefetcher {
                     stall_ns.record(obs::elapsed_ns(t_send));
                 }
             })
+            // analyze: allow(no-panic-serving) -- OS refusing the one prefetch thread at startup is unrecoverable
             .expect("spawn prefetch thread");
         Prefetcher { rx, handle: Some(handle) }
     }

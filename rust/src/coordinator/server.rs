@@ -342,6 +342,7 @@ impl FeatureServer {
         let handle = std::thread::Builder::new()
             .name("mckernel-feature-server".into())
             .spawn(move || Self::serve(map, rx, config, stats, cache))
+            // analyze: allow(no-panic-serving) -- OS refusing the one server thread at startup is unrecoverable
             .expect("spawn server thread");
         FeatureServer { tx: Some(tx), handle: Some(handle), shared, feature_dim }
     }
@@ -452,6 +453,7 @@ impl FeatureServer {
             let run = catch_unwind(AssertUnwindSafe(|| {
                 if let Some(plan) = &config.faults {
                     if plan.fires(FaultSite::WorkerPanic) {
+                        // analyze: allow(no-panic-serving) -- deliberate chaos injection; the catch_unwind above quarantines it
                         panic!("injected fault: serve-loop worker panic");
                     }
                 }
@@ -529,6 +531,7 @@ impl FeatureServer {
     /// A cloneable client handle usable from other threads.
     pub fn client(&self) -> FeatureClient {
         FeatureClient {
+            // analyze: allow(no-panic-serving) -- tx is Some until shutdown(), which takes &mut self; a &self caller cannot race it
             tx: self.tx.as_ref().expect("server running").clone(),
             shared: Arc::clone(&self.shared),
         }

@@ -117,11 +117,14 @@ macro_rules! stage_schedule {
         let stages = $n.trailing_zeros();
         let mut h = $lanes;
         if stages % 2 == 1 {
-            $r2($tile, h);
+            // SAFETY: expanded only inside the arch modules'
+            // #[target_feature] fns; their callers proved the feature.
+            unsafe { $r2($tile, h) };
             h *= 2;
         }
         while h < $n * $lanes {
-            $r4($tile, h);
+            // SAFETY: same feature precondition as above.
+            unsafe { $r4($tile, h) };
             h *= 4;
         }
     }};
@@ -147,11 +150,14 @@ mod avx2 {
             let (ap, bp) = (a.as_mut_ptr(), b.as_mut_ptr());
             let mut i = 0;
             while i + 8 <= h {
-                // SAFETY: i + 8 <= h bounds both 8-float loads/stores.
-                let x = _mm256_loadu_ps(ap.add(i));
-                let y = _mm256_loadu_ps(bp.add(i));
-                _mm256_storeu_ps(ap.add(i), _mm256_add_ps(x, y));
-                _mm256_storeu_ps(bp.add(i), _mm256_sub_ps(x, y));
+                // SAFETY: i + 8 <= h bounds both 8-float loads/stores;
+                // ap/bp point into the live disjoint halves of `pair`.
+                unsafe {
+                    let x = _mm256_loadu_ps(ap.add(i));
+                    let y = _mm256_loadu_ps(bp.add(i));
+                    _mm256_storeu_ps(ap.add(i), _mm256_add_ps(x, y));
+                    _mm256_storeu_ps(bp.add(i), _mm256_sub_ps(x, y));
+                }
                 i += 8;
             }
             while i < h {
@@ -175,19 +181,22 @@ mod avx2 {
                 (a.as_mut_ptr(), b.as_mut_ptr(), c.as_mut_ptr(), d.as_mut_ptr());
             let mut i = 0;
             while i + 8 <= h {
-                // SAFETY: i + 8 <= h bounds all four 8-float streams.
-                let va = _mm256_loadu_ps(ap.add(i));
-                let vb = _mm256_loadu_ps(bp.add(i));
-                let vc = _mm256_loadu_ps(cp.add(i));
-                let vd = _mm256_loadu_ps(dp.add(i));
-                let t0 = _mm256_add_ps(va, vb);
-                let t1 = _mm256_sub_ps(va, vb);
-                let t2 = _mm256_add_ps(vc, vd);
-                let t3 = _mm256_sub_ps(vc, vd);
-                _mm256_storeu_ps(ap.add(i), _mm256_add_ps(t0, t2));
-                _mm256_storeu_ps(bp.add(i), _mm256_add_ps(t1, t3));
-                _mm256_storeu_ps(cp.add(i), _mm256_sub_ps(t0, t2));
-                _mm256_storeu_ps(dp.add(i), _mm256_sub_ps(t1, t3));
+                // SAFETY: i + 8 <= h bounds all four 8-float streams;
+                // the split_at_mut chain keeps them disjoint and live.
+                unsafe {
+                    let va = _mm256_loadu_ps(ap.add(i));
+                    let vb = _mm256_loadu_ps(bp.add(i));
+                    let vc = _mm256_loadu_ps(cp.add(i));
+                    let vd = _mm256_loadu_ps(dp.add(i));
+                    let t0 = _mm256_add_ps(va, vb);
+                    let t1 = _mm256_sub_ps(va, vb);
+                    let t2 = _mm256_add_ps(vc, vd);
+                    let t3 = _mm256_sub_ps(vc, vd);
+                    _mm256_storeu_ps(ap.add(i), _mm256_add_ps(t0, t2));
+                    _mm256_storeu_ps(bp.add(i), _mm256_add_ps(t1, t3));
+                    _mm256_storeu_ps(cp.add(i), _mm256_sub_ps(t0, t2));
+                    _mm256_storeu_ps(dp.add(i), _mm256_sub_ps(t1, t3));
+                }
                 i += 8;
             }
             while i < h {
@@ -225,11 +234,14 @@ mod neon {
             let (ap, bp) = (a.as_mut_ptr(), b.as_mut_ptr());
             let mut i = 0;
             while i + 4 <= h {
-                // SAFETY: i + 4 <= h bounds both 4-float loads/stores.
-                let x = vld1q_f32(ap.add(i));
-                let y = vld1q_f32(bp.add(i));
-                vst1q_f32(ap.add(i), vaddq_f32(x, y));
-                vst1q_f32(bp.add(i), vsubq_f32(x, y));
+                // SAFETY: i + 4 <= h bounds both 4-float loads/stores;
+                // ap/bp point into the live disjoint halves of `pair`.
+                unsafe {
+                    let x = vld1q_f32(ap.add(i));
+                    let y = vld1q_f32(bp.add(i));
+                    vst1q_f32(ap.add(i), vaddq_f32(x, y));
+                    vst1q_f32(bp.add(i), vsubq_f32(x, y));
+                }
                 i += 4;
             }
             while i < h {
@@ -253,19 +265,22 @@ mod neon {
                 (a.as_mut_ptr(), b.as_mut_ptr(), c.as_mut_ptr(), d.as_mut_ptr());
             let mut i = 0;
             while i + 4 <= h {
-                // SAFETY: i + 4 <= h bounds all four 4-float streams.
-                let va = vld1q_f32(ap.add(i));
-                let vb = vld1q_f32(bp.add(i));
-                let vc = vld1q_f32(cp.add(i));
-                let vd = vld1q_f32(dp.add(i));
-                let t0 = vaddq_f32(va, vb);
-                let t1 = vsubq_f32(va, vb);
-                let t2 = vaddq_f32(vc, vd);
-                let t3 = vsubq_f32(vc, vd);
-                vst1q_f32(ap.add(i), vaddq_f32(t0, t2));
-                vst1q_f32(bp.add(i), vaddq_f32(t1, t3));
-                vst1q_f32(cp.add(i), vsubq_f32(t0, t2));
-                vst1q_f32(dp.add(i), vsubq_f32(t1, t3));
+                // SAFETY: i + 4 <= h bounds all four 4-float streams;
+                // the split_at_mut chain keeps them disjoint and live.
+                unsafe {
+                    let va = vld1q_f32(ap.add(i));
+                    let vb = vld1q_f32(bp.add(i));
+                    let vc = vld1q_f32(cp.add(i));
+                    let vd = vld1q_f32(dp.add(i));
+                    let t0 = vaddq_f32(va, vb);
+                    let t1 = vsubq_f32(va, vb);
+                    let t2 = vaddq_f32(vc, vd);
+                    let t3 = vsubq_f32(vc, vd);
+                    vst1q_f32(ap.add(i), vaddq_f32(t0, t2));
+                    vst1q_f32(bp.add(i), vaddq_f32(t1, t3));
+                    vst1q_f32(cp.add(i), vsubq_f32(t0, t2));
+                    vst1q_f32(dp.add(i), vsubq_f32(t1, t3));
+                }
                 i += 4;
             }
             while i < h {

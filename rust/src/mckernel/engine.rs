@@ -246,10 +246,10 @@ impl ExpansionEngine {
                 block.apply(padded, cos_half, tmp);
                 lap(t, &mut st.fwht);
                 let t = stamp(timed);
-                for i in 0..n {
-                    let (s, c) = cos_half[i].sin_cos();
-                    sin_half[i] = s * post_scale;
-                    cos_half[i] = c * post_scale;
+                for (cv, sv) in cos_half.iter_mut().zip(sin_half.iter_mut()) {
+                    let (s, c) = cv.sin_cos();
+                    *sv = s * post_scale;
+                    *cv = c * post_scale;
                 }
                 lap(t, &mut st.trig);
             }

@@ -53,20 +53,20 @@ impl FastfoodBlock {
         assert_eq!(out.len(), n);
         assert_eq!(tmp.len(), n);
         // v = B x
-        for i in 0..n {
-            tmp[i] = x[i] * self.b[i];
+        for ((t, &xv), &bv) in tmp.iter_mut().zip(x).zip(&self.b) {
+            *t = xv * bv;
         }
         // v = H v
         fwht::fwht(tmp);
         // v = Π v, then fold G in during the gather (single pass)
-        for i in 0..n {
-            out[i] = tmp[self.perm[i] as usize] * self.g[i];
+        for ((o, &p), &gv) in out.iter_mut().zip(&self.perm).zip(&self.g) {
+            *o = tmp[p as usize] * gv;
         }
         // v = H v
         fwht::fwht(out);
         // v = (C/(σ√n‖g‖)) v
-        for i in 0..n {
-            out[i] *= self.scale[i];
+        for (o, &sv) in out.iter_mut().zip(&self.scale) {
+            *o *= sv;
         }
     }
 

@@ -92,7 +92,9 @@ fn trace_line(name: &str, parent: Option<&'static str>, depth: usize, start: Ins
     let Some(w) = guard.as_mut() else { return };
     let t_ns = start
         .checked_duration_since(process_epoch())
-        .map(|d| d.as_nanos() as u64)
+        // Saturate like `elapsed_ns` instead of `as`-truncating: a
+        // u128 span past u64::MAX ns would otherwise wrap silently.
+        .map(|d| u64::try_from(d.as_nanos()).unwrap_or(u64::MAX))
         .unwrap_or(0);
     let mut m = BTreeMap::new();
     m.insert("name".to_string(), Json::Str(name.to_string()));

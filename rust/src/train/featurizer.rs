@@ -203,17 +203,21 @@ impl Featurizer {
                     let eng_ptr = eng_ptr;
                     let lo = t * chunk;
                     let hi = ((t + 1) * chunk).min(rows);
-                    // SAFETY: tasks own disjoint row ranges and
-                    // disjoint engines (task `t` touches only
-                    // `workers[t]`, and `tasks ≤ pool.size() ==
-                    // workers.len()`); the input batch, the pooled
-                    // output and the worker engines all outlive
-                    // scope_for_each (it blocks until every task is
-                    // done).
+                    // SAFETY: task `t` touches only `workers[t]`
+                    // (`tasks ≤ pool.size() == workers.len()`), and
+                    // the engines outlive scope_for_each, which blocks
+                    // until every task is done.
                     let eng = unsafe { &mut *eng_ptr.0.add(t) };
+                    // SAFETY: rows `lo..hi` lie inside the input batch
+                    // (`hi ≤ rows`), which this frame borrows for the
+                    // whole blocking scope; tasks only read it.
                     let xs = unsafe {
                         std::slice::from_raw_parts(in_ptr.0.add(lo * d), (hi - lo) * d)
                     };
+                    // SAFETY: tasks own disjoint `lo..hi` row ranges of
+                    // the pooled output (sized `rows × fd` above), so
+                    // these &mut segments never alias; the matrix
+                    // outlives the blocking scope.
                     let seg = unsafe {
                         std::slice::from_raw_parts_mut(out_ptr.0.add(lo * fd), (hi - lo) * fd)
                     };
@@ -226,6 +230,7 @@ impl Featurizer {
                 // panicking engine task here is an internal bug (the
                 // output would be silently incomplete), so escalate
                 // instead of returning partial features.
+                // analyze: allow(no-panic-serving) -- no error channel in apply_into; partial features must abort
                 .expect("parallel featurization task failed");
                 &engine.out
             }
@@ -251,20 +256,32 @@ impl Featurizer {
 /// is argued at the use site).
 #[derive(Clone, Copy)]
 struct SendPtr(*mut f32);
+// SAFETY: dereferenced only inside apply_into's blocking scope, where
+// tasks write disjoint row segments of the pooled output (argued at
+// the use site); the pointee outlives the scope.
 unsafe impl Send for SendPtr {}
+// SAFETY: shared across tasks but each writes a disjoint segment — no
+// two tasks ever touch the same element.
 unsafe impl Sync for SendPtr {}
 
 /// Shared-read counterpart of [`SendPtr`]: lets workers borrow the
 /// input batch for the blocking scope instead of cloning it.
 #[derive(Clone, Copy)]
 struct SendConstPtr(*const f32);
+// SAFETY: points into the input batch, which the submitting frame
+// borrows for the whole blocking scope; tasks only read through it.
 unsafe impl Send for SendConstPtr {}
+// SAFETY: read-only shared access to an immutably borrowed batch.
 unsafe impl Sync for SendConstPtr {}
 
 /// Per-task engine pointer (task `t` uses engine `t` exclusively).
 #[derive(Clone, Copy)]
 struct SendEnginePtr(*mut ExpansionEngine);
+// SAFETY: task `t` dereferences only offset `t`, so each engine is
+// exclusively owned by one task for the blocking scope's duration.
 unsafe impl Send for SendEnginePtr {}
+// SAFETY: shared capture by every task closure, but the per-offset
+// exclusivity above means no engine is ever aliased mutably.
 unsafe impl Sync for SendEnginePtr {}
 
 #[cfg(test)]

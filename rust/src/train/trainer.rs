@@ -492,6 +492,7 @@ impl ParallelTrainer {
                         if let Some(plan) = faults {
                             let key = shard_key(epoch, bi, slot.idx, attempt);
                             if plan.fires_at(FaultSite::WorkerPanic, key) {
+                                // analyze: allow(no-panic-serving) -- deliberate chaos injection; the pool's catch_unwind contains it
                                 panic!("injected fault: shard {} attempt {attempt}", slot.idx);
                             }
                         }

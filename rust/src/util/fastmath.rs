@@ -15,6 +15,11 @@
 //! feature pipeline); the reduction degrades gracefully beyond that as
 //! `q·ulp(π/2)` grows.
 
+// The Cody–Waite split constants and minimax coefficients below carry
+// their published full-precision decimal expansions on purpose (the
+// compiler truncates to f32); this is the only file allowed to.
+#![allow(clippy::excessive_precision)]
+
 /// 2/π.
 const FRAC_2_PI: f32 = 0.636_619_772_367_581_34;
 
@@ -107,11 +112,15 @@ mod avx2 {
         let n = x.len();
         let mut i = 0;
         while i + 8 <= n {
-            // SAFETY: i + 8 <= n bounds the 8-float loads/stores.
-            let v = _mm256_loadu_ps(x.as_ptr().add(i));
-            let (s, c) = sin_cos8(v);
-            _mm256_storeu_ps(sin_out.as_mut_ptr().add(i), s);
-            _mm256_storeu_ps(cos_out.as_mut_ptr().add(i), c);
+            // SAFETY: i + 8 <= n bounds the 8-float loads/stores into
+            // the equal-length slices, and sin_cos8 inherits the AVX2
+            // precondition this fn's caller already proved.
+            unsafe {
+                let v = _mm256_loadu_ps(x.as_ptr().add(i));
+                let (s, c) = sin_cos8(v);
+                _mm256_storeu_ps(sin_out.as_mut_ptr().add(i), s);
+                _mm256_storeu_ps(cos_out.as_mut_ptr().add(i), c);
+            }
             i += 8;
         }
         while i < n {
@@ -180,11 +189,15 @@ mod neon {
         let n = x.len();
         let mut i = 0;
         while i + 4 <= n {
-            // SAFETY: i + 4 <= n bounds the 4-float loads/stores.
-            let v = vld1q_f32(x.as_ptr().add(i));
-            let (s, c) = sin_cos4(v);
-            vst1q_f32(sin_out.as_mut_ptr().add(i), s);
-            vst1q_f32(cos_out.as_mut_ptr().add(i), c);
+            // SAFETY: i + 4 <= n bounds the 4-float loads/stores into
+            // the equal-length slices, and sin_cos4 inherits the NEON
+            // precondition this fn's caller already proved.
+            unsafe {
+                let v = vld1q_f32(x.as_ptr().add(i));
+                let (s, c) = sin_cos4(v);
+                vst1q_f32(sin_out.as_mut_ptr().add(i), s);
+                vst1q_f32(cos_out.as_mut_ptr().add(i), c);
+            }
             i += 4;
         }
         while i < n {

@@ -28,6 +28,25 @@ impl Drop for Done {
     }
 }
 
+/// Shard-base pointer made `Send` so scoped jobs can carry it to the
+/// workers directly — no int→ptr roundtrip, so provenance survives
+/// and Miri can check the aliasing argument below.
+struct ShardBase<S>(*mut S);
+
+impl<S> Clone for ShardBase<S> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<S> Copy for ShardBase<S> {}
+
+// SAFETY: the pointer is dereferenced only inside `scope_shards` jobs,
+// each at its own distinct offset, while the completion barrier keeps
+// the underlying `&mut [S]` borrow pinned to the submitting frame —
+// handing it to a worker is exactly the disjoint-&mut transfer that
+// `S: Send` permits.
+unsafe impl<S: Send> Send for ShardBase<S> {}
+
 /// A fixed pool of worker threads executing boxed jobs FIFO.
 pub struct ThreadPool {
     sender: Option<mpsc::Sender<Job>>,
@@ -114,7 +133,7 @@ impl ThreadPool {
             return Ok(Vec::new());
         }
         let (done_tx, done_rx) = mpsc::channel::<(usize, bool)>();
-        let base = shards.as_mut_ptr() as usize;
+        let base = ShardBase(shards.as_mut_ptr());
         let mut submitted = 0usize;
         let mut submit_err = None;
         for i in 0..n {
@@ -125,7 +144,7 @@ impl ThreadPool {
                 // SAFETY: job `i` touches only shard `i` (disjoint
                 // &mut), and the barrier keeps `shards` borrowed by
                 // this frame until every job has dropped its guard.
-                let shard = unsafe { &mut *(base as *mut S).add(i) };
+                let shard = unsafe { &mut *base.0.add(i) };
                 fr(i, shard);
             });
             // SAFETY: lifetime erasure to fit the queue's 'static Job

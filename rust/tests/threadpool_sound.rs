@@ -1,0 +1,114 @@
+//! Soundness tests for the `ThreadPool::scope_shards` lifetime-erasure
+//! seam, shaped to run under Miri (small shard counts, no timers, no
+//! sleeps): the `transmute` in `threadpool.rs` erases the jobs'
+//! borrow of the caller's stack, and the completion barrier is the
+//! entire soundness argument — these tests are what Miri checks that
+//! argument against (`cargo +nightly miri test --test threadpool_sound`).
+//!
+//! Every test drops the pool at the end of its scope, so Miri also
+//! verifies that no erased borrow outlives the frame that created it.
+
+use mckernel::fault::McError;
+use mckernel::util::threadpool::ThreadPool;
+
+/// Zero shards: no job is ever submitted, no pointer is ever formed.
+#[test]
+fn zero_shards_is_noop() {
+    let pool = ThreadPool::new(2);
+    let mut shards: Vec<u64> = Vec::new();
+    let panicked = pool.scope_shards(&mut shards, |_, _| unreachable!()).unwrap();
+    assert!(panicked.is_empty());
+}
+
+/// More shards than workers: jobs queue behind each other on the same
+/// worker, so the barrier must wait across multiple queue generations
+/// while the erased borrows stay live.
+#[test]
+fn more_shards_than_workers() {
+    let pool = ThreadPool::new(2);
+    let mut shards: Vec<usize> = vec![0; 11];
+    // Borrow a stack local through the erased closure: exactly the
+    // lifetime the transmute pretends away and the barrier restores.
+    let offset = 7usize;
+    let off = &offset;
+    let panicked = pool.scope_shards(&mut shards, |i, s| *s = i + off).unwrap();
+    assert!(panicked.is_empty());
+    for (i, &s) in shards.iter().enumerate() {
+        assert_eq!(s, i + 7, "shard {i}");
+    }
+}
+
+/// A panicking shard unwinds through the job while its siblings are
+/// still writing: the Drop-based completion guard must still fire
+/// (otherwise the barrier deadlocks) and the panicked shard's slot
+/// must be left untouched.
+#[test]
+fn panicking_shards_are_reported_and_contained() {
+    let pool = ThreadPool::new(3);
+    let mut shards: Vec<u32> = vec![0; 6];
+    let panicked = pool
+        .scope_shards(&mut shards, |i, s| {
+            if i % 2 == 1 {
+                panic!("shard {i}");
+            }
+            *s = 1;
+        })
+        .unwrap();
+    assert_eq!(panicked, vec![1, 3, 5]);
+    for (i, &s) in shards.iter().enumerate() {
+        assert_eq!(s, if i % 2 == 1 { 0 } else { 1 }, "shard {i}");
+    }
+    // The workers survived (panics are caught per job): rerun exactly
+    // the panicked indices, the trainer's repair pattern.
+    let clean = pool
+        .scope_shards(&mut shards, |i, s| {
+            if panicked.contains(&i) {
+                *s = 2;
+            }
+        })
+        .unwrap();
+    assert!(clean.is_empty());
+    assert_eq!(shards, vec![1, 2, 1, 2, 1, 2]);
+}
+
+/// Submission failing mid-loop (pool already shut down): the typed
+/// error must come back only after the barrier has drained every job
+/// that *was* submitted — on this path zero jobs, so immediately —
+/// and the shards must be untouched.
+#[test]
+fn early_submit_failure_is_typed_and_barriered() {
+    let mut pool = ThreadPool::new(2);
+    pool.shutdown();
+    let mut shards: Vec<u8> = vec![9; 4];
+    let err = pool.scope_shards(&mut shards, |_, s| *s = 0).unwrap_err();
+    assert_eq!(err, McError::ShuttingDown);
+    assert_eq!(shards, vec![9; 4], "no job may have touched a shard");
+}
+
+/// Back-to-back scopes reusing one pool: each scope's borrows must
+/// end at its own barrier, not at pool drop (a use-after-free here is
+/// exactly what Miri would flag if the barrier under-waited).
+#[test]
+fn sequential_scopes_reuse_the_pool() {
+    let pool = ThreadPool::new(2);
+    for round in 0u64..4 {
+        let mut shards: Vec<u64> = vec![0; 5];
+        let panicked = pool.scope_shards(&mut shards, |i, s| *s = round * 100 + i as u64).unwrap();
+        assert!(panicked.is_empty());
+        for (i, &s) in shards.iter().enumerate() {
+            assert_eq!(s, round * 100 + i as u64);
+        }
+        // `shards` drops here while the pool lives on — the erased
+        // pointer must not be retained anywhere past the barrier.
+    }
+}
+
+/// Single-element and single-worker degenerate shapes.
+#[test]
+fn degenerate_shapes() {
+    let pool = ThreadPool::new(1);
+    let mut one = [41u8];
+    let panicked = pool.scope_shards(&mut one, |_, s| *s += 1).unwrap();
+    assert!(panicked.is_empty());
+    assert_eq!(one[0], 42);
+}

@@ -1,0 +1,419 @@
+//! A small hand-rolled Rust lexer — just enough fidelity for the
+//! invariant rules: identifiers/keywords, punctuation, string/char
+//! literals (cooked, raw, byte), line and nested block comments, and
+//! numbers, each tagged with its 1-based source line.
+//!
+//! It deliberately does **not** parse: the rules in [`crate::rules`]
+//! match token shapes (`unsafe {`, `thread :: spawn`,
+//! `counter ( "name" )`) and line geometry (a `// SAFETY:` run
+//! directly above an `unsafe` site), which is exactly the level a
+//! project-native linter needs — clippy owns everything that requires
+//! types or MIR.
+
+/// Token classes the rules care about.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`unsafe`, `fn`, `thread`, …).
+    Ident,
+    /// Single punctuation character (`::` arrives as two `:`).
+    Punct(char),
+    /// String literal; `text` holds the raw contents between quotes.
+    Str,
+    /// Character or byte literal (contents not preserved).
+    Char,
+    /// Lifetime (`'a`, `'_`).
+    Lifetime,
+    /// Numeric literal (contents not preserved beyond the lexeme).
+    Num,
+    /// Comment; `text` holds the body without delimiters, `doc` marks
+    /// `///` / `//!` / `/** */` forms.
+    Comment { doc: bool },
+}
+
+/// One lexed token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: usize,
+}
+
+impl Tok {
+    /// Is this an identifier with exactly this text?
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    /// Is this the punctuation character `c`?
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct(c)
+    }
+}
+
+/// Lex `src` into a token stream (comments included, whitespace
+/// dropped). Never fails: unterminated constructs are consumed to end
+/// of input — good enough for a linter that only runs on code the
+/// compiler already accepts.
+pub fn lex(src: &str) -> Vec<Tok> {
+    Lexer { chars: src.chars().collect(), pos: 0, line: 1, out: Vec::new() }.run()
+}
+
+struct Lexer {
+    chars: Vec<char>,
+    pos: usize,
+    line: usize,
+    out: Vec<Tok>,
+}
+
+impl Lexer {
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.pos + ahead).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.chars.get(self.pos).copied();
+        if let Some(c) = c {
+            self.pos += 1;
+            if c == '\n' {
+                self.line += 1;
+            }
+        }
+        c
+    }
+
+    fn push(&mut self, kind: TokKind, text: String, line: usize) {
+        self.out.push(Tok { kind, text, line });
+    }
+
+    fn run(mut self) -> Vec<Tok> {
+        while let Some(c) = self.peek(0) {
+            let line = self.line;
+            match c {
+                c if c.is_whitespace() => {
+                    self.bump();
+                }
+                '/' if self.peek(1) == Some('/') => self.line_comment(line),
+                '/' if self.peek(1) == Some('*') => self.block_comment(line),
+                '"' => self.cooked_string(line),
+                '\'' => self.char_or_lifetime(line),
+                c if c.is_ascii_digit() => self.number(line),
+                c if c == '_' || c.is_alphabetic() => self.ident_or_prefixed(line),
+                c => {
+                    self.bump();
+                    self.push(TokKind::Punct(c), c.to_string(), line);
+                }
+            }
+        }
+        self.out
+    }
+
+    fn line_comment(&mut self, line: usize) {
+        self.bump();
+        self.bump(); // consume `//`
+        let doc = matches!(self.peek(0), Some('/') | Some('!'));
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            if c == '\n' {
+                break;
+            }
+            text.push(c);
+            self.bump();
+        }
+        self.push(TokKind::Comment { doc }, text, line);
+    }
+
+    fn block_comment(&mut self, line: usize) {
+        self.bump();
+        self.bump(); // consume `/*`
+        let doc = matches!(self.peek(0), Some('*') | Some('!'));
+        let mut depth = 1usize;
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            if c == '/' && self.peek(1) == Some('*') {
+                depth += 1;
+                self.bump();
+                self.bump();
+                text.push_str("/*");
+            } else if c == '*' && self.peek(1) == Some('/') {
+                depth -= 1;
+                self.bump();
+                self.bump();
+                if depth == 0 {
+                    break;
+                }
+                text.push_str("*/");
+            } else {
+                text.push(c);
+                self.bump();
+            }
+        }
+        self.push(TokKind::Comment { doc }, text, line);
+    }
+
+    fn cooked_string(&mut self, line: usize) {
+        self.bump(); // opening quote
+        let mut text = String::new();
+        while let Some(c) = self.bump() {
+            match c {
+                '"' => break,
+                '\\' => {
+                    // keep the escape verbatim; rules only need the
+                    // shape of the literal, not its cooked value
+                    text.push(c);
+                    if let Some(e) = self.bump() {
+                        text.push(e);
+                    }
+                }
+                _ => text.push(c),
+            }
+        }
+        self.push(TokKind::Str, text, line);
+    }
+
+    /// Raw string after an `r`/`br`/`cr` prefix: `r##"…"##`.
+    fn raw_string(&mut self, line: usize) {
+        let mut hashes = 0usize;
+        while self.peek(0) == Some('#') {
+            hashes += 1;
+            self.bump();
+        }
+        self.bump(); // opening quote
+        let mut text = String::new();
+        'outer: while let Some(c) = self.bump() {
+            if c == '"' {
+                // need `hashes` following '#' to close
+                for k in 0..hashes {
+                    if self.peek(k) != Some('#') {
+                        text.push('"');
+                        continue 'outer;
+                    }
+                }
+                for _ in 0..hashes {
+                    self.bump();
+                }
+                break;
+            }
+            text.push(c);
+        }
+        self.push(TokKind::Str, text, line);
+    }
+
+    fn char_or_lifetime(&mut self, line: usize) {
+        self.bump(); // the `'`
+        // `'a` / `'_` with no closing quote → lifetime; `'x'` / `'\n'`
+        // → char literal. Disambiguate by looking for the close.
+        match self.peek(0) {
+            Some('\\') => {
+                // escaped char literal
+                self.bump();
+                self.bump(); // escape body (multi-char escapes: eat to quote)
+                while let Some(c) = self.bump() {
+                    if c == '\'' {
+                        break;
+                    }
+                }
+                self.push(TokKind::Char, String::new(), line);
+            }
+            Some(c) if c == '_' || c.is_alphanumeric() => {
+                if self.peek(1) == Some('\'') {
+                    self.bump();
+                    self.bump();
+                    self.push(TokKind::Char, String::new(), line);
+                } else {
+                    // lifetime: consume the identifier
+                    let mut name = String::new();
+                    while let Some(c) = self.peek(0) {
+                        if c == '_' || c.is_alphanumeric() {
+                            name.push(c);
+                            self.bump();
+                        } else {
+                            break;
+                        }
+                    }
+                    self.push(TokKind::Lifetime, name, line);
+                }
+            }
+            Some(c) => {
+                // punctuation char literal like `'{'`
+                self.bump();
+                if self.peek(0) == Some('\'') {
+                    self.bump();
+                }
+                self.push(TokKind::Char, c.to_string(), line);
+            }
+            None => {}
+        }
+    }
+
+    fn number(&mut self, line: usize) {
+        let mut text = String::new();
+        // integer part (also covers 0x/0b/0o bodies: hex digits and
+        // `_` all fall under alphanumeric)
+        while let Some(c) = self.peek(0) {
+            if c.is_alphanumeric() || c == '_' {
+                text.push(c);
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        // fractional part — but never swallow `..` (range syntax)
+        if self.peek(0) == Some('.') && self.peek(1).is_some_and(|c| c.is_ascii_digit()) {
+            text.push('.');
+            self.bump();
+            while let Some(c) = self.peek(0) {
+                if c.is_alphanumeric() || c == '_' {
+                    text.push(c);
+                    self.bump();
+                } else {
+                    break;
+                }
+            }
+        }
+        // exponent sign (`1e-7`): the `e`/`E` was consumed above; a
+        // trailing +/- digit run still belongs to the literal
+        if matches!(self.peek(0), Some('+') | Some('-'))
+            && text.ends_with(['e', 'E'])
+            && self.peek(1).is_some_and(|c| c.is_ascii_digit())
+        {
+            text.push(self.bump().unwrap());
+            while let Some(c) = self.peek(0) {
+                if c.is_alphanumeric() || c == '_' {
+                    text.push(c);
+                    self.bump();
+                } else {
+                    break;
+                }
+            }
+        }
+        self.push(TokKind::Num, text, line);
+    }
+
+    fn ident_or_prefixed(&mut self, line: usize) {
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            if c == '_' || c.is_alphanumeric() {
+                text.push(c);
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        // string/char prefixes: r"…", r#"…"#, b"…", br#"…"#, c"…", b'…'
+        let is_raw_prefix = matches!(text.as_str(), "r" | "br" | "cr");
+        let is_cooked_prefix = matches!(text.as_str(), "b" | "c");
+        match self.peek(0) {
+            Some('"') if is_raw_prefix => {
+                self.raw_string(line);
+                return;
+            }
+            Some('#') if is_raw_prefix && self.raw_hashes_then_quote() => {
+                self.raw_string(line);
+                return;
+            }
+            Some('"') if is_cooked_prefix => {
+                self.cooked_string(line);
+                return;
+            }
+            Some('\'') if text == "b" => {
+                self.char_or_lifetime(line);
+                return;
+            }
+            _ => {}
+        }
+        self.push(TokKind::Ident, text, line);
+    }
+
+    /// Looking at `#`: does a run of `#` end in `"` (raw-string open)?
+    fn raw_hashes_then_quote(&self) -> bool {
+        let mut k = 0;
+        while self.peek(k) == Some('#') {
+            k += 1;
+        }
+        self.peek(k) == Some('"')
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<TokKind> {
+        lex(src).into_iter().map(|t| t.kind).collect()
+    }
+
+    #[test]
+    fn idents_keywords_punct() {
+        let toks = lex("unsafe fn f() { x }");
+        assert!(toks[0].is_ident("unsafe"));
+        assert!(toks[1].is_ident("fn"));
+        assert!(toks[2].is_ident("f"));
+        assert!(toks[3].is_punct('('));
+        assert!(toks[5].is_punct('{'));
+    }
+
+    #[test]
+    fn strings_hide_their_contents_from_rules() {
+        let toks = lex(r#"let s = "unsafe { thread::spawn }";"#);
+        let strs: Vec<_> = toks.iter().filter(|t| t.kind == TokKind::Str).collect();
+        assert_eq!(strs.len(), 1);
+        assert!(!toks.iter().any(|t| t.is_ident("spawn")));
+    }
+
+    #[test]
+    fn raw_strings_and_hashes() {
+        let toks = lex(r##"let s = r#"a "quoted" b"#;"##);
+        let s = toks.iter().find(|t| t.kind == TokKind::Str).unwrap();
+        assert_eq!(s.text, r#"a "quoted" b"#);
+    }
+
+    #[test]
+    fn comments_carry_text_and_line() {
+        let toks = lex("let a = 1;\n// SAFETY: fine\nlet b = 2;");
+        let c = toks.iter().find(|t| matches!(t.kind, TokKind::Comment { .. })).unwrap();
+        assert_eq!(c.line, 2);
+        assert!(c.text.contains("SAFETY:"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let toks = lex("/* a /* b */ c */ x");
+        assert!(matches!(toks[0].kind, TokKind::Comment { .. }));
+        assert!(toks[1].is_ident("x"));
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let toks = lex("fn f<'a>(x: &'a u8) { let c = 'y'; let n = '\\n'; }");
+        assert_eq!(toks.iter().filter(|t| t.kind == TokKind::Lifetime).count(), 2);
+        assert_eq!(toks.iter().filter(|t| t.kind == TokKind::Char).count(), 2);
+    }
+
+    #[test]
+    fn ranges_do_not_merge_into_floats() {
+        let toks = lex("for i in 0..n {}");
+        assert!(toks.iter().any(|t| t.kind == TokKind::Num && t.text == "0"));
+        assert_eq!(toks.iter().filter(|t| t.is_punct('.')).count(), 2);
+    }
+
+    #[test]
+    fn exponent_literals_stay_single_tokens() {
+        let toks = lex("const C: f32 = 7.549_789e-8;");
+        let n = toks.iter().find(|t| t.kind == TokKind::Num).unwrap();
+        assert_eq!(n.text, "7.549_789e-8");
+    }
+
+    #[test]
+    fn line_numbers_advance_inside_strings_and_comments() {
+        let toks = lex("\"a\nb\"\n/* c\nd */\nx");
+        let x = toks.iter().find(|t| t.is_ident("x")).unwrap();
+        assert_eq!(x.line, 5);
+    }
+
+    #[test]
+    fn doc_comment_flag() {
+        let k = kinds("/// doc\n// plain");
+        assert_eq!(k[0], TokKind::Comment { doc: true });
+        assert_eq!(k[1], TokKind::Comment { doc: false });
+    }
+}

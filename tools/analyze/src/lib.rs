@@ -1,0 +1,23 @@
+//! `mckernel-analyze` — project-native invariant linter for the
+//! McKernel tree.
+//!
+//! Clippy checks Rust; this crate checks *McKernel*: the
+//! architectural invariants PRs 4–8 established by convention
+//! (single FWHT dispatch point, typed-error serving, `elapsed_ns`
+//! timing, pool-only threading, manifested metrics, SAFETY-commented
+//! unsafe). It is a zero-dependency workspace member so the tier-1
+//! gate can run it on a bare offline toolchain.
+//!
+//! Layout:
+//! * [`lexer`] — a small hand-rolled Rust lexer (idents, puncts,
+//!   strings incl. raw/byte, char-vs-lifetime, comments with text).
+//!   No `syn`: the rules only need token shapes and line geometry.
+//! * [`rules`] — the six rules, the waiver engine and the
+//!   `METRICS.md` cross-check. See [`rules::RULES`].
+//!
+//! The binary (`cargo run -p mckernel-analyze -- --deny-all`) wires
+//! these to the repo layout; integration tests drive
+//! [`rules::analyze_tree`] against committed fixtures.
+
+pub mod lexer;
+pub mod rules;

@@ -1,0 +1,140 @@
+//! CLI for the McKernel invariant linter.
+//!
+//! ```text
+//! cargo run -p mckernel-analyze -- --deny-all          # CI gate: exit 1 on any finding
+//! cargo run -p mckernel-analyze                        # warn mode: print, exit 0
+//! cargo run -p mckernel-analyze -- --rule timing-cast  # run one rule
+//! cargo run -p mckernel-analyze -- --list-rules
+//! ```
+//!
+//! With no `--root`, the repo root is found by walking up from the
+//! current directory to the first ancestor containing `rust/src`
+//! (so the tool works from the workspace root, `tools/analyze`, or
+//! anywhere inside the repo).
+
+use mckernel_analyze::rules::{analyze_tree, RULES};
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+struct Args {
+    root: Option<PathBuf>,
+    metrics: Option<PathBuf>,
+    rules: Vec<String>,
+    deny_all: bool,
+    quiet: bool,
+    list_rules: bool,
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut args = Args {
+        root: None,
+        metrics: None,
+        rules: Vec::new(),
+        deny_all: false,
+        quiet: false,
+        list_rules: false,
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--deny-all" => args.deny_all = true,
+            "--quiet" | "-q" => args.quiet = true,
+            "--list-rules" => args.list_rules = true,
+            "--root" => {
+                args.root = Some(PathBuf::from(
+                    it.next().ok_or("--root needs a path".to_string())?,
+                ))
+            }
+            "--metrics" => {
+                args.metrics = Some(PathBuf::from(
+                    it.next().ok_or("--metrics needs a path".to_string())?,
+                ))
+            }
+            "--rule" => {
+                let r = it.next().ok_or("--rule needs a rule id".to_string())?;
+                if !RULES.iter().any(|(id, _)| *id == r) {
+                    return Err(format!("unknown rule `{r}` (see --list-rules)"));
+                }
+                args.rules.push(r);
+            }
+            "--help" | "-h" => {
+                print!(
+                    "mckernel-analyze: project-native invariant linter\n\n\
+                     USAGE: mckernel-analyze [--deny-all] [--quiet] [--list-rules]\n\
+                            [--root <repo-root>] [--metrics <METRICS.md>] [--rule <id>]...\n\n\
+                     Exit code is 1 when --deny-all is set and findings exist, else 0.\n"
+                );
+                std::process::exit(0);
+            }
+            other => return Err(format!("unknown argument `{other}`")),
+        }
+    }
+    Ok(args)
+}
+
+/// Walk up from cwd to the first directory containing `rust/src`.
+fn find_repo_root() -> Option<PathBuf> {
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        if dir.join("rust/src").is_dir() {
+            return Some(dir);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+fn main() -> ExitCode {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    if args.list_rules {
+        for (id, desc) in RULES {
+            println!("{id:<22} {desc}");
+        }
+        return ExitCode::SUCCESS;
+    }
+
+    let root = match args.root.or_else(find_repo_root) {
+        Some(r) => r,
+        None => {
+            eprintln!("error: could not locate repo root (no rust/src above cwd); pass --root");
+            return ExitCode::from(2);
+        }
+    };
+    let src_root = root.join("rust/src");
+    let metrics = args.metrics.unwrap_or_else(|| root.join("METRICS.md"));
+
+    let report = analyze_tree(&src_root, &metrics, &args.rules);
+
+    if !args.quiet {
+        for f in &report.findings {
+            // source findings carry src-root-relative paths; prefix
+            // them so the output is repo-relative and clickable.
+            // Manifest-side findings already carry the manifest path.
+            if f.file.ends_with(".rs") {
+                println!("rust/src/{f}");
+            } else {
+                println!("{f}");
+            }
+        }
+    }
+    eprintln!(
+        "mckernel-analyze: {} files, {} finding(s), {} waived",
+        report.files,
+        report.findings.len(),
+        report.waived
+    );
+
+    if args.deny_all && !report.findings.is_empty() {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}

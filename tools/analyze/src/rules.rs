@@ -1,0 +1,655 @@
+//! The six McKernel invariant rules.
+//!
+//! Each rule is a project convention that clippy cannot express
+//! because it is about *this* codebase's architecture, not Rust in
+//! general:
+//!
+//! | rule | invariant |
+//! |------|-----------|
+//! | `safety-comment` | every `unsafe` block / fn / impl is directly preceded by a `// SAFETY:` comment (or a `/// # Safety` doc section) |
+//! | `timing-cast` | no `as_nanos()` / `as_micros()` duration narrowing outside `obs/` — the PR 8 `obs::elapsed_ns` contract |
+//! | `thread-spawn` | thread creation (`thread::spawn`, `thread::Builder`) only in `util/threadpool.rs` and the coordinator seams |
+//! | `dispatch-confinement` | `FwhtDispatch` is named only by `mckernel/plan.rs` (decision), `mckernel/engine.rs` + `mckernel/cache.rs` (consumption) and the `mckernel/mod.rs` re-export — the PR 4 single-decision-point invariant |
+//! | `metric-manifest` | every metric-name literal passed to `counter`/`gauge`/`histogram`/`counter_value` appears in `METRICS.md`, and vice versa |
+//! | `no-panic-serving` | no `.unwrap()` / `.expect()` / `panic!` on the `McError`-typed serving & training paths |
+//!
+//! Violations can be waived — visibly — with a comment directly above
+//! the site (or a run of comments ending there):
+//!
+//! ```text
+//! // analyze: allow(<rule-id>) -- <reason>
+//! ```
+//!
+//! A waiver without a ` -- reason` is itself a violation, and so is a
+//! waiver that suppresses nothing (stale waivers must be deleted), so
+//! every exception in the tree stays explained and greppable.
+//!
+//! Scope: the linter walks `rust/src/**` — production code. Test
+//! modules (`#[cfg(test)]` / `#[test]` items) are skipped by every
+//! rule except `safety-comment` and `timing-cast`, which hold
+//! everywhere.
+
+use crate::lexer::{lex, Tok, TokKind};
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Rule ids with one-line descriptions (`--list-rules`).
+pub const RULES: &[(&str, &str)] = &[
+    ("safety-comment", "unsafe block/fn/impl must be preceded by // SAFETY: (or /// # Safety)"),
+    ("timing-cast", "no as_nanos()/as_micros() outside obs/ (use obs::elapsed_ns)"),
+    ("thread-spawn", "thread creation only in util/threadpool.rs and coordinator seams"),
+    ("dispatch-confinement", "FwhtDispatch named only by plan.rs, engine.rs, cache.rs, mod.rs"),
+    ("metric-manifest", "metric-name literals must match METRICS.md exactly, both ways"),
+    ("no-panic-serving", "no unwrap/expect/panic! on McError-typed serving/training paths"),
+];
+
+/// Synthetic rule id for waiver-hygiene findings (missing reason,
+/// unused waiver, unknown rule id). Not waivable.
+pub const WAIVER_RULE: &str = "waiver";
+
+/// Files (relative to the source root, `/`-separated) allowed to
+/// create threads: the pool itself plus the two coordinator seams
+/// that own long-lived named service threads.
+const THREAD_SPAWN_ALLOWED: &[&str] =
+    &["util/threadpool.rs", "coordinator/pipeline.rs", "coordinator/server.rs"];
+
+/// Files allowed to name `FwhtDispatch`: the plan (single decision
+/// point), the engine and the cache key (pure consumers of a decided
+/// plan), and the module re-export.
+const DISPATCH_ALLOWED: &[&str] =
+    &["mckernel/plan.rs", "mckernel/engine.rs", "mckernel/cache.rs", "mckernel/mod.rs"];
+
+/// The `McError`-typed serving/training public paths: panics here
+/// would break the PR 7 typed-error contract (every failure surfaces
+/// as a `fault::McError`, never an abort of the serving thread).
+const NO_PANIC_PATHS: &[&str] = &[
+    "coordinator/server.rs",
+    "coordinator/pipeline.rs",
+    "train/trainer.rs",
+    "train/featurizer.rs",
+];
+
+/// Registry methods whose first string-literal argument is a metric
+/// name (covers direct literals and `format!("…")` templates).
+const METRIC_SINKS: &[&str] = &["counter", "gauge", "histogram", "counter_value"];
+
+/// One reported violation.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: String,
+    /// Path relative to the scanned root (or the manifest path for
+    /// manifest-side `metric-manifest` findings).
+    pub file: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Outcome of a tree scan.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    /// Violations suppressed by an explained waiver.
+    pub waived: usize,
+    /// `.rs` files scanned.
+    pub files: usize,
+}
+
+/// A `// analyze: allow(rule) -- reason` comment.
+struct Waiver {
+    line: usize,
+    rule: String,
+    reason: bool,
+    used: bool,
+}
+
+/// Per-file scan state handed to each rule.
+struct FileCtx<'a> {
+    rel: String,
+    toks: Vec<Tok>,
+    lines: Vec<&'a str>,
+    /// Token-index ranges covering `#[cfg(test)]` / `#[test]` items.
+    test_ranges: Vec<(usize, usize)>,
+    waivers: Vec<Waiver>,
+}
+
+impl FileCtx<'_> {
+    fn in_test(&self, tok_idx: usize) -> bool {
+        self.test_ranges.iter().any(|&(a, b)| tok_idx >= a && tok_idx <= b)
+    }
+
+    /// Trimmed source line (1-based), empty for out-of-range.
+    fn line(&self, n: usize) -> &str {
+        if n == 0 || n > self.lines.len() {
+            ""
+        } else {
+            self.lines[n - 1].trim_start()
+        }
+    }
+
+    /// Lines whose comments may cover a violation at `line`: the line
+    /// itself plus the contiguous comment/attribute run directly
+    /// above it.
+    fn cover_lines(&self, line: usize) -> Vec<usize> {
+        let mut cover = vec![line];
+        let mut ln = line.saturating_sub(1);
+        while ln >= 1 {
+            let t = self.line(ln);
+            if t.starts_with("//") || t.starts_with("#[") || t.starts_with("#![") {
+                cover.push(ln);
+                ln -= 1;
+            } else {
+                break;
+            }
+        }
+        cover
+    }
+}
+
+/// Scan every `.rs` file under `src_root` and cross-check metric
+/// names against `metrics_path`. `rule_filter`, when non-empty,
+/// restricts which rules run (waiver hygiene always runs).
+pub fn analyze_tree(src_root: &Path, metrics_path: &Path, rule_filter: &[String]) -> Report {
+    let mut report = Report::default();
+    let mut files = Vec::new();
+    collect_rs_files(src_root, &mut files);
+    files.sort();
+
+    let enabled = |rule: &str| rule_filter.is_empty() || rule_filter.iter().any(|r| r == rule);
+
+    // metric name -> first (file, line) that records it
+    let mut metric_uses: BTreeMap<String, (String, usize)> = BTreeMap::new();
+
+    for path in &files {
+        let Ok(src) = fs::read_to_string(path) else { continue };
+        report.files += 1;
+        let rel = rel_path(src_root, path);
+        let toks = lex(&src);
+        let test_ranges = test_ranges(&toks);
+        let waivers = collect_waivers(&toks);
+        let mut ctx = FileCtx {
+            rel,
+            toks,
+            lines: src.lines().collect(),
+            test_ranges,
+            waivers,
+        };
+
+        let mut raw: Vec<Finding> = Vec::new();
+        if enabled("safety-comment") {
+            rule_safety_comment(&ctx, &mut raw);
+        }
+        if enabled("timing-cast") {
+            rule_timing_cast(&ctx, &mut raw);
+        }
+        if enabled("thread-spawn") {
+            rule_thread_spawn(&ctx, &mut raw);
+        }
+        if enabled("dispatch-confinement") {
+            rule_dispatch_confinement(&ctx, &mut raw);
+        }
+        if enabled("no-panic-serving") {
+            rule_no_panic_serving(&ctx, &mut raw);
+        }
+        if enabled("metric-manifest") {
+            collect_metric_uses(&ctx, &mut metric_uses, &mut raw);
+        }
+
+        apply_waivers(&mut ctx, raw, &mut report);
+    }
+
+    if enabled("metric-manifest") {
+        cross_check_manifest(metrics_path, &metric_uses, &mut report);
+    }
+
+    report.findings.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    report
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs_files(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+fn rel_path(root: &Path, path: &Path) -> String {
+    path.strip_prefix(root)
+        .unwrap_or(path)
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+/// Token-index ranges of `#[cfg(test)]` / `#[test]` items: from the
+/// attribute to the matching close brace of the item it gates.
+fn test_ranges(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut ranges = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if toks[i].is_punct('#') && i + 1 < toks.len() && toks[i + 1].is_punct('[') {
+            // span the attribute to its matching `]`
+            let mut depth = 0usize;
+            let mut j = i + 1;
+            let mut is_test_attr = false;
+            while j < toks.len() {
+                if toks[j].is_punct('[') {
+                    depth += 1;
+                } else if toks[j].is_punct(']') {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                } else if toks[j].is_ident("test") {
+                    // `#[test]` or `#[cfg(test)]` / `#[cfg(all(test, …))]`
+                    is_test_attr = true;
+                }
+                j += 1;
+            }
+            if is_test_attr {
+                // find the gated item's block: first `{` after the
+                // attribute, then its matching `}`
+                let mut k = j + 1;
+                let mut brace = 0usize;
+                let mut end = None;
+                while k < toks.len() {
+                    if toks[k].is_punct('{') {
+                        brace += 1;
+                    } else if toks[k].is_punct('}') {
+                        brace -= 1;
+                        if brace == 0 {
+                            end = Some(k);
+                            break;
+                        }
+                    } else if brace == 0 && toks[k].is_punct(';') {
+                        // item without a block (`#[cfg(test)] use …;`)
+                        end = Some(k);
+                        break;
+                    }
+                    k += 1;
+                }
+                let end = end.unwrap_or(toks.len() - 1);
+                ranges.push((i, end));
+                i = end + 1;
+                continue;
+            }
+            i = j + 1;
+            continue;
+        }
+        i += 1;
+    }
+    ranges
+}
+
+fn collect_waivers(toks: &[Tok]) -> Vec<Waiver> {
+    let mut out = Vec::new();
+    for t in toks {
+        let TokKind::Comment { .. } = t.kind else { continue };
+        let Some(pos) = t.text.find("analyze: allow(") else { continue };
+        let rest = &t.text[pos + "analyze: allow(".len()..];
+        let Some(close) = rest.find(')') else { continue };
+        let rule = rest[..close].trim().to_string();
+        let reason = rest[close + 1..]
+            .trim_start()
+            .strip_prefix("--")
+            .is_some_and(|r| !r.trim().is_empty());
+        out.push(Waiver { line: t.line, rule, reason, used: false });
+    }
+    out
+}
+
+/// Match raw findings against the file's waivers: explained waivers
+/// suppress (counted), unexplained ones convert the finding into a
+/// waiver-hygiene finding, unused waivers are reported at the end.
+fn apply_waivers(ctx: &mut FileCtx, raw: Vec<Finding>, report: &mut Report) {
+    for f in raw {
+        let cover = ctx.cover_lines(f.line);
+        let matched =
+            ctx.waivers.iter().position(|w| w.rule == f.rule && cover.contains(&w.line));
+        match matched {
+            Some(wi) => {
+                ctx.waivers[wi].used = true;
+                if ctx.waivers[wi].reason {
+                    report.waived += 1;
+                } else {
+                    report.findings.push(Finding {
+                        rule: WAIVER_RULE.into(),
+                        file: f.file,
+                        line: ctx.waivers[wi].line,
+                        msg: format!(
+                            "waiver for `{}` has no `-- reason`; every exception must be explained",
+                            f.rule
+                        ),
+                    });
+                }
+            }
+            None => report.findings.push(f),
+        }
+    }
+    for w in &ctx.waivers {
+        if !RULES.iter().any(|(id, _)| *id == w.rule) {
+            report.findings.push(Finding {
+                rule: WAIVER_RULE.into(),
+                file: ctx.rel.clone(),
+                line: w.line,
+                msg: format!("waiver names unknown rule `{}`", w.rule),
+            });
+        } else if !w.used {
+            report.findings.push(Finding {
+                rule: WAIVER_RULE.into(),
+                file: ctx.rel.clone(),
+                line: w.line,
+                msg: format!("waiver for `{}` suppresses nothing; delete the stale waiver", w.rule),
+            });
+        }
+    }
+}
+
+/// rule: safety-comment — applies everywhere, tests included: unsafe
+/// is unsafe regardless of cfg.
+fn rule_safety_comment(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    for (i, t) in ctx.toks.iter().enumerate() {
+        if !t.is_ident("unsafe") {
+            continue;
+        }
+        // classify the site from the next code token
+        let form = ctx.toks[i + 1..]
+            .iter()
+            .find(|t| !matches!(t.kind, TokKind::Comment { .. }))
+            .map(|t| match (&t.kind, t.text.as_str()) {
+                (TokKind::Punct('{'), _) => "block",
+                (TokKind::Ident, "fn") => "fn",
+                (TokKind::Ident, "impl") => "impl",
+                (TokKind::Ident, "extern") => "extern block",
+                _ => "site",
+            })
+            .unwrap_or("site");
+        if has_safety_run(ctx, t.line) {
+            continue;
+        }
+        out.push(Finding {
+            rule: "safety-comment".into(),
+            file: ctx.rel.clone(),
+            line: t.line,
+            msg: format!(
+                "`unsafe` {form} without a `// SAFETY:` comment directly above \
+                 (state the precondition this site relies on)"
+            ),
+        });
+    }
+}
+
+/// Is there a `SAFETY:` / `# Safety` marker on `line` or in the
+/// comment/attribute run directly above it?
+fn has_safety_run(ctx: &FileCtx, line: usize) -> bool {
+    let marker = |t: &str| t.contains("SAFETY:") || t.contains("# Safety");
+    if marker(ctx.line(line)) {
+        return true;
+    }
+    let mut ln = line.saturating_sub(1);
+    while ln >= 1 {
+        let t = ctx.line(ln);
+        if t.starts_with("//") {
+            if marker(t) {
+                return true;
+            }
+        } else if !(t.starts_with("#[") || t.starts_with("#![")) {
+            return false;
+        }
+        ln -= 1;
+    }
+    false
+}
+
+/// rule: timing-cast — applies everywhere, tests included: the
+/// elapsed_ns contract has no test exemption (tests record through
+/// the same registry).
+fn rule_timing_cast(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    if ctx.rel.starts_with("obs/") {
+        return;
+    }
+    for t in &ctx.toks {
+        if t.kind == TokKind::Ident && (t.text == "as_nanos" || t.text == "as_micros") {
+            out.push(Finding {
+                rule: "timing-cast".into(),
+                file: ctx.rel.clone(),
+                line: t.line,
+                msg: format!(
+                    "raw `{}()` narrowing outside obs/ — route nanosecond casts \
+                     through `obs::elapsed_ns` (PR 8 timing contract)",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
+/// rule: thread-spawn — skips test modules (stress tests may spawn
+/// raw competitor threads on purpose).
+fn rule_thread_spawn(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    if THREAD_SPAWN_ALLOWED.contains(&ctx.rel.as_str()) {
+        return;
+    }
+    for i in 0..ctx.toks.len().saturating_sub(3) {
+        if ctx.toks[i].is_ident("thread")
+            && ctx.toks[i + 1].is_punct(':')
+            && ctx.toks[i + 2].is_punct(':')
+            && (ctx.toks[i + 3].is_ident("spawn") || ctx.toks[i + 3].is_ident("Builder"))
+            && !ctx.in_test(i)
+        {
+            out.push(Finding {
+                rule: "thread-spawn".into(),
+                file: ctx.rel.clone(),
+                line: ctx.toks[i].line,
+                msg: format!(
+                    "`thread::{}` outside util/threadpool.rs and the coordinator \
+                     seams — run work on the pool (or waive a deliberate seam)",
+                    ctx.toks[i + 3].text
+                ),
+            });
+        }
+    }
+}
+
+/// rule: dispatch-confinement — skips test modules (plan tests pin
+/// dispatch arms; they live in plan.rs anyway).
+fn rule_dispatch_confinement(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    if DISPATCH_ALLOWED.contains(&ctx.rel.as_str()) {
+        return;
+    }
+    for (i, t) in ctx.toks.iter().enumerate() {
+        if t.is_ident("FwhtDispatch") && !ctx.in_test(i) {
+            out.push(Finding {
+                rule: "dispatch-confinement".into(),
+                file: ctx.rel.clone(),
+                line: t.line,
+                msg: "`FwhtDispatch` named outside the plan/engine/cache seam — \
+                      the batch-vs-per-row-vs-SIMD decision lives in plan.rs only \
+                      (PR 4 single-decision-point invariant)"
+                    .into(),
+            });
+        }
+    }
+}
+
+/// rule: no-panic-serving — only on the typed-error paths, skipping
+/// test modules.
+fn rule_no_panic_serving(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    if !NO_PANIC_PATHS.contains(&ctx.rel.as_str()) {
+        return;
+    }
+    for (i, t) in ctx.toks.iter().enumerate() {
+        if ctx.in_test(i) || t.kind != TokKind::Ident {
+            continue;
+        }
+        let prev_dot = i > 0 && ctx.toks[i - 1].is_punct('.');
+        let next_bang = ctx.toks.get(i + 1).is_some_and(|n| n.is_punct('!'));
+        let hit = match t.text.as_str() {
+            "unwrap" | "expect" => prev_dot,
+            "panic" | "todo" | "unimplemented" => next_bang,
+            _ => false,
+        };
+        if hit {
+            out.push(Finding {
+                rule: "no-panic-serving".into(),
+                file: ctx.rel.clone(),
+                line: t.line,
+                msg: format!(
+                    "`{}` on a typed-error serving/training path — return a \
+                     `fault::McError` instead (PR 7 contract)",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
+/// Collect metric-name literals flowing into registry sinks. Skips
+/// test modules (registry unit tests use throwaway names) and method
+/// *definitions* (`fn counter(…)`).
+fn collect_metric_uses(
+    ctx: &FileCtx,
+    uses: &mut BTreeMap<String, (String, usize)>,
+    _out: &mut [Finding],
+) {
+    for (i, t) in ctx.toks.iter().enumerate() {
+        if t.kind != TokKind::Ident || !METRIC_SINKS.contains(&t.text.as_str()) {
+            continue;
+        }
+        if ctx.in_test(i) {
+            continue;
+        }
+        // skip definitions: `fn counter(` / `pub fn gauge(`
+        let prev_code = ctx.toks[..i]
+            .iter()
+            .rev()
+            .find(|t| !matches!(t.kind, TokKind::Comment { .. }));
+        if prev_code.is_some_and(|p| p.is_ident("fn")) {
+            continue;
+        }
+        let Some(open) = ctx.toks.get(i + 1) else { continue };
+        if !open.is_punct('(') {
+            continue;
+        }
+        // first string literal inside the call parens (handles both
+        // `counter("name")` and `counter(&format!("name.{k}"))`)
+        let mut depth = 1usize;
+        let mut j = i + 2;
+        while j < ctx.toks.len() && depth > 0 {
+            match &ctx.toks[j].kind {
+                TokKind::Punct('(') => depth += 1,
+                TokKind::Punct(')') => depth -= 1,
+                TokKind::Str => {
+                    let name = normalize_metric(&ctx.toks[j].text);
+                    if name.contains('.') || name.contains("<>") {
+                        uses.entry(name).or_insert((ctx.rel.clone(), ctx.toks[j].line));
+                    }
+                    break;
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+    }
+}
+
+/// Normalize a metric name for comparison: every `{…}` (format
+/// capture) or `<…>` (manifest placeholder) segment becomes `<>`.
+pub fn normalize_metric(name: &str) -> String {
+    let chars: Vec<char> = name.chars().collect();
+    let mut out = String::new();
+    let mut i = 0;
+    while i < chars.len() {
+        match chars[i] {
+            '{' => {
+                while i < chars.len() && chars[i] != '}' {
+                    i += 1;
+                }
+                i += 1; // past the closer (or end)
+                out.push_str("<>");
+            }
+            '<' => {
+                while i < chars.len() && chars[i] != '>' {
+                    i += 1;
+                }
+                i += 1;
+                out.push_str("<>");
+            }
+            c => {
+                out.push(c);
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Both directions of the manifest check: every recorded name is
+/// manifested, every manifested name is recorded.
+fn cross_check_manifest(
+    metrics_path: &Path,
+    uses: &BTreeMap<String, (String, usize)>,
+    report: &mut Report,
+) {
+    let manifest_file = metrics_path.to_string_lossy().into_owned();
+    let Ok(text) = fs::read_to_string(metrics_path) else {
+        report.findings.push(Finding {
+            rule: "metric-manifest".into(),
+            file: manifest_file,
+            line: 0,
+            msg: "METRICS.md manifest not found — every metric name must be checked in".into(),
+        });
+        return;
+    };
+    // manifest entries: backtick-quoted metric names (must contain a
+    // `.` — prose code spans without dots are ignored)
+    let mut manifest: BTreeMap<String, usize> = BTreeMap::new();
+    for (ln, line) in text.lines().enumerate() {
+        let mut rest = line;
+        while let Some(a) = rest.find('`') {
+            let after = &rest[a + 1..];
+            let Some(b) = after.find('`') else { break };
+            let span = &after[..b];
+            if !span.is_empty()
+                && span.contains('.')
+                && span
+                    .chars()
+                    .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || "._<>".contains(c))
+            {
+                manifest.entry(normalize_metric(span)).or_insert(ln + 1);
+            }
+            rest = &after[b + 1..];
+        }
+    }
+    let manifested: BTreeSet<&String> = manifest.keys().collect();
+    let used: BTreeSet<&String> = uses.keys().collect();
+    for name in used.difference(&manifested) {
+        let (file, line) = &uses[*name];
+        report.findings.push(Finding {
+            rule: "metric-manifest".into(),
+            file: file.clone(),
+            line: *line,
+            msg: format!("metric `{name}` is recorded but missing from METRICS.md"),
+        });
+    }
+    for name in manifested.difference(&used) {
+        report.findings.push(Finding {
+            rule: "metric-manifest".into(),
+            file: manifest_file.clone(),
+            line: manifest[*name],
+            msg: format!("metric `{name}` is manifested but never recorded in rust/src"),
+        });
+    }
+}

@@ -1,0 +1,147 @@
+//! Self-tests for the invariant linter: run the rule engine against
+//! committed good/bad fixture trees so a rule regression fails tier-1.
+//!
+//! The fixtures are miniature `rust/src` layouts (the rules' path
+//! policies key off relative paths like `coordinator/server.rs`), one
+//! clean tree and one that trips every rule at least once.
+
+use mckernel_analyze::rules::{analyze_tree, normalize_metric, Report, RULES};
+use std::path::PathBuf;
+
+fn fixture(tree: &str) -> (PathBuf, PathBuf) {
+    let base = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(tree);
+    (base.join("src"), base.join("METRICS.md"))
+}
+
+fn run(tree: &str) -> Report {
+    let (src, metrics) = fixture(tree);
+    analyze_tree(&src, &metrics, &[])
+}
+
+fn count(report: &Report, rule: &str) -> usize {
+    report.findings.iter().filter(|f| f.rule == rule).count()
+}
+
+#[test]
+fn good_tree_is_clean() {
+    let report = run("good");
+    assert!(
+        report.findings.is_empty(),
+        "good tree must produce zero findings, got:\n{}",
+        report.findings.iter().map(|f| format!("  {f}\n")).collect::<String>()
+    );
+    assert!(report.files >= 6, "good tree should scan all fixture files");
+}
+
+#[test]
+fn explained_waiver_suppresses_and_is_counted() {
+    // good/coordinator/server.rs waives its startup `.expect` with a
+    // reasoned waiver: suppressed, but visible in the waived count.
+    let report = run("good");
+    assert_eq!(report.waived, 1);
+}
+
+/// Each of the six rules has at least one bad fixture proving it
+/// fires (acceptance criterion).
+#[test]
+fn every_rule_fires_on_bad_tree() {
+    let report = run("bad");
+    for (rule, _) in RULES {
+        assert!(
+            count(&report, rule) >= 1,
+            "rule `{rule}` produced no finding on the bad tree:\n{}",
+            report.findings.iter().map(|f| format!("  {f}\n")).collect::<String>()
+        );
+    }
+}
+
+#[test]
+fn safety_comment_counts_blocks_and_fns() {
+    // naked block, naked unsafe fn, naked interior block
+    let report = run("bad");
+    assert_eq!(count(&report, "safety-comment"), 3);
+    assert!(report
+        .findings
+        .iter()
+        .any(|f| f.rule == "safety-comment" && f.file == "safety.rs"));
+}
+
+#[test]
+fn timing_cast_sees_nanos_and_micros() {
+    let report = run("bad");
+    let timing: Vec<_> =
+        report.findings.iter().filter(|f| f.rule == "timing-cast").collect();
+    // both casts in timing.rs; the one in waivers.rs is consumed by
+    // its (reasonless) waiver and resurfaces as a `waiver` finding.
+    assert_eq!(timing.len(), 2);
+    assert!(timing.iter().all(|f| f.file == "timing.rs"));
+}
+
+#[test]
+fn thread_spawn_exempts_test_regions() {
+    // spawn.rs has one production spawn and one inside #[cfg(test)].
+    let report = run("bad");
+    assert_eq!(count(&report, "thread-spawn"), 1);
+}
+
+#[test]
+fn no_panic_serving_sees_panic_unwrap_expect() {
+    let report = run("bad");
+    assert_eq!(count(&report, "no-panic-serving"), 3);
+}
+
+#[test]
+fn metric_manifest_fires_both_directions() {
+    let report = run("bad");
+    let findings: Vec<_> =
+        report.findings.iter().filter(|f| f.rule == "metric-manifest").collect();
+    assert_eq!(findings.len(), 2);
+    assert!(findings.iter().any(|f| f.msg.contains("bad.unmanifested")), "code-side");
+    assert!(findings.iter().any(|f| f.msg.contains("bad.stale")), "manifest-side");
+}
+
+#[test]
+fn waiver_hygiene_fires_three_ways() {
+    // no `-- reason`, stale (suppresses nothing), unknown rule id.
+    let report = run("bad");
+    let waiver: Vec<_> = report.findings.iter().filter(|f| f.rule == "waiver").collect();
+    assert_eq!(waiver.len(), 3);
+    assert!(waiver.iter().any(|f| f.msg.contains("no `-- reason`")));
+    assert!(waiver.iter().any(|f| f.msg.contains("suppresses nothing")));
+    assert!(waiver.iter().any(|f| f.msg.contains("unknown rule")));
+}
+
+#[test]
+fn rule_filter_restricts_scope() {
+    let (src, metrics) = fixture("bad");
+    let report = analyze_tree(&src, &metrics, &["dispatch-confinement".to_string()]);
+    assert!(report.findings.iter().all(|f| f.rule == "dispatch-confinement" || f.rule == "waiver"));
+    assert_eq!(count(&report, "dispatch-confinement"), 2);
+}
+
+#[test]
+fn metric_normalization_matches_format_and_manifest_styles() {
+    assert_eq!(normalize_metric("engine.{fp}.rows"), "engine.<>.rows");
+    assert_eq!(normalize_metric("engine.<fp>.rows"), "engine.<>.rows");
+    assert_eq!(normalize_metric("span.{name}_ns"), "span.<>_ns");
+    assert_eq!(normalize_metric("cache.hits"), "cache.hits");
+}
+
+/// The linter must hold on the real tree: zero findings, every waiver
+/// explained. This is the same gate CI runs via `--deny-all`, kept as
+/// a test so `cargo test` alone catches drift.
+#[test]
+fn real_tree_is_clean() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let src = root.join("rust/src");
+    let metrics = root.join("METRICS.md");
+    if !src.is_dir() {
+        return; // vendored/packaged checkout without the main crate
+    }
+    let report = analyze_tree(&src, &metrics, &[]);
+    assert!(
+        report.findings.is_empty(),
+        "real tree has findings:\n{}",
+        report.findings.iter().map(|f| format!("  {f}\n")).collect::<String>()
+    );
+}

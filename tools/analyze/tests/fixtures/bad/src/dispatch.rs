@@ -1,0 +1,6 @@
+//! Fixture: naming `FwhtDispatch` outside the plan/engine/cache seam
+//! must fire.
+
+pub fn leak(d: crate::mckernel::plan::FwhtDispatch) -> bool {
+    matches!(d, crate::mckernel::plan::FwhtDispatch::PerRow)
+}

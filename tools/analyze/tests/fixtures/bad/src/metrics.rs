@@ -1,0 +1,11 @@
+//! Fixture: a recorded-but-unmanifested metric must fire (and the
+//! manifest's stale `bad.stale` entry fires from the other side).
+
+pub fn record(reg: &Registry) {
+    reg.counter("bad.unmanifested");
+}
+
+pub struct Registry;
+impl Registry {
+    pub fn counter(&self, _name: &str) {}
+}

@@ -1,0 +1,9 @@
+//! Fixture: unsafe without a SAFETY comment must fire.
+
+pub fn naked(p: *const u32) -> u32 {
+    unsafe { *p }
+}
+
+pub unsafe fn naked_fn(p: *const u32) -> u32 {
+    unsafe { *p }
+}

@@ -1,0 +1,14 @@
+//! Fixture: raw thread creation outside the pool must fire.
+
+pub fn rogue() {
+    std::thread::spawn(|| {}).join().ok();
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn stress_threads_are_fine() {
+        // test regions are exempt: stress tests spawn competitors.
+        std::thread::spawn(|| {}).join().ok();
+    }
+}

@@ -1,0 +1,13 @@
+//! Fixture: raw duration narrowing outside obs/ must fire.
+
+use std::time::Instant;
+
+pub fn measure() -> u64 {
+    let t0 = Instant::now();
+    t0.elapsed().as_nanos() as u64
+}
+
+pub fn measure_us() -> u64 {
+    let t0 = Instant::now();
+    t0.elapsed().as_micros() as u64
+}

@@ -1,0 +1,12 @@
+//! Fixture: panics on a typed-error training path must fire.
+
+pub fn step(x: Option<u32>) -> u32 {
+    if x.is_none() {
+        panic!("empty batch");
+    }
+    x.unwrap()
+}
+
+pub fn step2(x: Option<u32>) -> u32 {
+    x.expect("empty batch")
+}

@@ -1,0 +1,16 @@
+//! Fixture: waiver hygiene — a waiver with no reason, a stale waiver
+//! suppressing nothing, and a waiver naming an unknown rule all fire.
+
+use std::time::Instant;
+
+pub fn no_reason() -> u64 {
+    let t0 = Instant::now();
+    // analyze: allow(timing-cast)
+    t0.elapsed().as_nanos() as u64
+}
+
+// analyze: allow(thread-spawn) -- stale: the spawn below was removed
+pub fn stale() {}
+
+// analyze: allow(bogus-rule) -- no such rule id
+pub fn unknown() {}

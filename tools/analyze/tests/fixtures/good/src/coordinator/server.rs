@@ -1,0 +1,9 @@
+//! Fixture: a coordinator seam — may build service threads, and may
+//! carry an *explained* waiver for a startup expect.
+
+pub fn serve(reg: &crate::obs::Registry) {
+    let _ = reg.counter("server.requests");
+    let builder = std::thread::Builder::new().name("serve".into());
+    // analyze: allow(no-panic-serving) -- startup spawn failure is fatal by design
+    builder.spawn(|| {}).expect("spawn server thread");
+}

@@ -1,0 +1,13 @@
+//! Fixture: the engine may *consume* a decided `FwhtDispatch`, and
+//! records metrics through format! templates that the manifest lists
+//! with `<fp>` placeholders.
+
+use super::plan::FwhtDispatch;
+
+pub fn run(d: &FwhtDispatch, fp: &str, reg: &crate::obs::Registry) {
+    let _ = reg.counter(&format!("engine.{fp}.rows"));
+    match d {
+        FwhtDispatch::PerRow => {}
+        FwhtDispatch::Tiled { .. } => {}
+    }
+}

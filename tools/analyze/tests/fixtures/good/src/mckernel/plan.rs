@@ -1,0 +1,14 @@
+//! Fixture: plan.rs is the single decision point for `FwhtDispatch`.
+
+pub enum FwhtDispatch {
+    PerRow,
+    Tiled { lanes: usize },
+}
+
+pub fn decide(rows: usize) -> FwhtDispatch {
+    if rows == 1 {
+        FwhtDispatch::PerRow
+    } else {
+        FwhtDispatch::Tiled { lanes: rows }
+    }
+}

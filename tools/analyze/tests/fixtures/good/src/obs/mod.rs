@@ -1,0 +1,18 @@
+//! Fixture: the obs module owns duration narrowing, so `as_nanos`
+//! here is legal (timing-cast rule exempts `obs/`).
+
+use std::time::Instant;
+
+pub fn elapsed_ns(t0: Instant) -> u64 {
+    u64::try_from(t0.elapsed().as_nanos()).unwrap_or(u64::MAX)
+}
+
+pub struct Registry;
+
+impl Registry {
+    // A *definition* named `counter` must not be mistaken for a
+    // metric-recording call site.
+    pub fn counter(&self, _name: &str) -> u64 {
+        0
+    }
+}

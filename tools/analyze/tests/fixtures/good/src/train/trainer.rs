@@ -1,0 +1,20 @@
+//! Fixture: a typed-error training path with clean error handling;
+//! the `#[cfg(test)]` module below may unwrap/panic freely because
+//! most rules skip test regions.
+
+pub fn step(x: Option<u32>) -> Result<u32, String> {
+    x.ok_or_else(|| "empty batch".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unwrap_is_fine_in_tests() {
+        assert_eq!(step(Some(3)).unwrap(), 3);
+        if step(None).is_ok() {
+            panic!("expected error");
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! Fixture: the pool is the one place allowed to create threads, and
+//! its unsafe sites carry SAFETY comments.
+
+pub fn start(n: usize) {
+    for _ in 0..n {
+        std::thread::spawn(|| {});
+    }
+    // SAFETY: the pointer is derived from a live slice above and the
+    // scope joins every worker before the slice's borrow ends.
+    unsafe {
+        erased();
+    }
+}
+
+/// # Safety
+/// Caller must ensure the erased lifetime outlives the scope.
+pub unsafe fn erased() {}
